@@ -1,0 +1,71 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Scale presets: the container is a single CPU core, so 'quick' uses a GPT-nano
+(2L x 64d) on short synthetic streams — the paper's *qualitative* claims (SNR
+orderings, LR/init/vocab effects, optimizer gaps) reproduce at this scale
+(App. H shows rule transfer across widths); 'full' matches the paper's
+GPT-small recipe and is what one would run on real hardware.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import DataConfig, ZipfLM
+from repro.models import LayerSlot, ModelConfig
+from repro.train import Trainer, TrainerConfig
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def gpt_nano(vocab: int = 128, width: int = 64, layers: int = 2, heads: int = 4) -> ModelConfig:
+    return ModelConfig(
+        name=f"gpt_nano_w{width}", n_layers=layers, d_model=width,
+        n_heads=heads, n_kv_heads=heads, d_ff=4 * width, vocab_size=vocab,
+        gated_mlp=False, pattern=(LayerSlot("attn", "dense"),),
+        pos="learned", max_position=128, norm="layernorm",
+        tie_embeddings=True, init_scheme="mitchell",
+        dtype=jnp.float32, remat=False,
+    )
+
+
+def nano_data(cfg: ModelConfig, *, seq: int = 32, batch: int = 8, alpha: float = 1.2,
+              seed: int = 0) -> ZipfLM:
+    return ZipfLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+                             alpha=alpha, seed=seed))
+
+
+def train_once(cfg, optimizer: str, lr: float, *, steps: int, data: Optional[ZipfLM] = None,
+               measure_snr: bool = False, rules=None, seed: int = 0,
+               snr_every: int = 20) -> Trainer:
+    data = data or nano_data(cfg, seed=seed)
+    tc = TrainerConfig(total_steps=steps, log_every=max(steps // 4, 1), seed=seed,
+                       measure_snr=measure_snr, snr_early_every=snr_every,
+                       snr_late_every=snr_every * 10)
+    tr = Trainer(cfg, optimizer, lr, data, tc, rules=rules)
+    tr.run()
+    return tr
+
+
+def write_csv(name: str, rows: List[Dict[str, Any]]):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / name
+    if not rows:
+        return path
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The harness contract: one ``name,us_per_call,derived`` CSV line."""
+    print(f"{name},{us_per_call:.1f},{derived}")

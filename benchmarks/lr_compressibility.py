@@ -1,0 +1,29 @@
+"""Paper Fig. 8 / App. D: larger learning rates lower averaged SNR values
+(less compressible) across layer types."""
+import time
+
+from .common import emit, gpt_nano, train_once, write_csv
+
+
+def main(preset: str = "quick"):
+    steps = 120 if preset == "quick" else 1000
+    lrs = (3e-4, 1e-3, 3e-3, 1e-2) if preset == "quick" else (1e-4, 3e-4, 1e-3, 3e-3, 1e-2)
+    cfg = gpt_nano()
+    t0 = time.time()
+    rows = []
+    for lr in lrs:
+        tr = train_once(cfg, "adam", lr, steps=steps, measure_snr=True, snr_every=20)
+        avg = tr.snr.averaged()
+        # best-K SNR averaged over matrix-like params (the paper's K*)
+        best = {p: max(ks.values()) for p, ks in avg.items() if ks}
+        mean_best = sum(best.values()) / max(len(best), 1)
+        rows.append({"lr": lr, "mean_best_snr": round(mean_best, 4),
+                     **{f"snr[{p}]": round(v, 3) for p, v in sorted(best.items())[:6]}})
+    write_csv("lr_compressibility.csv", rows)
+    emit("lr_compressibility", (time.time() - t0) * 1e6 / (len(lrs) * steps),
+         "mean best-K SNR by lr: " + " ".join(f"{r['lr']:g}:{r['mean_best_snr']:.2f}" for r in rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

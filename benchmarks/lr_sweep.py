@@ -1,0 +1,33 @@
+"""Paper Fig. 1 / Fig. 10 (bottom): final loss vs learning rate for Adam,
+SlimAdam and the low-memory baselines. SlimAdam must track Adam's curve;
+Lion/SM3/Adafactor shift or degrade."""
+import time
+
+from .common import emit, gpt_nano, nano_data, train_once, write_csv
+
+OPTS = ("adam", "slim", "adalayer", "adalayer_ln_tl", "adam_mini_v2",
+        "lion", "sm3", "adafactor")
+
+
+def main(preset: str = "quick"):
+    steps = 60 if preset == "quick" else 400
+    lrs = (1e-3, 3e-3, 1e-2, 3e-2)
+    cfg = gpt_nano()
+    rows = []
+    t0 = time.time()
+    for opt in OPTS:
+        for lr in lrs:
+            tr = train_once(cfg, opt, lr, steps=steps)
+            loss = tr.metrics_log[-1]["loss"]
+            rows.append({"optimizer": opt, "lr": lr, "final_loss": round(loss, 4)})
+    write_csv("lr_sweep.csv", rows)
+    by_opt = {o: min(r["final_loss"] for r in rows if r["optimizer"] == o) for o in OPTS}
+    gap = by_opt["slim"] - by_opt["adam"]
+    emit("lr_sweep", (time.time() - t0) * 1e6 / (len(OPTS) * len(lrs) * steps),
+         f"best: adam={by_opt['adam']:.3f} slim={by_opt['slim']:.3f} gap={gap:+.3f} "
+         f"adalayer={by_opt['adalayer']:.3f} lion={by_opt['lion']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Optimizer update micro-bench: jnp paths vs fused Pallas kernels
+(interpret mode on CPU = correctness harness; the 'derived' column reports
+the roofline-projected TPU v5e time from streamed bytes / 819 GB/s)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_adam_op, slim_update_op
+from repro.kernels.ref import adam_update_ref, slim_update_ref
+
+from .common import emit, write_csv
+
+HBM_BW = 819e9
+
+
+def timeit(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(preset: str = "quick"):
+    r, c = (1024, 1024) if preset == "quick" else (4096, 8192)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    p = jax.random.normal(ks[0], (r, c))
+    g = jax.random.normal(ks[1], (r, c)) * 0.1
+    m = jnp.zeros((r, c))
+    v = jnp.zeros((r, c))
+    v_row = jnp.zeros((r, 1))
+    kw = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, count=1)
+
+    jnp_adam = jax.jit(lambda *a: adam_update_ref(*a, **kw))
+    jnp_slim = jax.jit(lambda *a: slim_update_ref(*a, **kw))
+    t_jnp_adam = timeit(jnp_adam, p, g, m, v)
+    t_jnp_slim = timeit(jnp_slim, p, g, m, v_row)
+    t_pal_adam = timeit(lambda *a: fused_adam_op(*a, **kw), p, g, m, v)
+    t_pal_slim = timeit(lambda *a: slim_update_op(*a, axis=1, **kw), p, g, m, v_row)
+
+    n = r * c * 4
+    adam_bytes = 7 * n              # p,g,m,v read + p,m,v write
+    slim_bytes = 5 * n + 2 * r * 4  # v is O(R)
+    rows = [
+        {"impl": "jnp_adam", "us": round(t_jnp_adam, 1), "tpu_proj_us": round(adam_bytes / HBM_BW * 1e6, 1)},
+        {"impl": "jnp_slim", "us": round(t_jnp_slim, 1), "tpu_proj_us": round(slim_bytes / HBM_BW * 1e6, 1)},
+        {"impl": "pallas_adam(interp)", "us": round(t_pal_adam, 1), "tpu_proj_us": round(adam_bytes / HBM_BW * 1e6, 1)},
+        {"impl": "pallas_slim(interp)", "us": round(t_pal_slim, 1), "tpu_proj_us": round(slim_bytes / HBM_BW * 1e6, 1)},
+    ]
+    write_csv("opt_speed.csv", rows)
+    emit("opt_speed", t_jnp_adam,
+         f"slim streams {slim_bytes/adam_bytes:.2f}x of adam bytes -> "
+         f"projected v5e {slim_bytes/HBM_BW*1e6:.1f}us vs {adam_bytes/HBM_BW*1e6:.1f}us per {r}x{c} tensor")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

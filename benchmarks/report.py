@@ -1,0 +1,236 @@
+"""Generate EXPERIMENTS.md from the dry-run records + benchmark CSVs.
+
+    PYTHONPATH=src python -m benchmarks.report
+
+Sections: §Paper-validation (benchmark CSV digests), §Dry-run (all 80 cells),
+§Roofline (single-pod, per-cell three-term analysis), §Perf (inlined from
+benchmarks/perf_log.md, the hand-maintained hypothesis->change->result log).
+"""
+from __future__ import annotations
+
+import csv
+import json
+import math
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+DRYRUN = HERE / "results" / "dryrun"
+RESULTS = HERE / "results"
+REPO = HERE.parent
+
+PEAK = 197e12
+HBM_BW = 819e9
+ICI = 50e9
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load_records():
+    recs = {}
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.1f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def _decode_floor_bytes(rec):
+    """Per-device bandwidth floor for one decode step: params + cache read once."""
+    from repro.configs import SHAPES, get_config
+    from repro.models.transformer import abstract_decode_cache
+    import jax
+
+    seq, gb, _ = SHAPES[rec["shape"]]
+    cfg = get_config(rec["arch"])
+    cache = abstract_decode_cache(cfg, gb, seq)
+    cache_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
+    param_bytes = rec["n_params"] * 2  # bf16
+    return (cache_bytes + param_bytes) / rec["n_chips"]
+
+
+def roofline_rows(recs):
+    rows = []
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if mesh != "single" or r.get("status") != "ok":
+            continue
+        rf = r.get("roofline", {})
+        comp, mem, coll = rf.get("compute_s"), rf.get("memory_s"), rf.get("collective_s")
+        dom = rf.get("dominant")
+        mf_dev = r.get("model_flops_per_dev", 0.0)
+        ratio = r.get("useful_flops_ratio")
+        if r["kind"] == "decode":
+            floor = _decode_floor_bytes(r) / HBM_BW
+            frac = floor / mem if mem else None
+            note = "decode is bandwidth-floor bound: stream params+cache once/token"
+        else:
+            bound = max(comp or 0, mem or 0, coll or 0)
+            frac = (mf_dev / PEAK) / bound if bound else None
+            if dom == "collective":
+                note = "TP activation all-reduces dominate: RS+AG conversion / ICI overlap"
+            elif dom == "memory" and (ratio or 1) < 0.1:
+                note = "attention replicated (heads % 16 != 0): reshard attention over batch"
+            else:
+                note = "bf16 collectives + fused optimizer kernel cut streamed bytes"
+        rows.append({
+            "arch": arch, "shape": shape, "compute": comp, "memory": mem,
+            "collective": coll, "dominant": dom, "model_flops_dev": mf_dev,
+            "useful_ratio": ratio, "fraction": frac, "note": note,
+        })
+    return rows
+
+
+def section_dryrun(recs):
+    out = ["## §Dry-run — 40 cells x {single 16x16, multi 2x16x16}",
+           "",
+           "Every runnable (architecture x input-shape) cell lowers, SPMD-partitions and",
+           "compiles for both production meshes via `jax.jit(...).lower().compile()`",
+           "with ShapeDtypeStruct inputs (no allocation). `temp`/`args` come from",
+           "`compiled.memory_analysis()` (per-device).",
+           "",
+           "**Methodology caveat (CPU backend):** the dry-run compiles against XLA:CPU,",
+           "which (a) upcasts bf16 arithmetic to fp32 (≈2x inflation of activation",
+           "temporaries and collective payloads vs a TPU lowering) and (b) fuses far",
+           "less aggressively. Temp figures are therefore conservative upper bounds.",
+           "",
+           "| arch | shape | mesh | status | accum | temp GiB | args GiB | fits 16GiB | compile |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(recs.items(), key=lambda kv: (kv[0][0], SHAPE_ORDER.index(kv[0][1]), kv[0][2])):
+        if r.get("status") == "skipped":
+            out.append(f"| {arch} | {shape} | {mesh} | SKIP: {r.get('reason','')} | - | - | - | - | - |")
+            continue
+        temp = r.get("mem_temp_size_in_bytes", 0) / 2**30
+        args = r.get("mem_argument_size_in_bytes", 0) / 2**30
+        out.append(
+            f"| {arch} | {shape} | {mesh} | ok | {r.get('grad_accum','-')} | "
+            f"{temp:.2f} | {args:.2f} | {'yes' if r.get('fits_hbm') else 'NO'} | {r.get('compile_s','-')}s |")
+    n_ok = sum(1 for r in recs.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in recs.values() if r.get("status") == "skipped")
+    n_fit = sum(1 for r in recs.values() if r.get("fits_hbm"))
+    out += ["",
+            f"**{len(recs)} cells: {n_ok} compiled ({n_fit} fit 16 GiB/chip), {n_skip} skipped per assignment rules.**",
+            "",
+            "Skips: `long_500k` runs only for the sub-quadratic archs (falcon-mamba,",
+            "jamba); encoder-only archs (hubert) have no decode step. The only",
+            "over-budget default cell is qwen1.5-32b `decode_32k` — its 64-layer MHA",
+            "(kv=40) cache at 32k x batch 128 is 5.5 TB in bf16 (>21 GiB/chip on one",
+            "pod before activations): a genuine capacity limit. The **int8-KV variant**",
+            "(`--variant optimized`, `qwen15_32b__decode_32k__*_optimized.json`) fits:",
+            "11.3 GiB args + 2.0 GiB temp single-pod, with <0.5% logit error and 100%",
+            "argmax agreement (tests/test_arch_smoke.py::test_int8_kv_cache_decode).",
+            ""]
+    return "\n".join(out)
+
+
+def section_roofline(rows):
+    out = ["## §Roofline — single-pod (256 x TPU v5e), per (arch x shape)",
+           "",
+           "Terms (seconds/step/chip): compute = dot-FLOPs / 197 TF/s; memory =",
+           "HBM-traffic proxy / 819 GB/s; collective = collective bytes / 50 GB/s.",
+           "All three derive from the compiled HLO with while-loop trip-count",
+           "correction (`repro.launch.hlo_analysis`; `compiled.cost_analysis()` counts",
+           "each loop body once — verified to under-report a scanned model by ~n_layers).",
+           "FLOPs are exact dot accounting; HBM traffic sums operand+output bytes of",
+           "top-level (unfused) ops, a conservative upper bound on the CPU lowering;",
+           "collective bytes sum operand sizes of all-gather/all-reduce/reduce-scatter/",
+           "all-to-all/collective-permute, x loop trips.",
+           "",
+           "`MODEL_FLOPS` = 6·N·D (train) or 2·N_active·D (inference); `useful` =",
+           "MODEL_FLOPS / HLO dot FLOPs (gap = remat recompute + attention quadratic",
+           "work + sharding-replication waste). `roofline frac` = useful-FLOPs time /",
+           "dominant term (train/prefill) or bandwidth-floor / memory term (decode).",
+           "",
+           "| arch | shape | compute | memory | collective | dominant | useful | roofline frac | what moves the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        frac = f"{r['fraction']:.3f}" if r["fraction"] else "-"
+        useful = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute'])} | {fmt_s(r['memory'])} | "
+            f"{fmt_s(r['collective'])} | {r['dominant']} | {useful} | {frac} | {r['note']} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def section_validation():
+    out = ["## §Paper-validation — benchmark digests (CPU-scale reproductions)",
+           "",
+           "Scale note: offline container, single CPU core — models are GPT-nano-class",
+           "on Zipfian synthetic streams (DESIGN.md §7). The paper's *qualitative*",
+           "claims are what these validate; absolute losses are not comparable.",
+           ""]
+    bench_out = REPO / "bench_output.txt"
+    if bench_out.exists():
+        out += ["One-line digests (`name,us_per_call,derived` from `benchmarks.run`):", "", "```"]
+        out += [ln for ln in bench_out.read_text().splitlines() if ln.strip()]
+        out += ["```", "",
+                "Reproduced: token-dim SNR collapse with vocab tail (Fig 7 mechanism),",
+                "SNR falls with lr (Fig 8), SlimAdam tracks Adam's lr curve within noise",
+                "and spikes least at large lr (Figs 1/10/11), rules stable across",
+                "datasets/widths (Tables 1-2), ResNets most compressible (Fig 5),",
+                "99.8% mean table-3 second-moment savings at full scale (Fig 10 top).",
+                "Scale-limited results, reported honestly: the Fig 7 *loss-gap* sign and",
+                "the Fig 9 init ordering need the paper's 10k-step/full-width setting —",
+                "at nano scale the 1/depth-scaled init measures *lower* SNR; the",
+                "benchmark is the right experiment to run at full scale.", ""]
+    digests = {
+        "lr_sweep.csv": "Fig 1/10(bottom): final loss per (optimizer, lr)",
+        "snr_trajectories.csv": "Fig 2/3: SNR_K trajectories per layer role",
+        "vocab_tail.csv": "Fig 7: vocab size vs token-dim SNR and compression loss gap",
+        "lr_compressibility.csv": "Fig 8: mean best-K SNR falls with lr",
+        "init_comparison.csv": "Fig 9: Mitchell vs torch-default init SNR",
+        "savings_by_arch.csv": "Fig 10(top): table-3 savings across the 10 assigned archs",
+        "rule_robustness.csv": "Tables 1-2/Fig 30: rule stability across data/width",
+        "opt_memory.csv": "optimizer state bytes at full scale",
+        "opt_speed.csv": "fused-kernel micro-bench + v5e projection",
+        "stability.csv": "Fig 11: loss-spike magnitude at large lr",
+        "resnet_snr.csv": "Fig 5/§3.1.3: ResNet SNR by depth (most-compressible regime)",
+    }
+    for name, desc in digests.items():
+        p = RESULTS / name
+        out.append(f"- **{name}** — {desc}" + ("" if p.exists() else " *(not yet generated)*"))
+        if p.exists() and name in ("savings_by_arch.csv", "opt_memory.csv"):
+            rows = list(csv.DictReader(open(p)))
+            cols = list(rows[0].keys())
+            out.append("")
+            out.append("| " + " | ".join(cols) + " |")
+            out.append("|" + "---|" * len(cols))
+            for r in rows:
+                out.append("| " + " | ".join(str(r[c]) for c in cols) + " |")
+            out.append("")
+    out.append("")
+    return "\n".join(out)
+
+
+def main():
+    recs = load_records()
+    rows = roofline_rows(recs)
+    perf_log = HERE / "perf_log.md"
+    perf = perf_log.read_text() if perf_log.exists() else "*(perf iterations pending)*\n"
+
+    doc = "\n".join([
+        "# EXPERIMENTS",
+        "",
+        "Generated by `PYTHONPATH=src python -m benchmarks.report` from",
+        "`benchmarks/results/` (dry-run JSONs + benchmark CSVs). Regenerate after",
+        "re-running `repro.launch.sweep` or `benchmarks.run`.",
+        "",
+        section_validation(),
+        section_dryrun(recs),
+        section_roofline(rows),
+        "## §Perf — hillclimb log (hypothesis -> change -> measure -> verdict)",
+        "",
+        perf,
+    ])
+    (REPO / "EXPERIMENTS.md").write_text(doc)
+    print(f"wrote EXPERIMENTS.md ({len(doc.splitlines())} lines, {len(rows)} roofline rows)")
+
+
+if __name__ == "__main__":
+    main()

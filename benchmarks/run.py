@@ -1,0 +1,50 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--preset quick|full] [--only name]
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract) and writes
+full tables to benchmarks/results/.
+"""
+import argparse
+import sys
+import traceback
+
+from . import (lr_sweep, snr_trajectories, vocab_tail, lr_compressibility,
+               init_comparison, savings, rule_robustness, opt_memory,
+               opt_speed, stability, resnet_snr)
+
+ALL = {
+    "lr_sweep": lr_sweep.main,                    # Fig 1 / Fig 10 bottom
+    "snr_trajectories": snr_trajectories.main,    # Fig 2/3, App C
+    "vocab_tail": vocab_tail.main,                # Fig 7, App G
+    "lr_compressibility": lr_compressibility.main,  # Fig 8, App D
+    "init_comparison": init_comparison.main,      # Fig 9, App E
+    "savings": savings.main,                      # Fig 10 top
+    "rule_robustness": rule_robustness.main,      # Tables 1-2, Fig 30
+    "opt_memory": opt_memory.main,                # memory table (full-scale archs)
+    "opt_speed": opt_speed.main,                  # kernel micro-bench
+    "stability": stability.main,                  # Fig 11
+    "resnet_snr": resnet_snr.main,                # Fig 5, §3.1.3
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=("quick", "full"), default="quick")
+    ap.add_argument("--only", choices=list(ALL), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(ALL)
+    failed = []
+    for name in names:
+        try:
+            ALL[name](args.preset)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},-1,FAILED")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,30 @@
+"""Paper Fig. 2/3 + App. C: SNR_K trajectories along an Adam run, per layer
+role and candidate dimension; embedding must resist token-dim compression."""
+import time
+
+from .common import emit, gpt_nano, train_once, write_csv
+
+
+def main(preset: str = "quick"):
+    steps = 200 if preset == "quick" else 2000
+    cfg = gpt_nano(vocab=256)
+    t0 = time.time()
+    tr = train_once(cfg, "adam", 3e-3, steps=steps, measure_snr=True, snr_every=20)
+    rows = []
+    for pname, by_k in tr.snr.trajectory.items():
+        for k, series in by_k.items():
+            for i, v in enumerate(series):
+                rows.append({"param": pname, "K": k, "measurement": i,
+                             "step": tr.snr.steps[i], "snr": round(v, 4)})
+    write_csv("snr_trajectories.csv", rows)
+    avg = tr.snr.averaged()
+    emb = avg.get("embed", {})
+    emit("snr_trajectories", (time.time() - t0) * 1e6 / steps,
+         f"embed: token-dim(fan_in)={emb.get('fan_in', 0):.2f} "
+         f"embed-dim(fan_out)={emb.get('fan_out', 0):.2f} "
+         f"(paper: embed dim >> token dim)")
+    return avg
+
+
+if __name__ == "__main__":
+    main()

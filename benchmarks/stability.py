@@ -1,0 +1,27 @@
+"""Paper Fig. 11: at large LR SlimAdam tracks Adam's training dynamics
+while AdaLayer / Adam-mini destabilize (loss spikes)."""
+import time
+
+from .common import emit, gpt_nano, train_once, write_csv
+
+
+def main(preset: str = "quick"):
+    steps = 100 if preset == "quick" else 600
+    big_lr = 3e-2
+    t0 = time.time()
+    rows, spikes = [], {}
+    for opt in ("adam", "slim", "adalayer", "adam_mini_v2"):
+        tr = train_once(cfg=gpt_nano(), optimizer=opt, lr=big_lr, steps=steps)                 if False else train_once(gpt_nano(), opt, big_lr, steps=steps)
+        losses = [m["loss"] for m in tr.metrics_log]
+        spikes[opt] = max(losses[i + 1] - losses[i] for i in range(len(losses) - 1))                 if len(losses) > 1 else 0.0
+        for m in tr.metrics_log:
+            rows.append({"optimizer": opt, "step": m["step"], "loss": round(m["loss"], 4)})
+    write_csv("stability.csv", rows)
+    emit("stability", (time.time() - t0) * 1e6 / (4 * steps),
+         "max upward loss jump @lr=3e-2: " +
+         " ".join(f"{k}:{v:+.3f}" for k, v in spikes.items()))
+    return spikes
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig. 7 + App. G: the two-layer linear model. Growing the
+vocabulary (heavier tail) kills token-dim SNR; compressing the token dim
+then costs loss while compressing the embedding dim stays free."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SNRTracker, measure_tree_snr, rules_as_tree)
+from repro.core.slim_adam import slim_adam
+from repro.data import linear_model_batches
+from repro.models import linear_lm
+from repro.optim import adamw, apply_updates
+from repro.train.step import make_train_step
+from repro.train.trainer import find_adam_nu
+
+from .common import emit, write_csv
+
+
+def run_linear(vocab, steps, optimizer_rules=None, lr=3e-3, seed=0, snr_every=20):
+    cfg = linear_lm.LinearLMConfig(vocab_size=vocab, d_model=32)
+    params, meta = cfg.init(jax.random.PRNGKey(seed))
+    if optimizer_rules is None:
+        tx = adamw(lr, b2=0.999, weight_decay=1e-4)
+    else:
+        dims = rules_as_tree(optimizer_rules, params, meta)
+        tx = slim_adam(lr, dims, b2=0.999, weight_decay=1e-4)
+    step_fn = jax.jit(make_train_step(cfg, tx, forward_fn=linear_lm.forward))
+    data = linear_model_batches(vocab, seq_len=32, batch=8, seed=seed)
+    opt = tx.init(params)
+    tracker = SNRTracker()
+    loss = None
+    for s in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if optimizer_rules is None and (s + 1) % snr_every == 0:
+            tracker.update(measure_tree_snr(find_adam_nu(opt), meta), s + 1)
+        loss = float(metrics["loss"])
+    return loss, tracker.averaged(), meta
+
+
+def main(preset: str = "quick"):
+    steps = 240 if preset == "quick" else 1000
+    vocabs = (64, 512, 2048) if preset == "quick" else (1024, 4096, 16384, 49152)
+    t0 = time.time()
+    rows = []
+    for v in vocabs:
+        base_loss, avg, meta = run_linear(v, steps)
+        head = avg.get("head", {})
+        embd = avg.get("embed", {})
+        # token dim of the head is its fan_out ('vocab'); embed dim is fan_in
+        row = {"vocab": v, "adam_loss": round(base_loss, 4),
+               "head_snr_token_dim": round(head.get("fan_out", 0), 3),
+               "head_snr_embed_dim": round(head.get("fan_in", 0), 3),
+               "embd_snr_token_dim": round(embd.get("fan_in", 0), 3),
+               "embd_snr_embed_dim": round(embd.get("fan_out", 0), 3)}
+        # loss gap when compressing token dim vs embedding dim (Fig 7 right)
+        for label, rules in (
+            ("embed_dims", {"embed": ("embed",), "head": ("embed",)}),
+            ("token_dims", {"embed": ("vocab",), "head": ("vocab",)}),
+        ):
+            loss_c, _, _ = run_linear(v, steps, optimizer_rules=rules)
+            row[f"dloss_{label}"] = round(loss_c - base_loss, 4)
+        rows.append(row)
+    write_csv("vocab_tail.csv", rows)
+    r0, rN = rows[0], rows[-1]
+    emit("vocab_tail", (time.time() - t0) * 1e6 / (len(vocabs) * 3 * steps),
+         f"token-dim SNR {r0['head_snr_token_dim']}->{rN['head_snr_token_dim']} as vocab "
+         f"{r0['vocab']}->{rN['vocab']}; dloss(token)={rN['dloss_token_dims']:+.3f} "
+         f"vs dloss(embed)={rN['dloss_embed_dims']:+.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: SlimAdam — 'When Can You Get Away with Low Memory Adam?' — as a
+production multi-pod JAX training/inference framework.
+
+Subpackages: core (the paper), optim, models, sharding, data, checkpoint,
+train, serve, kernels (Pallas), configs (assigned architectures), launch
+(mesh / dry-run / sweep / train driver).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,147 @@
+"""Checkpointing: atomic, sharded, keep-last-k, with mesh-resharding restore.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000100/
+        manifest.json        # step, tree structure, leaf shapes/dtypes, rng
+        arrays.npz           # flat leaf name -> full (unsharded) array
+      step_000200/ ...
+      LATEST                 # atomic pointer file
+
+Design notes for scale:
+  * arrays are written via a temp dir + atomic rename, so a preemption
+    mid-save never corrupts the latest checkpoint (fault tolerance);
+  * ``restore(..., shardings=...)`` re-lays arrays onto *any* mesh — a run
+    checkpointed on N chips restores onto M (elastic scaling). On a real
+    cluster the npz would be a per-host shard file; the manifest logic is
+    identical;
+  * optimizer states ride along as ordinary pytrees — SlimAdam's reduced
+    second moments make the optimizer section ~50% smaller than Adam's,
+    which is the paper's saving materialized on disk too.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..core.labels import flatten_with_names
+
+
+def _leaf_names(tree: Any):
+    named, treedef = flatten_with_names(tree)
+    return named, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any, *, extra: Optional[Dict[str, Any]] = None,
+         keep: int = 3) -> Path:
+    """Blocking save. Returns the checkpoint path."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    named, _ = _leaf_names(tree)
+    arrays = {}
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for name, leaf in named:
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[name] = arr
+        manifest["leaves"][name] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # atomic LATEST pointer
+    ptr_tmp = ckpt_dir / ".LATEST.tmp"
+    ptr_tmp.write_text(final.name)
+    os.replace(ptr_tmp, ckpt_dir / "LATEST")
+    _gc(ckpt_dir, keep)
+    return final
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget background saves (one in flight; extra requests queue
+    behind a lock — last writer wins on LATEST)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, ckpt_dir, step, tree, **kw):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            with self._lock:
+                save(ckpt_dir, step, host_tree, **kw)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ptr = Path(ckpt_dir) / "LATEST"
+    if not ptr.exists():
+        return None
+    name = ptr.read_text().strip()
+    if not (Path(ckpt_dir) / name / "manifest.json").exists():
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
+            shardings: Optional[Any] = None) -> tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). With ``shardings`` (same-structure NamedSharding
+    pytree) each leaf is jax.device_put onto the new mesh — this is the
+    elastic-rescale path: the stored arrays are global, so any mesh works."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+
+    named, treedef = _leaf_names(like)
+    if shardings is not None:
+        sh_named, _ = _leaf_names(shardings)
+        sh_map = dict(sh_named)
+    else:
+        sh_map = {}
+    leaves = []
+    for name, proto in named:
+        if name not in data:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = data[name]
+        want_shape = tuple(proto.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{name}: checkpoint shape {arr.shape} != expected {want_shape}")
+        arr = arr.astype(proto.dtype) if hasattr(proto, "dtype") else arr
+        if name in sh_map:
+            arr = jax.device_put(arr, sh_map[name])
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest.get("extra", {})
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    for p in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,102 @@
+"""Architecture registry: 10 assigned archs + the paper's own models.
+
+Each ``<arch>.py`` exposes ``config()`` (full-scale, dry-run only) and
+``reduced()`` (CPU-smoke scale, same family). ``input_specs(cfg, shape)``
+builds ShapeDtypeStruct stand-ins per shape cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ARCH_IDS = (
+    "falcon_mamba_7b",
+    "jamba_v01_52b",
+    "qwen3_moe_30b_a3b",
+    "olmoe_1b_7b",
+    "command_r_35b",
+    "deepseek_67b",
+    "smollm_135m",
+    "qwen15_32b",
+    "hubert_xlarge",
+    "internvl2_26b",
+    # paper's own models
+    "gpt_small",
+    "gpt_medium",
+    "vit_small",
+)
+
+# ---------------------------------------------------------------------------
+# Shape cells (assignment): name -> (seq_len, global_batch, kind)
+# ---------------------------------------------------------------------------
+
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# Families for skip rules
+SSM_OR_HYBRID = {"falcon_mamba_7b", "jamba_v01_52b"}
+ENCODER_ONLY = {"hubert_xlarge", "vit_small"}
+
+
+def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the assignment's skip rules."""
+    kind = SHAPES[shape][2]
+    if arch in ENCODER_ONLY and kind == "decode":
+        return False, "encoder-only: no decode step"
+    if shape == "long_500k" and arch not in SSM_OR_HYBRID:
+        return False, "full-attention arch: 500k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def get_config(arch: str, **overrides):
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    cfg = mod.config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_reduced(arch: str):
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.reduced()
+
+
+def input_specs(cfg, shape: str, *, dtype=jnp.int32) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the train/prefill step of one cell."""
+    seq, gb, kind = SHAPES[shape]
+    if kind == "decode":
+        raise ValueError("decode cells use decode_input_specs")
+    batch: Dict[str, Any] = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = jax.ShapeDtypeStruct((gb, seq), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((gb, seq), jnp.int32)
+        if cfg.extra_embed_len:
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (gb, cfg.extra_embed_len, cfg.d_model), jnp.bfloat16)
+    elif cfg.input_proj_dim:
+        batch["patches"] = jax.ShapeDtypeStruct((gb, seq, cfg.input_proj_dim), jnp.bfloat16)
+        batch["labels"] = jax.ShapeDtypeStruct((gb, seq), jnp.int32)
+    else:
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct((gb, seq, cfg.d_model), jnp.bfloat16)
+        batch["labels"] = jax.ShapeDtypeStruct((gb, seq), jnp.int32)
+    return batch
+
+
+def decode_input_specs(cfg, shape: str) -> Dict[str, Any]:
+    """Stand-ins for one decode step: new tokens + a seq_len KV/SSM cache."""
+    seq, gb, kind = SHAPES[shape]
+    assert kind == "decode"
+    from ..models.transformer import abstract_decode_cache
+
+    return {
+        "tokens": jax.ShapeDtypeStruct((gb, 1), jnp.int32),
+        "cache": abstract_decode_cache(cfg, gb, seq),
+    }

@@ -1,0 +1,28 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H d_ff=5120 vocab=504,
+encoder-only (non-causal), GELU MLP, LayerNorm. The conv waveform
+frontend is a STUB — input_specs() provides precomputed frame embeddings
+per the assignment. [arXiv:2106.07447]"""
+import jax.numpy as jnp
+from repro.models import LayerSlot, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert_xlarge", n_layers=48, d_model=1280,
+        n_heads=16, n_kv_heads=16, head_dim=80,
+        d_ff=5120, vocab_size=504,
+        causal=False, embed_inputs=False, tie_embeddings=False,
+        gated_mlp=False,
+        pattern=(LayerSlot("attn", "dense"),),
+        pos="none", norm="layernorm",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="hubert_xlarge_reduced", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=59,
+        causal=False, embed_inputs=False, tie_embeddings=False,
+        gated_mlp=False, pattern=(LayerSlot("attn", "dense"),),
+        pos="none", norm="layernorm", dtype=jnp.float32, remat=False,
+    )

@@ -1,0 +1,27 @@
+"""ViT-small (paper App. B.4): 12L 12H d_model=768, GPT-like trunk for
+image classification, patch size 2 on CIFAR (patch dim = 2*2*3)."""
+import jax.numpy as jnp
+from repro.models import LayerSlot, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="vit_small", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=12, d_ff=3072, vocab_size=100,
+        causal=False, embed_inputs=False, tie_embeddings=False,
+        input_proj_dim=12, gated_mlp=False,
+        pattern=(LayerSlot("attn", "dense"),),
+        pos="learned", max_position=257, norm="layernorm",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="vit_small_reduced", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=10,
+        causal=False, embed_inputs=False, tie_embeddings=False,
+        input_proj_dim=12, gated_mlp=False,
+        pattern=(LayerSlot("attn", "dense"),),
+        pos="learned", max_position=257, norm="layernorm",
+        dtype=jnp.float32, remat=False,
+    )

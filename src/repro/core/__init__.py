@@ -1,0 +1,55 @@
+"""Paper core: SNR analysis of Adam's second moments + SlimAdam.
+
+Public API:
+
+    from repro.core import (
+        ParamMeta, SNRTracker, measure_tree_snr, derive_rules, table3_rules,
+        rules_as_tree, slim_adam, scale_by_slim_adam, second_moment_savings,
+    )
+"""
+from .labels import ParamMeta, STRUCTURAL_AXES, flatten_with_names, path_str, validate_meta
+from .snr import (
+    SNRTracker,
+    compression_ratio,
+    measure_leaf_snr,
+    measure_leaf_snr_per_layer,
+    measure_tree_snr,
+    snr_along_dims,
+)
+from .rules import (
+    DEFAULT_CUTOFF,
+    Rule,
+    derive_rules,
+    rules_as_tree,
+    rules_to_dims,
+    second_moment_savings,
+    table3_rules,
+)
+from .slim_adam import ScaleBySlimAdamState, scale_by_slim_adam, slim_adam, second_moment_elements
+from . import baselines
+
+__all__ = [
+    "ParamMeta",
+    "STRUCTURAL_AXES",
+    "flatten_with_names",
+    "path_str",
+    "validate_meta",
+    "SNRTracker",
+    "compression_ratio",
+    "measure_leaf_snr",
+    "measure_leaf_snr_per_layer",
+    "measure_tree_snr",
+    "snr_along_dims",
+    "DEFAULT_CUTOFF",
+    "Rule",
+    "derive_rules",
+    "rules_as_tree",
+    "rules_to_dims",
+    "second_moment_savings",
+    "table3_rules",
+    "ScaleBySlimAdamState",
+    "scale_by_slim_adam",
+    "slim_adam",
+    "second_moment_elements",
+    "baselines",
+]

@@ -1,0 +1,324 @@
+"""Baseline low-memory optimizers the paper compares against (Fig. 1, App. A).
+
+Drop-in-Adam family (constructed from the SlimAdam machinery, since they are
+all "share second moments along dims K" specializations — paper §2):
+  * :func:`adalayer_rules`          — one second moment per parameter block
+  * :func:`adalayer_ln_tl_rules`    — AdaLayer + uncompressed LayerNorm & tied
+                                      embedding/LM-head (Zhao et al., 2024)
+  * :func:`adam_mini_v1_rules` / :func:`adam_mini_v2_rules` (Zhang et al., 2024b)
+
+Algorithmically-different family (own GradientTransformations):
+  * :func:`adafactor`  (Shazeer & Stern, 2018) — factored second moments
+  * :func:`sm3`        (Anil et al., 2019) — per-axis max accumulators
+  * :func:`lion`       (Chen et al., 2023) — sign momentum
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.base import (
+    GradientTransformation,
+    ScalarOrSchedule,
+    add_decayed_weights,
+    chain,
+    clip_by_global_norm,
+    scale_by_learning_rate,
+)
+from .labels import ParamMeta, STRUCTURAL_AXES, flatten_with_names
+from .rules import Rule
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Rule-based baselines (members of the low-memory Adam family)
+# ---------------------------------------------------------------------------
+
+
+def _all_eligible(m: ParamMeta) -> Tuple[str, ...]:
+    return tuple(a for a in m.axes if a not in STRUCTURAL_AXES)
+
+
+def adalayer_rules(meta: Any) -> Dict[str, Rule]:
+    """One second moment per parameter block (AdaLayer): reduce every
+    non-structural axis. Scan-stacked tensors keep one moment per layer —
+    matching 'per block' semantics."""
+    out: Dict[str, Rule] = {}
+    for name, m in flatten_with_names(meta)[0]:
+        elig = _all_eligible(m)
+        out[name] = elig if elig else None
+    return out
+
+
+def adalayer_ln_tl_rules(meta: Any) -> Dict[str, Rule]:
+    """AdaLayer + per-parameter moments for norms and embedding/LM-head."""
+    out = adalayer_rules(meta)
+    for name, m in flatten_with_names(meta)[0]:
+        if m.role in ("norm", "token_embedding", "lm_head", "head"):
+            out[name] = None
+    return out
+
+
+def adam_mini_v1_rules(meta: Any) -> Dict[str, Rule]:
+    """Adam-mini v1.0.4: one moment per default parameter block, except
+    per-parameter embedding/LM-head and per-head attention K/Q."""
+    out: Dict[str, Rule] = {}
+    for name, m in flatten_with_names(meta)[0]:
+        elig = _all_eligible(m)
+        if m.role in ("token_embedding", "lm_head", "head"):
+            out[name] = None
+        elif m.role in ("attn_k", "attn_q"):
+            # per-head: reduce everything except the 'heads'/'kv_heads' axis
+            keep = {"heads", "kv_heads"}
+            r = tuple(a for a in elig if a not in keep)
+            out[name] = r if r else None
+        else:
+            out[name] = elig if elig else None
+    return out
+
+
+def adam_mini_v2_rules(meta: Any) -> Dict[str, Rule]:
+    """Adam-mini v1.1.1: one moment per *output neuron* (reduce the input
+    dim), except per-head K/Q and per-token-dim embedding/LM-head; norms
+    compressed."""
+    out: Dict[str, Rule] = {}
+    for name, m in flatten_with_names(meta)[0]:
+        elig = _all_eligible(m)
+        if m.role in ("token_embedding", "lm_head", "head"):
+            # one moment per token: reduce the embedding axis
+            r = tuple(a for a in m.fan_in + m.fan_out if a == "embed")
+            out[name] = r if r else None
+        elif m.role in ("attn_k", "attn_q"):
+            keep = {"heads", "kv_heads"}
+            r = tuple(a for a in elig if a not in keep)
+            out[name] = r if r else None
+        elif m.role == "norm":
+            out[name] = elig if elig else None
+        elif not elig:
+            out[name] = None
+        elif m.fan_in:
+            out[name] = tuple(m.fan_in)  # one moment per output neuron
+        else:
+            out[name] = elig
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (v1: no momentum; v2: + update EMA), relative_step=False
+# ---------------------------------------------------------------------------
+
+
+class AdafactorState(NamedTuple):
+    count: jnp.ndarray
+    vr: PyTree   # row stats (factored leaves) or full v (unfactored)
+    vc: PyTree   # col stats (factored leaves) or empty placeholder
+    mu: PyTree   # update EMA (v2) or None
+
+
+def _factored(p: jnp.ndarray) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def adafactor(
+    learning_rate: ScalarOrSchedule,
+    *,
+    decay_rate: float = 0.8,
+    eps1: float = 1e-30,
+    clip_threshold: float = 1.0,
+    momentum: Optional[float] = None,  # v2 uses 0.9
+    weight_decay: float = 0.0,
+    grad_clip: Optional[float] = 1.0,
+) -> GradientTransformation:
+    def init_fn(params):
+        def vr_init(p):
+            return (
+                jnp.zeros(p.shape[:-1], jnp.float32)
+                if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32)
+            )
+
+        def vc_init(p):
+            return (
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p)
+                else jnp.zeros((), jnp.float32)
+            )
+
+        vr = jax.tree.map(vr_init, params)
+        vc = jax.tree.map(vc_init, params)
+        mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) if momentum else None
+        return AdafactorState(count=jnp.zeros([], jnp.int32), vr=vr, vc=vc, mu=mu)
+
+    def core_update(updates, state, params=None):
+        del params
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        beta2t = 1.0 - jnp.power(t, -decay_rate)
+
+        def leaf(g, vr, vc, mu):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps1
+            if _factored(g):
+                new_vr = beta2t * vr + (1 - beta2t) * jnp.mean(g2, axis=-1)
+                new_vc = beta2t * vc + (1 - beta2t) * jnp.mean(g2, axis=-2)
+                # v_hat = vr vc^T / mean(vr)
+                denom = jnp.mean(new_vr, axis=-1, keepdims=True)
+                vhat = (new_vr / denom)[..., :, None] * new_vc[..., None, :]
+            else:
+                new_vr = beta2t * vr + (1 - beta2t) * g2
+                new_vc = vc
+                vhat = new_vr
+            u = g / jnp.sqrt(vhat)
+            # update clipping by RMS (Shazeer & Stern eq. 6)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u))) + 1e-16
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if momentum is not None and mu is not None:
+                new_mu = momentum * mu + (1 - momentum) * u
+                return new_mu, new_vr, new_vc, new_mu
+            return u, new_vr, new_vc, None
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(updates)
+        vr_leaves = treedef.flatten_up_to(state.vr)
+        vc_leaves = treedef.flatten_up_to(state.vc)
+        mu_leaves = treedef.flatten_up_to(state.mu) if state.mu is not None else [None] * len(g_leaves)
+        outs = [leaf(g, vr, vc, mu) for g, vr, vc, mu in zip(g_leaves, vr_leaves, vc_leaves, mu_leaves)]
+        u = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        vr = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        vc = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+        mu = (
+            jax.tree_util.tree_unflatten(treedef, [o[3] for o in outs])
+            if momentum is not None
+            else None
+        )
+        return u, AdafactorState(count=count, vr=vr, vc=vc, mu=mu)
+
+    core = GradientTransformation(init_fn, core_update)
+    parts = []
+    if grad_clip is not None:
+        parts.append(clip_by_global_norm(grad_clip))
+    parts.append(core)
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
+    parts.append(scale_by_learning_rate(learning_rate))
+    return chain(*parts)
+
+
+# ---------------------------------------------------------------------------
+# SM3 (SM3-II with optional momentum and exponential moving accumulators)
+# ---------------------------------------------------------------------------
+
+
+class SM3State(NamedTuple):
+    accs: PyTree   # per-leaf: tuple of per-axis accumulators
+    mom: PyTree
+
+
+def sm3(
+    learning_rate: ScalarOrSchedule,
+    *,
+    momentum: float = 0.9,
+    beta: float = 0.95,   # paper App. A: beta=0.95 is best for GPT pre-training
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: Optional[float] = 1.0,
+) -> GradientTransformation:
+    def acc_shapes(p):
+        if p.ndim == 0:
+            return (jnp.zeros((), jnp.float32),)
+        return tuple(
+            jnp.zeros(tuple(s if i == ax else 1 for i, s in enumerate(p.shape)), jnp.float32)
+            for ax in range(p.ndim)
+        )
+
+    def init_fn(params):
+        accs = jax.tree.map(lambda p: acc_shapes(p), params)
+        mom = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return SM3State(accs=accs, mom=mom)
+
+    def core_update(updates, state, params=None):
+        del params
+
+        def leaf(g, accs, m):
+            g = g.astype(jnp.float32)
+            if g.ndim == 0:
+                nu = accs[0]
+                new_nu = jnp.maximum(beta * nu, 0.0) + (1 - beta) * jnp.square(g) if beta > 0 else nu + jnp.square(g)
+                new_accs = (new_nu,)
+                precond = g / (jnp.sqrt(new_nu) + eps)
+            else:
+                # nu_hat = min over axes of broadcast accumulators
+                nu_hat = accs[0]
+                for a in accs[1:]:
+                    nu_hat = jnp.minimum(nu_hat, a)
+                if beta > 0:
+                    nu = beta * nu_hat + (1 - beta) * jnp.square(g)
+                else:
+                    nu = nu_hat + jnp.square(g)
+                new_accs = tuple(
+                    jnp.max(nu, axis=tuple(i for i in range(g.ndim) if i != ax), keepdims=True)
+                    for ax in range(g.ndim)
+                )
+                precond = g / (jnp.sqrt(nu) + eps)
+            new_m = momentum * m + (1 - momentum) * precond
+            return new_m, new_accs, new_m
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(updates)
+        acc_leaves = treedef.flatten_up_to(state.accs)
+        m_leaves = treedef.flatten_up_to(state.mom)
+        outs = [leaf(g, a, m) for g, a, m in zip(g_leaves, acc_leaves, m_leaves)]
+        u = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        accs = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        mom = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+        return u, SM3State(accs=accs, mom=mom)
+
+    core = GradientTransformation(init_fn, core_update)
+    parts = []
+    if grad_clip is not None:
+        parts.append(clip_by_global_norm(grad_clip))
+    parts.append(core)
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
+    parts.append(scale_by_learning_rate(learning_rate))
+    return chain(*parts)
+
+
+# ---------------------------------------------------------------------------
+# Lion
+# ---------------------------------------------------------------------------
+
+
+class LionState(NamedTuple):
+    mu: PyTree
+
+
+def lion(
+    learning_rate: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.95,   # paper App. A: best for the GPT-small experiment
+    weight_decay: float = 0.1,
+    grad_clip: Optional[float] = 1.0,
+) -> GradientTransformation:
+    def init_fn(params):
+        return LionState(mu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def core_update(updates, state, params=None):
+        del params
+        # update direction: sign(b1 * m + (1-b1) * g); momentum: b2 EMA
+        direction = jax.tree.map(
+            lambda m, g: jnp.sign(b1 * m + (1 - b1) * g.astype(jnp.float32)), state.mu, updates
+        )
+        new_mu = jax.tree.map(lambda m, g: b2 * m + (1 - b2) * g.astype(jnp.float32), state.mu, updates)
+        return direction, LionState(mu=new_mu)
+
+    core = GradientTransformation(init_fn, core_update)
+    parts = []
+    if grad_clip is not None:
+        parts.append(clip_by_global_norm(grad_clip))
+    parts.append(core)
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
+    parts.append(scale_by_learning_rate(learning_rate))
+    return chain(*parts)

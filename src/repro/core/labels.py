@@ -1,0 +1,152 @@
+"""Parameter metadata: logical axes + paper layer roles.
+
+Every model in ``repro.models`` materializes, alongside its parameter pytree,
+a *metadata pytree* of :class:`ParamMeta` with identical structure. One
+metadata source powers three consumers:
+
+  * ``repro.core.rules``  — which axes are compression candidates and what the
+    paper calls them (token dim vs embedding dim, head-stacked dim, ...);
+  * ``repro.sharding``    — logical-axis -> mesh-axis PartitionSpec rules;
+  * ``repro.core.snr``    — per-depth reporting for scan-stacked tensors.
+
+Axis-name conventions (logical axes):
+  'layers'    scan-stacked depth dim            (structural: never compressed,
+                                                 never sharded)
+  'experts'   MoE expert dim                    (structural for compression;
+                                                 sharded for EP)
+  'vocab'     token dimension of embed/lm-head  (the paper's incompressible dim)
+  'embed'     residual-stream width
+  'heads'/'kv_heads'  attention head dims
+  'head_dim'  per-head width
+  'mlp'       FFN hidden width
+  'qkv','conv_w','state',... arch-specific (see models)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+# Axes that are *structural*: they enumerate independent modules (depth,
+# experts), so the paper's intra-matrix mean-sharing never crosses them.
+STRUCTURAL_AXES = frozenset({"layers", "experts"})
+
+# Paper layer roles. ``rules.py`` keys its recommended-K table (paper Table 3)
+# on these.
+ROLES = (
+    "token_embedding",
+    "lm_head",
+    "pos_embedding",
+    "attn_q",
+    "attn_k",
+    "attn_v",
+    "attn_o",
+    "attn_qkv_bias",
+    "mlp_up",
+    "mlp_gate",
+    "mlp_down",
+    "moe_router",
+    "norm",
+    "bias",
+    "ssm_in",        # mamba in_proj (x and z branches)
+    "ssm_out",       # mamba out_proj
+    "ssm_x",         # x_proj (B, C, dt low-rank)
+    "ssm_dt",        # dt_proj
+    "ssm_conv",      # depthwise conv1d
+    "ssm_a",         # A_log (per-channel state decay)
+    "ssm_d",         # D skip
+    "patch_embed",   # vision first layer
+    "frontend",      # stub modality frontends
+    "head",          # generic classification head
+    "conv",          # ResNet conv kernels (kh, kw, cin, cout)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    """Static metadata for one parameter tensor."""
+
+    axes: Tuple[str, ...]            # logical axis name per dim (len == ndim)
+    role: str                        # one of ROLES
+    # Axis names that behave as the paper's fan_in / fan_out for this tensor
+    # (in the W: fan_in -> fan_out functional sense, independent of storage
+    # order). Compression candidates are fan_in, fan_out, and their union.
+    fan_in: Tuple[str, ...] = ()
+    fan_out: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(f"unknown role {self.role!r}")
+        for ax in self.fan_in + self.fan_out:
+            if ax not in self.axes:
+                raise ValueError(f"candidate axis {ax!r} not in axes {self.axes}")
+            if ax in STRUCTURAL_AXES:
+                raise ValueError(f"structural axis {ax!r} cannot be a compression candidate")
+
+    @property
+    def ndim(self) -> int:
+        return len(self.axes)
+
+    @property
+    def is_vector_like(self) -> bool:
+        """Paper: vector-like moments (norm scales, biases) stay uncompressed."""
+        eligible = [a for a in self.axes if a not in STRUCTURAL_AXES]
+        return len(eligible) <= 1
+
+    def dims_of(self, names: Sequence[str]) -> Tuple[int, ...]:
+        """Resolve logical axis names to positional dims for this tensor."""
+        return tuple(i for i, a in enumerate(self.axes) if a in set(names))
+
+    def candidate_ks(self) -> Mapping[str, Tuple[str, ...]]:
+        """Compression-candidate axis sets, keyed by the paper's K labels."""
+        out: dict[str, Tuple[str, ...]] = {}
+        if self.is_vector_like:
+            return out
+        if self.fan_in:
+            out["fan_in"] = tuple(self.fan_in)
+        if self.fan_out:
+            out["fan_out"] = tuple(self.fan_out)
+        if self.fan_in and self.fan_out:
+            out["both"] = tuple(self.fan_in) + tuple(self.fan_out)
+        return out
+
+
+def path_str(path) -> str:
+    """Human/regex-friendly rendering of a jax key path."""
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+def flatten_with_names(tree: Any):
+    """[(name, leaf)] with dotted path names, plus the treedef."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(p), v) for p, v in leaves], treedef
+
+
+def validate_meta(params: Any, meta: Any) -> None:
+    """Check the metadata tree matches the parameter tree leaf-for-leaf."""
+    p_named, p_def = flatten_with_names(params)
+    m_named, m_def = flatten_with_names(meta)
+    # Meta leaves are dataclasses -> treated as leaves only if registered;
+    # ParamMeta is a frozen dataclass, not a pytree, so it is a leaf. Compare
+    # structure by names.
+    p_names = [n for n, _ in p_named]
+    m_names = [n for n, _ in m_named]
+    if p_names != m_names:
+        missing = set(p_names) ^ set(m_names)
+        raise ValueError(f"param/meta tree mismatch; differing leaves: {sorted(missing)[:10]}")
+    for (name, p), (_, m) in zip(p_named, m_named):
+        if not isinstance(m, ParamMeta):
+            raise TypeError(f"{name}: meta leaf is {type(m)}, want ParamMeta")
+        if len(m.axes) != p.ndim:
+            raise ValueError(f"{name}: meta axes {m.axes} vs param ndim {p.ndim} (shape {p.shape})")

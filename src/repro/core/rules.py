@@ -1,0 +1,161 @@
+"""Compression-rule derivation (paper §5: "DIY: Build Your Own Low-Memory Adam").
+
+A *rule* for one parameter is either ``None`` (keep full per-parameter second
+moments — plain Adam for that tensor) or a tuple of logical axis names to
+average the squared gradients over (stored reduced along those axes).
+
+Two ways to obtain rules:
+  * :func:`derive_rules` — from a measured time-averaged SNR dict (the paper's
+    prescription: compress along the argmax-SNR candidate iff it clears a
+    cutoff; vector-like tensors always stay uncompressed);
+  * :func:`table3_rules` — the paper's Table 3 "recommended" static rules, the
+    transferable defaults users apply without running their own SNR pass.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .labels import ParamMeta, flatten_with_names
+
+Rule = Optional[Tuple[str, ...]]
+
+DEFAULT_CUTOFF = 1.0  # SNR >~ 1 <=> signal dominates noise (paper §3)
+
+
+def derive_rules(
+    avg_snr: Mapping[str, Mapping[str, float]],
+    meta: Any,
+    *,
+    cutoff: float = DEFAULT_CUTOFF,
+) -> Dict[str, Rule]:
+    """SNR-guided rules: argmax-SNR candidate if it exceeds ``cutoff``.
+
+    ``avg_snr`` is ``SNRTracker.averaged()``; keys are dotted param names.
+    Scan-stacked tensors carry one SNR per candidate (depth-averaged), which
+    the paper shows performs identically to per-layer rules (Fig. 30).
+    """
+    meta_named, _ = flatten_with_names(meta)
+    meta_by_name = dict(meta_named)
+    rules: Dict[str, Rule] = {}
+    for name, m in meta_by_name.items():
+        cands = m.candidate_ks()
+        if not cands:  # vector-like: paper leaves uncompressed
+            rules[name] = None
+            continue
+        scores = avg_snr.get(name, {})
+        best_label, best_val = None, -np.inf
+        for label, axes in cands.items():
+            v = float(scores.get(label, -np.inf))
+            if v > best_val:
+                best_label, best_val = label, v
+        if best_label is not None and best_val >= cutoff:
+            rules[name] = cands[best_label]
+        else:
+            rules[name] = None
+    return rules
+
+
+# Paper Table 3 (recommended compression dimensions per layer role). Values
+# are 'fan_in' / 'fan_out' / 'both' / None, resolved per-tensor via the meta's
+# candidate sets. Roles absent from the table fall back to ``default``.
+_TABLE3: Dict[str, Optional[str]] = {
+    "attn_q": "fan_in",
+    "attn_k": "fan_in",
+    "attn_v": "fan_out",
+    "attn_o": "fan_out",
+    "mlp_up": "fan_out",
+    "mlp_gate": "fan_out",
+    "mlp_down": "fan_out",
+    # Token embedding: compress the embedding dim, never the token dim. In the
+    # paper's W:fan_in->fan_out convention the embedding dim is the embedding
+    # layer's fan_out and the LM head's fan_in; our metas encode exactly that.
+    "token_embedding": "fan_out",
+    "lm_head": "fan_in",
+    "patch_embed": "fan_in",
+    "head": "fan_in",
+    # ResNet convs: §3.1.3 shows intermediate convs compress along both dims;
+    # fan_in is the conservative default (first-layer-safe per Table 3)
+    "conv": "fan_in",
+    "norm": None,           # paper: LayerNorm moments are compression-averse
+    "bias": None,
+    "attn_qkv_bias": None,
+    "pos_embedding": None,
+    "moe_router": None,     # vector-like per expert; negligible memory
+    # SSM family: no paper prior; defaults mirror the MLP findings (in-proj ~
+    # up-proj -> fan_out; out-proj ~ down-proj -> fan_out). Scalar-ish SSM
+    # params (A_log, D, dt bias, conv) stay uncompressed: vector-like.
+    "ssm_in": "fan_out",
+    "ssm_out": "fan_out",
+    "ssm_x": "fan_in",
+    "ssm_dt": "fan_in",
+    "ssm_conv": None,
+    "ssm_a": None,
+    "ssm_d": None,
+    "frontend": None,
+}
+
+
+def table3_rules(meta: Any, *, overrides: Optional[Mapping[str, Optional[str]]] = None) -> Dict[str, Rule]:
+    """Static rules from paper Table 3, keyed by dotted param name."""
+    table = dict(_TABLE3)
+    if overrides:
+        table.update(overrides)
+    meta_named, _ = flatten_with_names(meta)
+    rules: Dict[str, Rule] = {}
+    for name, m in meta_named:
+        cands = m.candidate_ks()
+        label = table.get(m.role)
+        if not cands or label is None:
+            rules[name] = None
+        elif label in cands:
+            rules[name] = cands[label]
+        else:  # e.g. a tensor with only fan_in candidates asked for fan_out
+            rules[name] = None
+    return rules
+
+
+def rules_to_dims(rules: Mapping[str, Rule], meta: Any) -> Dict[str, Tuple[int, ...]]:
+    """Resolve logical-axis rules to positional reduction dims per param."""
+    meta_named, _ = flatten_with_names(meta)
+    out: Dict[str, Tuple[int, ...]] = {}
+    for name, m in meta_named:
+        r = rules.get(name)
+        out[name] = m.dims_of(r) if r else ()
+    return out
+
+
+def rules_as_tree(rules: Mapping[str, Rule], params: Any, meta: Any) -> Any:
+    """Rebuild a pytree (same structure as params) of positional-dim tuples."""
+    dims = rules_to_dims(rules, meta)
+    named, treedef = flatten_with_names(params)
+    leaves = [dims[name] for name, _ in named]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def second_moment_savings(params: Any, meta: Any, rules: Mapping[str, Rule]) -> Dict[str, float]:
+    """Fraction of Adam's second-moment entries eliminated (paper Fig. 10 top)."""
+    named, _ = flatten_with_names(params)
+    meta_named, _ = flatten_with_names(meta)
+    total = 0
+    kept = 0
+    for (name, p), (_, m) in zip(named, meta_named):
+        n = int(np.prod(p.shape)) if p.shape else 1
+        total += n
+        r = rules.get(name)
+        if not r:
+            kept += n
+            continue
+        dims = set(m.dims_of(r))
+        k = 1
+        for i, s in enumerate(p.shape):
+            if i not in dims:
+                k *= s
+        kept += k
+    return {
+        "total_second_moments": float(total),
+        "stored_second_moments": float(kept),
+        "saved_fraction": 1.0 - kept / max(total, 1),
+    }

@@ -1,0 +1,134 @@
+"""Layer-wise SNR analysis of Adam's second moments (paper Eq. 3-4).
+
+For a second-moment tensor V and compression dims K:
+
+    SNR_K(V) = E_{K'}[ (E_K[V])^2 / Var_K[V] ]
+
+where the inner mean/variance run over K and the outer expectation averages
+the ratio over every remaining dim K'. ``SNR_K >~ 1`` means the entries along
+K are well represented by their mean -> compressible.
+
+This module is pure-jnp and jit-safe; :class:`SNRTracker` accumulates the
+paper's time-averaged SNR (Eq. 4) across measurement steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .labels import ParamMeta, STRUCTURAL_AXES, flatten_with_names
+
+_VAR_EPS = 1e-30  # guards 0/0 for exactly-constant slices; SNR -> huge (compressible)
+
+
+def snr_along_dims(v: jnp.ndarray, dims: Tuple[int, ...], *, per_remaining_dim: Optional[int] = None) -> jnp.ndarray:
+    """SNR_K for positional reduction dims.
+
+    Returns a scalar, or — when ``per_remaining_dim`` names a remaining dim —
+    a vector over that dim (used for per-depth curves on scan-stacked params).
+    """
+    if not dims:
+        raise ValueError("K must be non-empty for SNR; K=None means 'no compression'")
+    v = v.astype(jnp.float32)
+    mean = jnp.mean(v, axis=dims, keepdims=True)
+    var = jnp.mean(jnp.square(v - mean), axis=dims, keepdims=True)
+    ratio = jnp.square(mean) / (var + _VAR_EPS)
+    ratio = jnp.squeeze(ratio, axis=dims)
+    if per_remaining_dim is None:
+        return jnp.mean(ratio)
+    # Map the original dim index to its index after squeezing K dims.
+    kept = [d for d in range(v.ndim) if d not in dims]
+    if per_remaining_dim not in kept:
+        raise ValueError(f"dim {per_remaining_dim} was reduced by K={dims}")
+    axis_after = kept.index(per_remaining_dim)
+    other = tuple(i for i in range(ratio.ndim) if i != axis_after)
+    return jnp.mean(ratio, axis=other)
+
+
+def measure_leaf_snr(v: jnp.ndarray, meta: ParamMeta) -> Dict[str, jnp.ndarray]:
+    """Scalar SNR per candidate K ('fan_in'/'fan_out'/'both') for one tensor."""
+    out: Dict[str, jnp.ndarray] = {}
+    for label, axis_names in meta.candidate_ks().items():
+        dims = meta.dims_of(axis_names)
+        out[label] = snr_along_dims(v, dims)
+    return out
+
+
+def measure_leaf_snr_per_layer(v: jnp.ndarray, meta: ParamMeta) -> Dict[str, jnp.ndarray]:
+    """Per-depth SNR vectors for scan-stacked tensors (axis 'layers')."""
+    if "layers" not in meta.axes:
+        return measure_leaf_snr(v, meta)
+    layer_dim = meta.axes.index("layers")
+    out: Dict[str, jnp.ndarray] = {}
+    for label, axis_names in meta.candidate_ks().items():
+        dims = meta.dims_of(axis_names)
+        out[label] = snr_along_dims(v, dims, per_remaining_dim=layer_dim)
+    return out
+
+
+def measure_tree_snr(nu: Any, meta: Any) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """{param_name: {K_label: snr}} over a whole second-moment pytree.
+
+    Leaves whose meta marks them vector-like produce an empty dict (the paper
+    never compresses them).
+    """
+    nu_named, _ = flatten_with_names(nu)
+    meta_named, _ = flatten_with_names(meta)
+    out: Dict[str, Dict[str, jnp.ndarray]] = {}
+    for (name, v), (_, m) in zip(nu_named, meta_named):
+        out[name] = measure_leaf_snr(v, m)
+    return out
+
+
+@dataclasses.dataclass
+class SNRTracker:
+    """Accumulates time-averaged SNR (paper Eq. 4) plus full trajectories.
+
+    The paper measures every 100 steps for the first 1000 steps, then every
+    1000 steps; ``should_measure`` implements that cadence.
+    """
+
+    sums: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    count: int = 0
+    trajectory: Dict[str, Dict[str, list]] = dataclasses.field(default_factory=dict)
+    steps: list = dataclasses.field(default_factory=list)
+
+    @staticmethod
+    def should_measure(step: int, early_every: int = 100, late_every: int = 1000, early_until: int = 1000) -> bool:
+        if step <= early_until:
+            return step % early_every == 0
+        return step % late_every == 0
+
+    def update(self, snr_by_param: Mapping[str, Mapping[str, jnp.ndarray]], step: int) -> None:
+        self.count += 1
+        self.steps.append(int(step))
+        for pname, by_k in snr_by_param.items():
+            psum = self.sums.setdefault(pname, {})
+            ptraj = self.trajectory.setdefault(pname, {})
+            for k, v in by_k.items():
+                val = float(v)
+                psum[k] = psum.get(k, 0.0) + val
+                ptraj.setdefault(k, []).append(val)
+
+    def averaged(self) -> Dict[str, Dict[str, float]]:
+        """E_t[SNR_K] per parameter per candidate K."""
+        if self.count == 0:
+            return {}
+        return {p: {k: s / self.count for k, s in by_k.items()} for p, by_k in self.sums.items()}
+
+
+def compression_ratio(meta: ParamMeta, shape: Sequence[int], k_axes: Optional[Tuple[str, ...]]) -> float:
+    """Stored-elements fraction for a given compression choice (1.0 = Adam)."""
+    if not k_axes:
+        return 1.0
+    dims = set(meta.dims_of(k_axes))
+    kept = 1
+    total = 1
+    for i, s in enumerate(shape):
+        total *= s
+        if i not in dims:
+            kept *= s
+    return kept / total

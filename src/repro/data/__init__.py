@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, ZipfLM, linear_model_batches
+
+__all__ = ["DataConfig", "ZipfLM", "linear_model_batches"]

@@ -1,0 +1,4 @@
+from .ops import fused_adam_op, slim_update_op, snr_op
+from . import ref
+
+__all__ = ["fused_adam_op", "slim_update_op", "snr_op", "ref"]

@@ -1,0 +1,73 @@
+"""Fused dense AdamW update — Pallas TPU kernel.
+
+The optimizer step is pure HBM bandwidth: XLA:CPU materializes ~9 fp32
+temporaries per tensor (measured in the dry-run buffer dump: 6-9 copies of
+each (95, 512, 1376) stacked moment). This kernel streams each tile of
+(p, g, m, v) through VMEM exactly once and writes (p', m', v') — 7 tensor
+passes total, the bandwidth floor for Adam.
+
+Grid: (rows/TR, cols/TC) tiles; every operand uses the same BlockSpec, so
+the working set is 7 * TR * TC * 4 B (fp32) — TR=256, TC=512 -> 3.5 MiB,
+comfortably inside the ~16 MiB VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
+                 p_out, m_out, v_out, *, b1: float, b2: float, eps: float, wd: float):
+    lr = scal_ref[0]
+    bc1 = scal_ref[1]
+    bc2 = scal_ref[2]
+    g = g_ref[...].astype(jnp.float32)
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    if wd:
+        update = update + wd * p_ref[...].astype(jnp.float32)
+    p_out[...] = (p_ref[...].astype(jnp.float32) - lr * update).astype(p_out.dtype)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def fused_adam(p, g, m, v, *, lr: float, b1: float = 0.9, b2: float = 0.95,
+               eps: float = 1e-8, wd: float = 0.0, count: int = 1,
+               block: tuple = (256, 512), interpret: bool = True):
+    """p, g: (R, C) any float dtype; m, v: (R, C) fp32. Returns (p', m', v')."""
+    r, c = p.shape
+    tr = min(block[0], r)
+    tc = min(block[1], c)
+    if r % tr or c % tc:
+        # pad to tile multiples (pallas grids need exact tiling)
+        rp, cp = -(-r // tr) * tr, -(-c // tc) * tc
+        pad = lambda x: jnp.pad(x, ((0, rp - r), (0, cp - c)))
+        p2, g2, m2, v2 = pad(p), pad(g), pad(m), pad(v)
+        po, mo, vo = fused_adam(p2, g2, m2, v2, lr=lr, b1=b1, b2=b2, eps=eps,
+                                wd=wd, count=count, block=block, interpret=interpret)
+        return po[:r, :c], mo[:r, :c], vo[:r, :c]
+
+    bc1 = 1.0 - b1 ** count
+    bc2 = 1.0 - b2 ** count
+    scal = jnp.array([lr, bc1, bc2], jnp.float32)
+
+    spec = pl.BlockSpec((tr, tc), lambda i, j: (i, j))
+    grid = (r // tr, c // tc)
+    kernel = functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps, wd=wd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((3,), lambda i, j: (0,))],
+        out_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j))] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), p.dtype),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(p, g, m, v, scal)

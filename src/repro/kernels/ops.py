@@ -1,0 +1,55 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``slim_update_any_axis`` generalizes the fan_in kernel to fan_out compression
+by transposing at the boundary (XLA fuses the transpose into the surrounding
+copy; on TPU the kernel itself always reduces along the minor axis, which is
+the lane-friendly direction).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .fused_adam import fused_adam
+from .slim_update import slim_update
+from .snr_stats import snr_stats
+from .ref import snr_from_stats
+
+__all__ = ["fused_adam_op", "slim_update_op", "snr_op", "fused_adam", "slim_update", "snr_stats"]
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "wd", "count", "interpret"))
+def fused_adam_op(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.0, count=1,
+                  interpret=True):
+    shape = p.shape
+    p2 = p.reshape(-1, shape[-1]) if p.ndim != 2 else p
+    g2 = g.reshape(p2.shape)
+    m2 = m.reshape(p2.shape)
+    v2 = v.reshape(p2.shape)
+    po, mo, vo = fused_adam(p2, g2, m2, v2, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
+                            count=count, interpret=interpret)
+    return po.reshape(shape), mo.reshape(shape), vo.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "lr", "b1", "b2", "eps", "wd", "count", "interpret"))
+def slim_update_op(p, g, m, v_red, *, axis: int, lr, b1=0.9, b2=0.95, eps=1e-8,
+                   wd=0.0, count=1, interpret=True):
+    """2-D params; ``axis`` is the compressed (reduced) dim. v_red keeps the
+    reduced dim as size 1 (matching repro.core.slim_adam state layout)."""
+    assert p.ndim == 2 and axis in (0, 1)
+    if axis == 0:
+        po, mo, vo = slim_update(p.T, g.T, m.T, v_red.T, lr=lr, b1=b1, b2=b2,
+                                 eps=eps, wd=wd, count=count, interpret=interpret)
+        return po.T, mo.T, vo.T
+    return slim_update(p, g, m, v_red, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
+                       count=count, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def snr_op(v, *, interpret=True) -> jnp.ndarray:
+    """Scalar SNR along axis=1 of a 2-D moment tensor via the fused kernel."""
+    s1, s2 = snr_stats(v, interpret=interpret)
+    return snr_from_stats(s1, s2, v.shape[1])

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Semantics match ``repro.optim.adam`` / ``repro.core.slim_adam`` exactly —
+property tests in tests/test_kernels.py also assert kernel == optimizer-path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_update_ref(p, g, m, v, *, lr: float, b1: float, b2: float, eps: float,
+                    wd: float, count: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Dense fused AdamW step: returns (new_p, new_m, new_v). fp32 state."""
+    g32 = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * g32
+    v_new = b2 * v + (1 - b2) * jnp.square(g32)
+    bc1 = 1.0 - b1 ** count
+    bc2 = 1.0 - b2 ** count
+    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    if wd:
+        update = update + wd * p.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+    return p_new, m_new, v_new
+
+
+def slim_update_ref(p, g, m, v_row, *, lr: float, b1: float, b2: float, eps: float,
+                    wd: float, count: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """SlimAdam step with the second moment compressed along axis=1 (fan_in).
+
+    p, g, m: (R, C); v_row: (R, 1) reduced second moment.
+    V <- b2 V + (1-b2) * mean_C[g^2]  (Eq. 2), broadcast in the preconditioner.
+    """
+    g32 = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * g32
+    ek = jnp.mean(jnp.square(g32), axis=1, keepdims=True)
+    v_new = b2 * v_row + (1 - b2) * ek
+    bc1 = 1.0 - b1 ** count
+    bc2 = 1.0 - b2 ** count
+    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    if wd:
+        update = update + wd * p.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+    return p_new, m_new, v_new
+
+
+def snr_stats_ref(v: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (sum, sum of squares) over axis=1 — the reduction SNR_K needs.
+
+    SNR finalization (mean^2 / var, averaged over rows) is O(R) host math.
+    """
+    v32 = v.astype(jnp.float32)
+    return jnp.sum(v32, axis=1), jnp.sum(jnp.square(v32), axis=1)
+
+
+def snr_from_stats(s1: jnp.ndarray, s2: jnp.ndarray, n: int, eps: float = 1e-30) -> jnp.ndarray:
+    mean = s1 / n
+    var = s2 / n - jnp.square(mean)
+    return jnp.mean(jnp.square(mean) / (jnp.maximum(var, 0.0) + eps))

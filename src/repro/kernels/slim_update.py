@@ -1,0 +1,73 @@
+"""Fused SlimAdam update (fan_in-compressed second moment) — Pallas TPU kernel.
+
+The paper's memory saving becomes a *bandwidth* saving here: the second
+moment is (R, 1) instead of (R, C), so one optimizer step streams
+p, g, m (read) + p', m' (write) + O(R) for V — 5 tensor passes vs dense
+Adam's 7, and the squared gradient / E_K[g^2] reduction never touches HBM.
+
+Layout: grid over row tiles only; each kernel instance holds a full
+(TR, C) row strip of p/g/m in VMEM (fan_in up to 22k fits at TR<=32 in
+fp32), computes the row mean of g^2 on the VPU, updates the reduced moment,
+and applies the preconditioned update in the same pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _slim_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
+                 p_out, m_out, v_out, *, b1: float, b2: float, eps: float,
+                 wd: float, n_cols: int):
+    lr = scal_ref[0]
+    bc1 = scal_ref[1]
+    bc2 = scal_ref[2]
+    g = g_ref[...].astype(jnp.float32)                   # (TR, C)
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    ek = jnp.sum(g * g, axis=1, keepdims=True) * (1.0 / n_cols)
+    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # (TR, 1)
+    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    if wd:
+        update = update + wd * p_ref[...].astype(jnp.float32)
+    p_out[...] = (p_ref[...].astype(jnp.float32) - lr * update).astype(p_out.dtype)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def slim_update(p, g, m, v_row, *, lr: float, b1: float = 0.9, b2: float = 0.95,
+                eps: float = 1e-8, wd: float = 0.0, count: int = 1,
+                row_block: int = 32, interpret: bool = True):
+    """p, g, m: (R, C); v_row: (R, 1) fp32 reduced moment. Returns (p', m', v')."""
+    r, c = p.shape
+    tr = min(row_block, r)
+    if r % tr:
+        rp = -(-r // tr) * tr
+        pad2 = lambda x: jnp.pad(x, ((0, rp - r), (0, 0)))
+        po, mo, vo = slim_update(pad2(p), pad2(g), pad2(m), pad2(v_row), lr=lr, b1=b1,
+                                 b2=b2, eps=eps, wd=wd, count=count,
+                                 row_block=row_block, interpret=interpret)
+        return po[:r], mo[:r], vo[:r]
+
+    bc1 = 1.0 - b1 ** count
+    bc2 = 1.0 - b2 ** count
+    scal = jnp.array([lr, bc1, bc2], jnp.float32)
+
+    strip = pl.BlockSpec((tr, c), lambda i: (i, 0))
+    vspec = pl.BlockSpec((tr, 1), lambda i: (i, 0))
+    kernel = functools.partial(_slim_kernel, b1=b1, b2=b2, eps=eps, wd=wd, n_cols=c)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // tr,),
+        in_specs=[strip, strip, strip, vspec, pl.BlockSpec((3,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0)),
+                   pl.BlockSpec((tr, c), lambda i: (i, 0)), vspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), p.dtype),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(p, g, m, v_row, scal)

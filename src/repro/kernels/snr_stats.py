@@ -1,0 +1,38 @@
+"""Per-row (sum, sum-sq) reduction for the SNR analysis — Pallas TPU kernel.
+
+SNR_K(V) needs mean and variance along K; a single fused pass computes both
+first moments of V per row, so the measurement adds one read of V (and O(R)
+writes) to a training step instead of XLA's separate mean/var reductions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _snr_kernel(v_ref, s1_out, s2_out):
+    v = v_ref[...].astype(jnp.float32)        # (TR, C)
+    s1_out[...] = jnp.sum(v, axis=1)
+    s2_out[...] = jnp.sum(v * v, axis=1)
+
+
+def snr_stats(v, *, row_block: int = 64, interpret: bool = True):
+    """v: (R, C) -> (row_sum (R,), row_sumsq (R,))."""
+    r, c = v.shape
+    tr = min(row_block, r)
+    if r % tr:
+        rp = -(-r // tr) * tr
+        s1, s2 = snr_stats(jnp.pad(v, ((0, rp - r), (0, 0))), row_block=row_block,
+                           interpret=interpret)
+        return s1[:r], s2[:r]
+    return pl.pallas_call(
+        _snr_kernel,
+        grid=(r // tr,),
+        in_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tr,), lambda i: (i,)),
+                   pl.BlockSpec((tr,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((r,), jnp.float32),
+                   jax.ShapeDtypeStruct((r,), jnp.float32)],
+        interpret=interpret,
+    )(v)

@@ -1,0 +1,295 @@
+"""Loop-aware roofline accounting from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits each instruction exactly once, so a model
+that scans over layers under-reports FLOPs/bytes/collectives by ~n_layers
+(verified empirically: scan of 10 matmuls reports 1 matmul of flops). This
+module re-derives the roofline terms from ``compiled.as_text()`` with
+while-loop multiplicities:
+
+  * build the computation call graph (entry -> while bodies/conditions,
+    fusions, custom-calls);
+  * recover each while's trip count from its condition computation
+    (``compare(counter, constant), direction=LT`` pattern XLA emits for
+    counted loops — i.e. every lax.scan);
+  * walk with multiplicity, accumulating
+      - dot FLOPs (2 * prod(result dims) * prod(contracting dims)),
+      - per-type collective bytes (operand bytes of all-reduce / all-gather /
+        reduce-scatter / all-to-all / collective-permute, async -start forms),
+      - HBM traffic proxy: Σ (operand + output bytes) of top-level
+        (non-fusion-internal) instructions — an upper bound that ignores
+        on-chip reuse within a fusion but counts each fusion's boundary
+        traffic once, which is how TPUs actually stream HBM.
+
+All quantities are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _balanced_end(s: str, start: int) -> int:
+    """Index one past the ')' matching the '(' at ``start`` (-1 if none)."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return -1
+
+
+def _split_instruction(line: str):
+    """'%n = TYPE opcode(operands), attrs' -> (name, type, opcode, operands, attrs).
+
+    Regex alone fails here: tuple types start with '(' and metadata strings
+    contain parens (op_name="jit(f)/..."), so operands are extracted with a
+    balanced-paren scan."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2).strip()
+    if rest.startswith("("):
+        end = _balanced_end(rest, 0)
+        if end < 0:
+            return None
+        type_str, rest2 = rest[:end], rest[end:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest2 = rest[:sp], rest[sp + 1:].strip()
+    m2 = _OPCODE_RE.match(rest2)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    op_end = _balanced_end(rest2, m2.end() - 1)
+    if op_end < 0:
+        return None
+    operands = rest2[m2.end(): op_end - 1]
+    attrs = rest2[op_end:]
+    return name, type_str, opcode, operands, attrs
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a result type (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    operands_str: str
+    attrs: str
+
+    def operand_names(self) -> List[str]:
+        # operands are %name or name tokens before any nested parens end
+        names = []
+        for tok in re.findall(r"%?([\w.\-]+)", self.operands_str):
+            names.append(tok)
+        return names
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instructions: List[Instruction]
+    by_name: Dict[str, Instruction]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip()) if "{" in line else None
+            if m and "->" in line:
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)), instructions=[], by_name={})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parts = _split_instruction(line)
+        if parts:
+            inst = Instruction(
+                name=parts[0], type_str=parts[1], opcode=parts[2],
+                operands_str=parts[3], attrs=parts[4],
+            )
+            cur.instructions.append(inst)
+            cur.by_name[inst.name] = inst
+    return comps
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Recover the counted-loop bound from a while condition computation."""
+    # the compare usually lives inside a wrapped fusion; the bound constant is
+    # materialized at the condition's top level: %constant.4 = s32[] constant(7)
+    consts = []
+    for inst in cond.instructions:
+        if inst.opcode == "constant" and inst.type_str.strip().startswith("s32"):
+            if inst.operands_str.strip().isdigit():
+                consts.append(int(inst.operands_str.strip()))
+    if len(consts) == 1:
+        return consts[0]
+    return None
+
+
+def _dot_flops(inst: Instruction, comp: Computation) -> float:
+    """2 * prod(result) * prod(contracting dims)."""
+    out_dims = _result_dims(inst.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs)
+    lhs_name = inst.operand_names()[0] if inst.operand_names() else None
+    lhs = comp.by_name.get(lhs_name)
+    contract = 1
+    if m and m.group(1):
+        cdims = [int(d) for d in m.group(1).split(",")]
+        if lhs is not None:
+            ldims = _result_dims(lhs.type_str)
+            for d in cdims:
+                if d < len(ldims):
+                    contract *= ldims[d]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2.0 * out * contract
+
+
+@dataclasses.dataclass
+class HLOStats:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    unresolved_loops: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast", "copy",
+    "while", "call", "conditional", "after-all", "partition-id", "replica-id",
+}
+
+
+def analyze(text: str, *, default_trip: int = 1) -> HLOStats:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    stats = HLOStats()
+    fusion_callees: set = set()
+    # computations referenced as fusion `calls=` are internal: their traffic
+    # is represented by the fusion boundary.
+    for comp in comps.values():
+        for inst in comp.instructions:
+            if inst.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", inst.attrs)
+                if m:
+                    fusion_callees.add(m.group(1))
+
+    def op_bytes(inst: Instruction, comp: Computation) -> float:
+        total = _shape_bytes(inst.type_str)
+        for op in inst.operand_names():
+            src = comp.by_name.get(op)
+            if src is not None:
+                total += _shape_bytes(src.type_str)
+        return total
+
+    def walk(comp: Computation, mult: float, visited: Tuple[str, ...]):
+        for inst in comp.instructions:
+            if inst.opcode == "while":
+                m_body = re.search(r"body=%?([\w.\-]+)", inst.attrs)
+                m_cond = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+                trips = None
+                # XLA annotates counted loops directly:
+                #   backend_config={"known_trip_count":{"n":"7"}, ...}
+                m_trip = re.search(r'known_trip_count\D*(\d+)', inst.attrs)
+                if m_trip:
+                    trips = int(m_trip.group(1))
+                if trips is None and m_cond and m_cond.group(1) in comps:
+                    trips = _trip_count(comps[m_cond.group(1)])
+                if trips is None:
+                    trips = default_trip
+                    stats.unresolved_loops += 1
+                if m_body and m_body.group(1) in comps and m_body.group(1) not in visited:
+                    walk(comps[m_body.group(1)], mult * trips, visited + (m_body.group(1),))
+                continue
+            if inst.opcode in ("call", "conditional"):
+                for m in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)", inst.attrs):
+                    callee = m.group(1)
+                    if callee in comps and callee not in visited:
+                        walk(comps[callee], mult, visited + (callee,))
+                continue
+            # fusions: walk inside for dot flops only (traffic from boundary)
+            if inst.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", inst.attrs)
+                if m and m.group(1) in comps:
+                    callee = comps[m.group(1)]
+                    for fin in callee.instructions:
+                        if fin.opcode in ("dot", "dot-general"):
+                            stats.dot_flops += mult * _dot_flops(fin, callee)
+                stats.traffic_bytes += mult * op_bytes(inst, comp)
+                continue
+            if inst.opcode in ("dot", "dot-general"):
+                stats.dot_flops += mult * _dot_flops(inst, comp)
+            base = inst.opcode.replace("-start", "")
+            if base in COLLECTIVE_OPS and not inst.opcode.endswith("-done"):
+                b = 0.0
+                for op in inst.operand_names():
+                    src = comp.by_name.get(op)
+                    if src is not None:
+                        b += _shape_bytes(src.type_str)
+                if b == 0.0:  # operand defined in another computation (rare)
+                    b = _shape_bytes(inst.type_str)
+                stats.collective_bytes[base] = stats.collective_bytes.get(base, 0.0) + mult * b
+                stats.collective_count[base] = stats.collective_count.get(base, 0) + int(mult)
+            if inst.opcode not in _SKIP_TRAFFIC:
+                stats.traffic_bytes += mult * op_bytes(inst, comp)
+
+    walk(entry, 1.0, (entry.name,))
+    return stats

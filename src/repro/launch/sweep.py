@@ -1,0 +1,95 @@
+"""Run the full dry-run matrix: every (arch x shape x mesh) cell in a fresh
+subprocess (isolates the 512-device jax runtime + compilation caches).
+
+    PYTHONPATH=src python -m repro.launch.sweep [--mesh single multi] [--archs ...]
+
+Writes one JSON per cell to benchmarks/results/dryrun/ and a summary CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from ..configs import ARCH_IDS, SHAPES, cell_supported
+from .dryrun import RESULTS_DIR
+
+ASSIGNED = tuple(a for a in ARCH_IDS if a not in ("gpt_small", "gpt_medium", "vit_small"))
+
+
+def run_one(arch: str, shape: str, mesh: str, optimizer: str, timeout: int = 900) -> dict:
+    ok, reason = cell_supported(arch, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh, "status": "skipped", "reason": reason}
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        (RESULTS_DIR / f"{arch}__{shape}__{mesh}.json").write_text(json.dumps(rec, indent=2))
+        return rec
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch, "--shape", shape,
+           "--mesh", mesh, "--optimizer", optimizer]
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout)
+    except subprocess.TimeoutExpired:
+        return {"arch": arch, "shape": shape, "mesh": mesh, "status": "timeout"}
+    if proc.returncode != 0:
+        return {"arch": arch, "shape": shape, "mesh": mesh, "status": "error",
+                "stderr": proc.stderr[-2000:]}
+    out = proc.stdout
+    try:
+        rec = json.loads(out[out.index("{"):])
+    except Exception:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh, "status": "parse_error",
+               "stdout": out[-2000:]}
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"])
+    ap.add_argument("--archs", nargs="+", default=list(ASSIGNED))
+    ap.add_argument("--shapes", nargs="+", default=list(SHAPES))
+    ap.add_argument("--optimizer", default="slim")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for mesh in args.mesh:
+        for arch in args.archs:
+            for shape in args.shapes:
+                rec = run_one(arch, shape, mesh, args.optimizer)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    temp = rec.get("mem_temp_size_in_bytes", 0) / 2**30
+                    dom = rec.get("roofline", {}).get("dominant", "?")
+                    extra = f"temp={temp:.1f}GiB fits={rec.get('fits_hbm')} dom={dom} compile={rec.get('compile_s')}s"
+                elif status == "error":
+                    extra = rec.get("stderr", "")[-200:].replace("\n", " ")
+                print(f"[{mesh}] {arch:20s} {shape:12s} {status:8s} {extra}", flush=True)
+                rows.append({
+                    "mesh": mesh, "arch": arch, "shape": shape, "status": status,
+                    "fits": rec.get("fits_hbm"), "grad_accum": rec.get("grad_accum"),
+                    "temp_gib": round(rec.get("mem_temp_size_in_bytes", 0) / 2**30, 2),
+                    "dominant": rec.get("roofline", {}).get("dominant"),
+                    "compute_s": rec.get("roofline", {}).get("compute_s"),
+                    "memory_s": rec.get("roofline", {}).get("memory_s"),
+                    "collective_s": rec.get("roofline", {}).get("collective_s"),
+                    "useful_ratio": rec.get("useful_flops_ratio"),
+                    "roofline_fraction": rec.get("roofline_fraction"),
+                })
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS_DIR / "summary.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    n_err = sum(1 for r in rows if r["status"] not in ("ok", "skipped"))
+    print(f"\n{len(rows)} cells, {n_err} failures -> {RESULTS_DIR}/summary.csv")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

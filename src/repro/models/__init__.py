@@ -1,0 +1,45 @@
+from .common import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    meta_tree,
+    mitchell_residual_init,
+    normal_init,
+    stack_specs,
+    torch_default_init,
+)
+from .transformer import (
+    DecodeCache,
+    LayerSlot,
+    ModelConfig,
+    abstract_decode_cache,
+    decode_step,
+    forward,
+    init_decode_cache,
+)
+from .linear_lm import LinearLMConfig
+from . import attention, linear_lm, mlp_moe, ssm, transformer
+
+__all__ = [
+    "ParamSpec",
+    "abstract_params",
+    "init_params",
+    "meta_tree",
+    "mitchell_residual_init",
+    "normal_init",
+    "stack_specs",
+    "torch_default_init",
+    "DecodeCache",
+    "LayerSlot",
+    "ModelConfig",
+    "abstract_decode_cache",
+    "decode_step",
+    "forward",
+    "init_decode_cache",
+    "LinearLMConfig",
+    "attention",
+    "linear_lm",
+    "mlp_moe",
+    "ssm",
+    "transformer",
+]

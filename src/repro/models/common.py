@@ -1,0 +1,170 @@
+"""Functional module system: parameter specs, initializers, norms, rotary.
+
+No flax in this environment — models are (init, apply) pairs over plain
+nested-dict pytrees. Every parameter is declared via :class:`ParamSpec`,
+which carries the logical axes + paper role that feed ``repro.core`` (rules)
+and ``repro.sharding`` (PartitionSpecs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.labels import ParamMeta
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], jnp.dtype], jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Initializers (paper §4.3: Mitchell vs torch-default matter for SNR)
+# ---------------------------------------------------------------------------
+
+
+def normal_init(std: float = 0.02) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+
+    return init
+
+
+def mitchell_residual_init(std: float, n_layers: int) -> Initializer:
+    """Mitchell init for residual-stream writers: std / sqrt(2 * n_layers)."""
+    scaled = std / math.sqrt(2.0 * max(n_layers, 1))
+    return normal_init(scaled)
+
+
+def torch_default_init() -> Initializer:
+    """PyTorch nn.Linear default: U(-1/sqrt(fan_in), 1/sqrt(fan_in)).
+
+    fan_in is taken as the product of all dims but the last (our matrices are
+    stored (in..., out)).
+    """
+
+    def init(key, shape, dtype):
+        fan_in = int(max(1, math.prod(shape[:-1]))) if len(shape) > 1 else shape[0]
+        bound = 1.0 / math.sqrt(fan_in)
+        return jax.random.uniform(key, shape, minval=-bound, maxval=bound).astype(dtype)
+
+    return init
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def constant_init(v: float) -> Initializer:
+    return lambda key, shape, dtype: jnp.full(shape, v, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Param spec tree -> (params, meta)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    role: str
+    init: Initializer
+    fan_in: Tuple[str, ...] = ()
+    fan_out: Tuple[str, ...] = ()
+    dtype: Any = jnp.float32
+
+    def meta(self) -> ParamMeta:
+        return ParamMeta(axes=self.axes, role=self.role, fan_in=self.fan_in, fan_out=self.fan_out)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree: Any, key: jax.Array) -> Any:
+    """Materialize a params pytree from a ParamSpec pytree (leaf-unique keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    params = [s.init(k, s.shape, s.dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, params)
+
+
+def abstract_params(spec_tree: Any) -> Any:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def meta_tree(spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: s.meta(), spec_tree, is_leaf=_is_spec)
+
+
+def stack_specs(spec_tree: Any, n: int) -> Any:
+    """Prepend a scan-stacked 'layers' axis of size n to every spec."""
+
+    def stack(s: ParamSpec) -> ParamSpec:
+        def init(key, shape, dtype):
+            keys = jax.random.split(key, n)
+            return jnp.stack([s.init(k, s.shape, dtype) for k in keys])
+
+        return ParamSpec(
+            shape=(n,) + s.shape,
+            axes=("layers",) + s.axes,
+            role=s.role,
+            init=init,
+            fan_in=s.fan_in,
+            fan_out=s.fan_out,
+            dtype=s.dtype,
+        )
+
+    return jax.tree.map(stack, spec_tree, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rotary
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: Optional[jnp.ndarray], eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def rotary_embedding(positions: jnp.ndarray, head_dim: int, base: float = 10000.0):
+    """Returns (sin, cos) of shape (..., head_dim/2)."""
+    inv_freq = 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., hd/2)
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rotary(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D); sin/cos: (S, D/2) broadcast over batch/heads."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    sin = sin[..., :, None, :]  # (S, 1, D/2)
+    cos = cos[..., :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)

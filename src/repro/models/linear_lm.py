@@ -1,0 +1,47 @@
+"""Two-layer linear LM (paper §4.1 / App. B.2): embedding + linear head.
+
+Used for the vocabulary-size / heavy-tail compressibility experiment: the
+smallest model where the token-dimension incompressibility mechanism shows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, abstract_params, init_params, meta_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearLMConfig:
+    vocab_size: int
+    d_model: int = 768
+
+    def specs(self):
+        def embed_init(key, shape, dtype):
+            return jax.random.truncated_normal(key, -2.0, 2.0, shape).astype(dtype)
+
+        def head_init(key, shape, dtype):
+            std = shape[0] ** -0.5
+            return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+        return {
+            "embed": ParamSpec((self.vocab_size, self.d_model), ("vocab", "embed"),
+                               "token_embedding", embed_init,
+                               fan_in=("vocab",), fan_out=("embed",)),
+            "head": ParamSpec((self.d_model, self.vocab_size), ("embed", "vocab"),
+                              "lm_head", head_init,
+                              fan_in=("embed",), fan_out=("vocab",)),
+        }
+
+    def init(self, key):
+        spec = self.specs()
+        return init_params(spec, key), meta_tree(spec)
+
+
+def forward(cfg: LinearLMConfig, params, batch: Dict[str, jnp.ndarray]):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return logits, jnp.zeros((), jnp.float32)

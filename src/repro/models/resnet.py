@@ -1,0 +1,112 @@
+"""ResNet-18 (CIFAR variant) in pure JAX — the paper's §3.1.3 regime.
+
+The paper's most compressible setting: ResNets show high SNR across both
+fan_in and fan_out almost everywhere (Fig. 5), with the first conv resisting
+fan_out compression and the classifier hovering at SNR ~ 1. This module lets
+``benchmarks/resnet_snr.py`` reproduce that ordering.
+
+Conv kernels are stored (kh, kw, cin, cout) with fan_in = (kh, kw, cin) —
+the paper's W ∈ R^{fan_out × fan_in·k²} view. BatchNorm uses per-batch
+statistics (training mode; running stats are irrelevant to the SNR study).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, init_params, meta_tree, normal_init, ones_init, zeros_init
+
+
+def _conv_spec(kh, kw, cin, cout, role="conv"):
+    def he_init(key, shape, dtype):
+        fan_in = shape[0] * shape[1] * shape[2]
+        std = (2.0 / fan_in) ** 0.5
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+
+    return ParamSpec((kh, kw, cin, cout), ("kh", "kw", "cin", "cout"), role,
+                     he_init, fan_in=("kh", "kw", "cin"), fan_out=("cout",))
+
+
+def _bn_specs(c):
+    return {
+        "scale": ParamSpec((c,), ("cout",), "norm", ones_init()),
+        "bias": ParamSpec((c,), ("cout",), "bias", zeros_init()),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    stages: Tuple[int, ...] = (2, 2, 2, 2)   # ResNet-18
+    width: int = 64
+    classes: int = 100
+    in_channels: int = 3
+
+    def specs(self) -> Dict[str, Any]:
+        w = self.width
+        specs: Dict[str, Any] = {
+            "stem": {"conv": _conv_spec(3, 3, self.in_channels, w), "bn": _bn_specs(w)},
+        }
+        cin = w
+        for si, n_blocks in enumerate(self.stages):
+            cout = w * (2 ** si)
+            for bi in range(n_blocks):
+                block: Dict[str, Any] = {
+                    "conv1": _conv_spec(3, 3, cin, cout), "bn1": _bn_specs(cout),
+                    "conv2": _conv_spec(3, 3, cout, cout), "bn2": _bn_specs(cout),
+                }
+                if cin != cout:
+                    block["proj"] = _conv_spec(1, 1, cin, cout)
+                specs[f"stage{si}_block{bi}"] = block
+                cin = cout
+        specs["head"] = ParamSpec((cin, self.classes), ("cin", "vocab"), "head",
+                                  normal_init(0.01), fan_in=("cin",), fan_out=("vocab",))
+        return specs
+
+    def init(self, key):
+        spec = self.specs()
+        return init_params(spec, key), meta_tree(spec)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(x, p, eps=1e-5):
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * p["scale"] + p["bias"]
+
+
+def forward(cfg: ResNetConfig, params, batch):
+    """batch['images']: (B, H, W, C) -> (logits (B, classes), aux=0)."""
+    x = batch["images"]
+    x = jax.nn.relu(_bn(_conv(x, params["stem"]["conv"]), params["stem"]["bn"]))
+    cin = cfg.width
+    for si, n_blocks in enumerate(cfg.stages):
+        cout = cfg.width * (2 ** si)
+        for bi in range(n_blocks):
+            p = params[f"stage{si}_block{bi}"]
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h = jax.nn.relu(_bn(_conv(x, p["conv1"], stride), p["bn1"]))
+            h = _bn(_conv(h, p["conv2"]), p["bn2"])
+            skip = _conv(x, p["proj"], stride) if "proj" in p else x
+            x = jax.nn.relu(h + skip)
+            cin = cout
+    x = jnp.mean(x, axis=(1, 2))                 # global average pool
+    logits = x @ params["head"]
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def synthetic_cifar(key, batch: int, classes: int, size: int = 32):
+    """Learnable synthetic images: class-dependent channel means + noise."""
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (batch,), 0, classes)
+    means = jax.random.normal(jax.random.PRNGKey(7), (classes, 3)) * 0.5
+    imgs = jax.random.normal(k2, (batch, size, size, 3)) * 0.3 + means[labels][:, None, None, :]
+    return {"images": imgs, "labels": labels}

@@ -1,0 +1,37 @@
+from .base import (
+    GradientTransformation,
+    apply_updates,
+    add_decayed_weights,
+    chain,
+    clip_by_global_norm,
+    global_norm,
+    identity,
+    multi_steps,
+    scale,
+    scale_by_learning_rate,
+    scale_by_schedule,
+    trace,
+)
+from .adam import adamw, scale_by_adam, sgdm, ScaleByAdamState, bias_correction
+from . import schedules
+
+__all__ = [
+    "GradientTransformation",
+    "apply_updates",
+    "add_decayed_weights",
+    "chain",
+    "clip_by_global_norm",
+    "global_norm",
+    "identity",
+    "multi_steps",
+    "scale",
+    "scale_by_learning_rate",
+    "scale_by_schedule",
+    "trace",
+    "adamw",
+    "scale_by_adam",
+    "sgdm",
+    "ScaleByAdamState",
+    "bias_correction",
+    "schedules",
+]

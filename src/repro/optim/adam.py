@@ -1,0 +1,97 @@
+"""Reference Adam / AdamW / SGD-M built on the transformation API.
+
+This is the *uncompressed* baseline the paper measures against; SlimAdam
+(repro.core.slim_adam) must coincide with it exactly when every layer's
+compression spec is K = None.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import (
+    GradientTransformation,
+    ScalarOrSchedule,
+    add_decayed_weights,
+    chain,
+    clip_by_global_norm,
+    scale_by_learning_rate,
+    trace,
+)
+
+PyTree = jax.Array  # loose alias for docs
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: object  # first moments, pytree like params (fp32)
+    nu: object  # second moments, pytree like params (fp32)
+
+
+def bias_correction(decay: float, count: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 - jnp.power(jnp.asarray(decay, jnp.float32), count.astype(jnp.float32))
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> GradientTransformation:
+    def init_fn(params):
+        mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return ScaleByAdamState(count=jnp.zeros([], jnp.int32), mu=mu, nu=nu)
+
+    def update_fn(updates, state, params=None):
+        del params
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, updates)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, updates
+        )
+        bc1 = bias_correction(b1, count)
+        bc2 = bias_correction(b2, count)
+
+        def precond(m, v):
+            m_hat = m / bc1
+            v_hat = v / bc2
+            return m_hat / (jnp.sqrt(v_hat) + eps)
+
+        new_updates = jax.tree.map(precond, mu, nu)
+        return new_updates, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def adamw(
+    learning_rate: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: Optional[float] = 1.0,
+) -> GradientTransformation:
+    """The paper's training recipe: clip(1.0) -> Adam -> decoupled wd -> -lr."""
+    parts = []
+    if grad_clip is not None:
+        parts.append(clip_by_global_norm(grad_clip))
+    parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
+    parts.append(scale_by_learning_rate(learning_rate))
+    return chain(*parts)
+
+
+def sgdm(
+    learning_rate: ScalarOrSchedule,
+    momentum: float = 0.9,
+    nesterov: bool = False,
+    weight_decay: float = 0.0,
+    grad_clip: Optional[float] = 1.0,
+) -> GradientTransformation:
+    parts = []
+    if grad_clip is not None:
+        parts.append(clip_by_global_norm(grad_clip))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
+    parts.append(trace(momentum, nesterov=nesterov))
+    parts.append(scale_by_learning_rate(learning_rate))
+    return chain(*parts)

@@ -1,0 +1,254 @@
+"""Minimal optax-style gradient-transformation API.
+
+optax is not available in this environment; the paper's contribution is an
+optimizer, so we own the whole substrate. The API mirrors optax closely so
+that `repro.core.slim_adam` composes like any other transformation:
+
+    tx = chain(clip_by_global_norm(1.0), slim_adam(...), add_decayed_weights(0.1),
+               scale_by_schedule(warmup_cosine(...)), scale(-1.0))
+
+All states are pytrees of jax arrays so they pjit/checkpoint/reshard like
+parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class GradientTransformation(NamedTuple):
+    """A pair of pure functions (init, update).
+
+    update(grads, state, params) -> (updates, new_state). ``updates`` are to
+    be *added* to params (sign conventions handled by ``scale(-lr)`` at the
+    end of a chain, exactly like optax).
+    """
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+def identity() -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class ChainState(NamedTuple):
+    inner_states: Tuple[PyTree, ...]
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transformations left-to-right (like optax.chain)."""
+
+    def init_fn(params):
+        return ChainState(tuple(t.init(params) for t in transforms))
+
+    def update_fn(updates, state, params=None):
+        new_states = []
+        for t, s in zip(transforms, state.inner_states):
+            updates, new_s = t.update(updates, s, params)
+            new_states.append(new_s)
+        return updates, ChainState(tuple(new_states))
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class ScaleState(NamedTuple):
+    pass
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ScaleState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        return jax.tree.map(lambda u: u * factor, updates), state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray  # int32 scalar
+
+
+def scale_by_schedule(schedule: Schedule) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ScaleByScheduleState(count=jnp.zeros([], jnp.int32))
+
+    def update_fn(updates, state, params=None):
+        del params
+        step_size = schedule(state.count)
+        updates = jax.tree.map(lambda u: u * step_size.astype(u.dtype), updates)
+        return updates, ScaleByScheduleState(count=state.count + 1)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def scale_by_learning_rate(lr: ScalarOrSchedule, *, flip_sign: bool = True) -> GradientTransformation:
+    m = -1.0 if flip_sign else 1.0
+    if callable(lr):
+        return scale_by_schedule(lambda count: m * lr(count))
+    return scale(m * lr)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+class ClipByGlobalNormState(NamedTuple):
+    pass
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ClipByGlobalNormState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        g_norm = global_norm(updates)
+        # Match optax/torch semantics: rescale only when the norm exceeds the
+        # threshold; never amplify.
+        trigger = jnp.squeeze(g_norm <= max_norm)
+        scale_factor = jnp.where(trigger, 1.0, max_norm / (g_norm + 1e-16))
+        updates = jax.tree.map(lambda u: u * scale_factor.astype(u.dtype), updates)
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class AddDecayedWeightsState(NamedTuple):
+    pass
+
+
+def _default_wd_mask(params: PyTree) -> PyTree:
+    """Decay matrices, skip vectors (norm scales / biases) — the standard LM recipe."""
+    return jax.tree.map(lambda p: jnp.ndim(p) >= 2, params)
+
+
+def add_decayed_weights(
+    weight_decay: float, mask: Optional[Union[PyTree, Callable[[PyTree], PyTree]]] = None
+) -> GradientTransformation:
+    """Decoupled weight decay (AdamW): adds wd * p to the *updates*.
+
+    Placed after the preconditioner and before the learning-rate scale, this
+    reproduces Loshchilov & Hutter's decoupled decay.
+    """
+
+    def init_fn(params):
+        del params
+        return AddDecayedWeightsState()
+
+    def update_fn(updates, state, params=None):
+        if params is None:
+            raise ValueError("add_decayed_weights requires params")
+        m = mask(params) if callable(mask) else mask
+        if m is None:
+            m_tree = jax.tree.map(lambda _: True, params)
+        else:
+            m_tree = m
+
+        def leaf(u, p, use):
+            return u + weight_decay * p.astype(u.dtype) if use else u
+
+        updates = jax.tree.map(leaf, updates, params, m_tree)
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class TraceState(NamedTuple):
+    trace: PyTree
+
+
+def trace(decay: float, nesterov: bool = False) -> GradientTransformation:
+    """SGD momentum buffer."""
+
+    def init_fn(params):
+        return TraceState(trace=jax.tree.map(jnp.zeros_like, params))
+
+    def update_fn(updates, state, params=None):
+        del params
+        new_trace = jax.tree.map(lambda t, u: decay * t + u, state.trace, updates)
+        if nesterov:
+            updates = jax.tree.map(lambda t, u: decay * t + u, new_trace, updates)
+        else:
+            updates = new_trace
+        return updates, TraceState(trace=new_trace)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """p <- p + u, preserving the parameter dtype (updates may be fp32)."""
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# Gradient accumulation (multi-step) wrapper
+# ---------------------------------------------------------------------------
+
+
+class MultiStepsState(NamedTuple):
+    mini_step: jnp.ndarray
+    inner_state: PyTree
+    acc_grads: PyTree
+
+
+def multi_steps(inner: GradientTransformation, every_k: int) -> GradientTransformation:
+    """Accumulate gradients for ``every_k`` micro-steps, then apply ``inner``.
+
+    Between applications the emitted updates are zeros, so the caller can
+    unconditionally ``apply_updates`` each micro-step.
+    """
+
+    def init_fn(params):
+        return MultiStepsState(
+            mini_step=jnp.zeros([], jnp.int32),
+            inner_state=inner.init(params),
+            acc_grads=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        )
+
+    def update_fn(updates, state, params=None):
+        acc = jax.tree.map(lambda a, u: a + u.astype(jnp.float32) / every_k, state.acc_grads, updates)
+        is_last = state.mini_step == every_k - 1
+
+        def do_apply(operand):
+            acc_, inner_state_ = operand
+            out, new_inner = inner.update(acc_, inner_state_, params)
+            zeros = jax.tree.map(jnp.zeros_like, acc_)
+            return out, new_inner, zeros
+
+        def do_skip(operand):
+            acc_, inner_state_ = operand
+            zeros_out = jax.tree.map(jnp.zeros_like, acc_)
+            return zeros_out, inner_state_, acc_
+
+        out, new_inner, new_acc = jax.lax.cond(is_last, do_apply, do_skip, (acc, state.inner_state))
+        return out, MultiStepsState(
+            mini_step=(state.mini_step + 1) % every_k, inner_state=new_inner, acc_grads=new_acc
+        )
+
+    return GradientTransformation(init_fn, update_fn)

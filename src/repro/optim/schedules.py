@@ -1,0 +1,49 @@
+"""Learning-rate schedules (paper: linear warmup -> cosine decay to eta/10)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def schedule(count):
+        return jnp.asarray(value, jnp.float32)
+
+    return schedule
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def schedule(count):
+        frac = jnp.minimum(count.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return peak * frac
+
+    return schedule
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def schedule(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(decay_steps, 1), 0.0, 1.0)
+        cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1 - alpha) * cosine + alpha)
+
+    return schedule
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, end_value: float | None = None):
+    """The paper's schedule: linear 0 -> peak over warmup, cosine to peak/10.
+
+    ``end_value`` defaults to peak / 10 per the paper (eta_min = eta / 10).
+    """
+    if end_value is None:
+        end_value = peak / 10.0
+    alpha = end_value / peak if peak > 0 else 0.0
+    decay_steps = max(total_steps - warmup_steps, 1)
+
+    def schedule(count):
+        count_f = count.astype(jnp.float32)
+        warm = peak * jnp.minimum(count_f / max(warmup_steps, 1), 1.0)
+        frac = jnp.clip((count_f - warmup_steps) / decay_steps, 0.0, 1.0)
+        cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        decayed = peak * ((1 - alpha) * cosine + alpha)
+        return jnp.where(count_f < warmup_steps, warm, decayed)
+
+    return schedule

@@ -1,0 +1,2 @@
+from .engine import Engine, ServeConfig
+__all__ = ["Engine", "ServeConfig"]

@@ -1,0 +1,22 @@
+from .logical import (
+    ShardingContext,
+    constrain,
+    current,
+    default_rules,
+    param_specs,
+    shardings_for_tree,
+    use_sharding,
+)
+from .state_shardings import opt_state_specs, shardings_from_specs
+
+__all__ = [
+    "ShardingContext",
+    "constrain",
+    "current",
+    "default_rules",
+    "param_specs",
+    "shardings_for_tree",
+    "use_sharding",
+    "opt_state_specs",
+    "shardings_from_specs",
+]

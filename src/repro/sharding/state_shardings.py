@@ -1,0 +1,122 @@
+"""PartitionSpecs for optimizer state pytrees.
+
+Optimizer states mirror the parameter tree (mu/nu/trace/accumulators), so
+their shardings derive from the parameter specs:
+
+  * full-shape moments (mu, trace, acc) inherit the parameter spec verbatim;
+  * SlimAdam's reduced second moments (size-1 along compressed dims) inherit
+    the spec with collapsed dims replicated — which means a fan_in-compressed
+    moment of a TP-sharded matrix keeps only its FSDP axis: compressing the
+    moment also deletes its TP collective traffic (DESIGN.md §3);
+  * counts/scalars are fully replicated.
+
+The walker dispatches on the optimizer state *types* (all NamedTuples from
+repro.optim / repro.core), falling back to shape-matching for robustness.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..core.slim_adam import ScaleBySlimAdamState
+from ..optim.adam import ScaleByAdamState
+from ..optim.base import ChainState, MultiStepsState, ScaleByScheduleState, TraceState
+from ..core.baselines import AdafactorState, LionState, SM3State
+from .logical import current
+
+
+def _like_params(spec_tree: Any) -> Any:
+    return spec_tree
+
+
+def _masked_like_params(spec_tree: Any, abstract_tree: Any, params_abstract: Any) -> Any:
+    """Param specs with entries dropped where the state dim collapsed to 1."""
+
+    def leaf(spec: P, state_leaf, param_leaf):
+        entries = list(spec) + [None] * (param_leaf.ndim - len(spec))
+        out = [
+            None if state_leaf.shape[i] != param_leaf.shape[i] else entries[i]
+            for i in range(param_leaf.ndim)
+        ]
+        return P(*out)
+
+    return jax.tree.map(leaf, spec_tree, abstract_tree, params_abstract)
+
+
+def _replicated(tree: Any) -> Any:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def opt_state_specs(abstract_state: Any, params_abstract: Any, param_spec_tree: Any) -> Any:
+    """PartitionSpec pytree matching ``abstract_state``."""
+
+    def walk(node: Any) -> Any:
+        if isinstance(node, ChainState):
+            return ChainState(tuple(walk(s) for s in node.inner_states))
+        if isinstance(node, ScaleBySlimAdamState):
+            return ScaleBySlimAdamState(
+                count=P(),
+                mu=_like_params(param_spec_tree) if node.mu is not None else None,
+                nu=_masked_like_params(param_spec_tree, node.nu, params_abstract),
+            )
+        if isinstance(node, ScaleByAdamState):
+            return ScaleByAdamState(count=P(), mu=_like_params(param_spec_tree), nu=_like_params(param_spec_tree))
+        if isinstance(node, TraceState):
+            return TraceState(trace=_like_params(param_spec_tree))
+        if isinstance(node, MultiStepsState):
+            return MultiStepsState(
+                mini_step=P(), inner_state=walk(node.inner_state), acc_grads=_like_params(param_spec_tree)
+            )
+        if isinstance(node, AdafactorState):
+            return AdafactorState(
+                count=P(),
+                vr=_masked_like_params_partial(param_spec_tree, node.vr, params_abstract),
+                vc=_masked_like_params_partial(param_spec_tree, node.vc, params_abstract),
+                mu=_like_params(param_spec_tree) if node.mu is not None else None,
+            )
+        if isinstance(node, SM3State):
+            return SM3State(
+                accs=jax.tree.map(lambda _: P(), node.accs),
+                mom=_like_params(param_spec_tree),
+            )
+        if isinstance(node, LionState):
+            return LionState(mu=_like_params(param_spec_tree))
+        if isinstance(node, ScaleByScheduleState):
+            return ScaleByScheduleState(count=P())
+        # EmptyState / ClipState / unknown leaves -> replicate
+        return _replicated(node)
+
+    return walk(abstract_state)
+
+
+def _masked_like_params_partial(spec_tree: Any, abstract_tree: Any, params_abstract: Any) -> Any:
+    """Adafactor row/col stats: fewer dims than the param — keep the spec
+    entries of the surviving leading dims."""
+
+    def leaf(spec: P, state_leaf, param_leaf):
+        entries = list(spec) + [None] * (param_leaf.ndim - len(spec))
+        if state_leaf.ndim == param_leaf.ndim:
+            return P(*entries)
+        if state_leaf.ndim == 0:
+            return P()
+        # row stats: drop last dim; col stats: drop second-to-last dim
+        if state_leaf.shape == param_leaf.shape[:-1]:
+            return P(*entries[:-1])
+        if state_leaf.shape == param_leaf.shape[:-2] + param_leaf.shape[-1:]:
+            return P(*(entries[:-2] + entries[-1:]))
+        return P()
+
+    return jax.tree.map(leaf, spec_tree, abstract_tree, params_abstract)
+
+
+def shardings_from_specs(spec_tree: Any, mesh=None) -> Any:
+    from jax.sharding import NamedSharding
+
+    ctx = current()
+    mesh = mesh or (ctx.mesh if ctx else None)
+    if mesh is None:
+        raise RuntimeError("no mesh available")
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

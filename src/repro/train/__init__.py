@@ -1,0 +1,6 @@
+from .loss import cross_entropy, lm_loss
+from .step import make_eval_step, make_serve_step, make_train_step
+from .trainer import OPTIMIZERS, Trainer, TrainerConfig, find_adam_nu, make_optimizer
+
+__all__ = ["cross_entropy", "lm_loss", "make_eval_step", "make_serve_step", "make_train_step",
+           "OPTIMIZERS", "Trainer", "TrainerConfig", "find_adam_nu", "make_optimizer"]

@@ -1,0 +1,35 @@
+"""Losses: causal-LM cross entropy (fp32 logsumexp) + encoder CE."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, *, z_coef: float = 0.0) -> jnp.ndarray:
+    """Token-mean CE. logits: (B, S, V) any dtype; labels: (B, S) int32.
+
+    Computed in fp32; optional z-loss regularizes logsumexp magnitude (kept 0
+    by default — the paper does not use it)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_coef:
+        loss = loss + z_coef * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def lm_loss(cfg, params, batch: Dict[str, jnp.ndarray], forward_fn) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Forward + CE (+ MoE aux). For causal LMs, labels are next-token ids
+    supplied by the data pipeline; for encoders, per-frame targets."""
+    logits, aux = forward_fn(cfg, params, batch)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:
+        # VLM: frontend embeddings prepended — score only the text positions.
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    ce = cross_entropy(logits, labels)
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}

@@ -1,0 +1,97 @@
+"""pjit-able train / serve step factories.
+
+``make_train_step`` closes over (model config, optimizer) and returns the
+pure function lowered by both the real trainer and the dry-run:
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+from ..optim.base import GradientTransformation, apply_updates, global_norm
+from .loss import lm_loss
+
+
+def make_train_step(cfg, tx: GradientTransformation, *, forward_fn=None,
+                    grad_accum: int = 1, grad_shardings=None) -> Callable:
+    """One optimizer step. With ``grad_accum > 1`` the global batch is split
+    into microbatches scanned with fp32 gradient accumulation (the paper's
+    own recipe: micro-batch 32 x 40 accumulation steps), which is also what
+    bounds saved-activation memory for the large dry-run cells.
+
+    ``grad_shardings``: optional NamedSharding pytree (like params) pinned
+    onto the gradient tree — without it GSPMD may propagate gradients
+    replicated over the TP axis (measured: 12 GiB/device vs 0.5 GiB for a
+    67B model on a 256-chip mesh)."""
+    fwd = forward_fn or transformer.forward
+
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_shardings)
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = lm_loss(cfg, p, batch, fwd)
+            return loss, metrics
+
+        g, metrics = jax.grad(loss_fn, has_aux=True)(params)
+        return pin(g), metrics
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            from ..sharding.logical import constrain, current
+
+            def split(a):
+                a = a.reshape((grad_accum, a.shape[0] // grad_accum) + a.shape[1:])
+                if current() is not None:
+                    a = constrain(a, None, "batch", *([None] * (a.ndim - 2)))
+                return a
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g, m = grads_of(params, mb)
+                acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) / grad_accum, acc, g)
+                return pin(acc), m
+
+            zeros = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            grads, ms = jax.lax.scan(body, zeros, micro)
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+
+        updates, new_opt_state = tx.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = global_norm(grads)
+        return new_params, new_opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, *, forward_fn=None) -> Callable:
+    fwd = forward_fn or transformer.forward
+
+    def eval_step(params, batch):
+        _, metrics = lm_loss(cfg, params, batch, fwd)
+        return metrics
+
+    return eval_step
+
+
+def make_serve_step(cfg) -> Callable:
+    """One batched decode step: (params, cache, tokens (B,1)) -> (next_tokens,
+    logits, cache). Greedy argmax sampling (serving example adds temperature)."""
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache = transformer.decode_step(cfg, params, cache, tokens)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, logits, new_cache
+
+    return serve_step

@@ -1,0 +1,192 @@
+"""Trainer: optimizer registry, SNR measurement hooks, checkpoint/restart.
+
+This is the orchestration layer the examples and benchmarks drive. It runs
+unsharded on one CPU device (paper-scale experiments) and under a mesh via
+the same code path (the launcher supplies shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import optim
+from ..checkpoint import store
+from ..core import (
+    SNRTracker,
+    derive_rules,
+    measure_tree_snr,
+    rules_as_tree,
+    table3_rules,
+)
+from ..core.baselines import (
+    adafactor,
+    adalayer_ln_tl_rules,
+    adalayer_rules,
+    adam_mini_v1_rules,
+    adam_mini_v2_rules,
+    lion,
+    sm3,
+)
+from ..core.slim_adam import slim_adam
+from ..data.pipeline import DataConfig, ZipfLM
+from ..models import transformer
+from ..optim.adam import adamw, sgdm
+from .step import make_train_step
+
+OPTIMIZERS = ("adam", "slim", "slim_snr", "adalayer", "adalayer_ln_tl",
+              "adam_mini_v1", "adam_mini_v2", "adafactor", "adafactor_v2",
+              "sm3", "lion", "sgdm")
+
+
+def make_optimizer(name: str, lr, params, meta, *, weight_decay: float = 0.1,
+                   b1: float = 0.9, b2: float = 0.95, grad_clip: float = 1.0,
+                   rules: Optional[Dict[str, Any]] = None):
+    """Build any of the paper's optimizers. ``rules`` overrides the rule set
+    for 'slim_snr' (derived from a measured SNR pass)."""
+    if name == "adam":
+        return adamw(lr, b1=b1, b2=b2, weight_decay=weight_decay, grad_clip=grad_clip)
+    if name in ("slim", "slim_snr", "adalayer", "adalayer_ln_tl", "adam_mini_v1", "adam_mini_v2"):
+        if name == "slim":
+            r = table3_rules(meta)
+        elif name == "slim_snr":
+            if rules is None:
+                raise ValueError("slim_snr requires derived rules")
+            r = rules
+        elif name == "adalayer":
+            r = adalayer_rules(meta)
+        elif name == "adalayer_ln_tl":
+            r = adalayer_ln_tl_rules(meta)
+        elif name == "adam_mini_v1":
+            r = adam_mini_v1_rules(meta)
+        else:
+            r = adam_mini_v2_rules(meta)
+        dims = rules_as_tree(r, params, meta)
+        return slim_adam(lr, dims, b1=b1, b2=b2, weight_decay=weight_decay, grad_clip=grad_clip)
+    if name == "adafactor":
+        return adafactor(lr, weight_decay=weight_decay, grad_clip=grad_clip)
+    if name == "adafactor_v2":
+        return adafactor(lr, momentum=0.9, weight_decay=weight_decay, grad_clip=grad_clip)
+    if name == "sm3":
+        return sm3(lr, beta=0.95, weight_decay=weight_decay, grad_clip=grad_clip)
+    if name == "lion":
+        return lion(lr, weight_decay=weight_decay, grad_clip=grad_clip)
+    if name == "sgdm":
+        return sgdm(lr, weight_decay=weight_decay, grad_clip=grad_clip)
+    raise ValueError(f"unknown optimizer {name!r}; choose from {OPTIMIZERS}")
+
+
+def find_adam_nu(opt_state) -> Optional[Any]:
+    """Extract the second-moment pytree from a (possibly chained) optimizer
+    state — the tensor the paper's SNR analysis runs on."""
+    from ..optim.adam import ScaleByAdamState
+    from ..core.slim_adam import ScaleBySlimAdamState
+    from ..optim.base import ChainState, MultiStepsState
+
+    def walk(node):
+        if isinstance(node, (ScaleByAdamState, ScaleBySlimAdamState)):
+            return node.nu
+        if isinstance(node, ChainState):
+            for s in node.inner_states:
+                out = walk(s)
+                if out is not None:
+                    return out
+        if isinstance(node, MultiStepsState):
+            return walk(node.inner_state)
+        return None
+
+    return walk(opt_state)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 1000
+    log_every: int = 50
+    ckpt_every: int = 0              # 0 = disabled
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    measure_snr: bool = False
+    snr_early_every: int = 100
+    snr_late_every: int = 1000
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model_cfg, optimizer_name: str, lr, data: ZipfLM,
+                 tc: TrainerConfig = TrainerConfig(), *, optimizer_kw: Optional[dict] = None,
+                 rules: Optional[dict] = None, grad_accum: int = 1):
+        self.model_cfg = model_cfg
+        self.tc = tc
+        self.data = data
+        key = jax.random.PRNGKey(tc.seed)
+        self.params, self.meta = model_cfg.init(key)
+        self.tx = make_optimizer(optimizer_name, lr, self.params, self.meta,
+                                 rules=rules, **(optimizer_kw or {}))
+        self.opt_state = self.tx.init(self.params)
+        self.step = 0
+        self.snr = SNRTracker()
+        self.metrics_log: list = []
+        self._train_step = jax.jit(make_train_step(model_cfg, self.tx, grad_accum=grad_accum))
+        self._restored = False
+        if tc.ckpt_dir and store.latest_step(tc.ckpt_dir) is not None:
+            self.restore()
+
+    # -- fault tolerance ---------------------------------------------------
+
+    def restore(self):
+        state = {"params": self.params, "opt": self.opt_state}
+        state, extra = store.restore(self.tc.ckpt_dir, state)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = int(extra.get("step", 0))
+        self._restored = True
+
+    def checkpoint(self):
+        if not self.tc.ckpt_dir:
+            return
+        store.save(self.tc.ckpt_dir, self.step, {"params": self.params, "opt": self.opt_state},
+                   extra={"step": self.step}, keep=self.tc.ckpt_keep)
+
+    # -- SNR hook ------------------------------------------------------------
+
+    def maybe_measure_snr(self):
+        if not self.tc.measure_snr:
+            return
+        if not SNRTracker.should_measure(self.step, self.tc.snr_early_every,
+                                         self.tc.snr_late_every):
+            return
+        nu = find_adam_nu(self.opt_state)
+        if nu is None:
+            return
+        snapshot = measure_tree_snr(nu, self.meta)
+        self.snr.update(snapshot, self.step)
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, steps: Optional[int] = None) -> Dict[str, float]:
+        steps = steps if steps is not None else self.tc.total_steps
+        last = {}
+        t0 = time.time()
+        while self.step < steps:
+            batch = self.data.batch(self.step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self._train_step(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            self.maybe_measure_snr()
+            if self.step % self.tc.log_every == 0 or self.step == steps:
+                last = {k: float(v) for k, v in metrics.items()}
+                last.update(step=self.step, wall_s=round(time.time() - t0, 2))
+                self.metrics_log.append(last)
+            if self.tc.ckpt_every and self.step % self.tc.ckpt_every == 0:
+                self.checkpoint()
+        return last
+
+    def derive_slim_rules(self, cutoff: float = 1.0):
+        """Paper §5: turn the tracked SNR averages into SlimAdam rules."""
+        return derive_rules(self.snr.averaged(), self.meta, cutoff=cutoff)

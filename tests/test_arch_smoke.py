@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (assignment deliverable f): every assigned
+arch instantiates a reduced config of the same family and runs one forward
+AND one SlimAdam train step on CPU — shapes asserted, no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.core import rules_as_tree, table3_rules, validate_meta
+from repro.core.slim_adam import slim_adam
+from repro.models import forward, init_decode_cache, decode_step
+from repro.train.step import make_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    batch = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        if cfg.extra_embed_len:
+            batch["frontend_embeds"] = jax.random.normal(key, (B, cfg.extra_embed_len, cfg.d_model))
+    elif cfg.input_proj_dim:
+        batch["patches"] = jax.random.normal(key, (B, S, cfg.input_proj_dim))
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        batch["frontend_embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nans(arch):
+    cfg = get_reduced(arch)
+    params, meta = cfg.init(jax.random.PRNGKey(0))
+    validate_meta(params, meta)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(lambda p, b: forward(cfg, p, b))(params, batch)
+    expect_s = S + (cfg.extra_embed_len if cfg.embed_inputs else 0)
+    assert logits.shape == (B, expect_s, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert not bool(jnp.isnan(aux))
+    if cfg.n_experts:
+        assert float(aux) > 0.0  # MoE aux losses flow
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_slim_train_step(arch):
+    cfg = get_reduced(arch)
+    params, meta = cfg.init(jax.random.PRNGKey(0))
+    rules = table3_rules(meta)
+    dims = rules_as_tree(rules, params, meta)
+    tx = slim_adam(1e-3, dims)
+    step = jax.jit(make_train_step(cfg, tx))
+    opt = tx.init(params)
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved
+    # loss decreases over a few steps on repeated data (sanity of the whole stack)
+    p, o = new_params, new_opt
+    first = float(metrics["loss"])
+    for _ in range(5):
+        p, o, metrics = step(p, o, batch)
+    assert float(metrics["loss"]) < first
+
+
+DECODE_ARCHS = [a for a in ARCH_IDS if get_reduced(a).causal and get_reduced(a).embed_inputs
+                and not get_reduced(a).extra_embed_len]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    """Step-by-step decode with KV/SSM caches reproduces the parallel forward."""
+    cfg = get_reduced(arch)
+    params, _ = cfg.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 12), 0, cfg.vocab_size)
+    full_logits, _ = forward(cfg, params, {"tokens": toks})
+    cache = init_decode_cache(cfg, B, 32, dtype=jnp.float32)
+    dec = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    outs = []
+    for i in range(12):
+        lg, cache = dec(params, cache, toks[:, i:i + 1])
+        outs.append(lg)
+    err = float(jnp.max(jnp.abs(jnp.concatenate(outs, 1) - full_logits)))
+    assert err < 5e-3, f"{arch}: decode diverges from forward by {err}"
+
+
+def test_int8_kv_cache_decode():
+    """int8-quantized KV cache decode stays within 5% of full precision and
+    preserves argmax (the qwen1.5-32b decode_32k capacity fix)."""
+    import dataclasses
+
+    cfg = get_reduced("qwen15_32b")
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    params, _ = cfg.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    full_logits, _ = forward(cfg, params, {"tokens": toks})
+    cache = init_decode_cache(cfgq, 2, 32, dtype=jnp.float32)
+    dec = jax.jit(lambda p, c, t: decode_step(cfgq, p, c, t))
+    outs = []
+    for i in range(12):
+        lg, cache = dec(params, cache, toks[:, i:i + 1])
+        outs.append(lg)
+    dec_logits = jnp.concatenate(outs, 1)
+    rel = float(jnp.max(jnp.abs(dec_logits - full_logits))) / float(jnp.max(jnp.abs(full_logits)))
+    agree = float(jnp.mean(jnp.argmax(dec_logits, -1) == jnp.argmax(full_logits, -1)))
+    assert rel < 0.05 and agree > 0.95
+
+
+def test_resnet_smoke():
+    """Paper §3.1.3 regime: reduced ResNet forward + SlimAdam step on CPU."""
+    from repro.models.resnet import ResNetConfig, forward as resnet_forward, synthetic_cifar
+    from repro.core import validate_meta as _vm
+    from repro.train.loss import cross_entropy
+    from repro.optim import apply_updates
+
+    cfg = ResNetConfig(stages=(1, 1), width=8, classes=10)
+    params, meta = cfg.init(jax.random.PRNGKey(0))
+    _vm(params, meta)
+    batch = synthetic_cifar(jax.random.PRNGKey(1), 4, 10, size=8)
+    logits, _ = jax.jit(lambda p, b: resnet_forward(cfg, p, b))(params, batch)
+    assert logits.shape == (4, 10)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    rules = table3_rules(meta)
+    tx = slim_adam(1e-3, rules_as_tree(rules, params, meta))
+    state = tx.init(params)
+
+    def loss_fn(p):
+        lg, _ = resnet_forward(cfg, p, batch)
+        return cross_entropy(lg[:, None, :], batch["labels"][:, None])
+
+    l0 = float(loss_fn(params))
+    step = jax.jit(lambda p, s: (lambda u_s: (apply_updates(p, u_s[0]), u_s[1]))(
+        tx.update(jax.grad(loss_fn)(p), s, p)))
+    for _ in range(8):
+        params, state = step(params, state)
+    assert float(loss_fn(params)) < l0

@@ -1,0 +1,158 @@
+"""Unit + property tests for the paper core: SNR analysis and rule derivation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ParamMeta,
+    SNRTracker,
+    derive_rules,
+    measure_leaf_snr,
+    measure_tree_snr,
+    rules_as_tree,
+    second_moment_savings,
+    snr_along_dims,
+    table3_rules,
+)
+
+META_2D = ParamMeta(axes=("embed", "mlp"), role="mlp_up", fan_in=("embed",), fan_out=("mlp",))
+
+
+class TestSNRDefinition:
+    def test_constant_rows_infinite_snr(self):
+        """Entries constant along K -> zero variance -> enormous SNR."""
+        v = jnp.broadcast_to(jnp.arange(1.0, 5.0)[:, None], (4, 8))
+        s = snr_along_dims(v, (1,))
+        assert float(s) > 1e10
+
+    def test_known_value(self):
+        """SNR of iid U(0,1)-ish values: mean^2/var computable by hand."""
+        v = jnp.array([[1.0, 3.0]] * 5)  # mean 2, var 1 along axis 1
+        s = snr_along_dims(v, (1,))
+        np.testing.assert_allclose(float(s), 4.0, rtol=1e-5)
+
+    def test_scalar_output_over_remaining_dims(self):
+        v = jnp.arange(24.0).reshape(2, 3, 4)
+        s = snr_along_dims(v, (2,))
+        assert s.shape == ()
+
+    def test_per_remaining_dim(self):
+        v = jnp.arange(24.0).reshape(2, 3, 4) + 1.0
+        s = snr_along_dims(v, (2,), per_remaining_dim=0)
+        assert s.shape == (2,)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(min_value=0.1, max_value=100.0))
+    def test_scale_invariance(self, c):
+        """SNR_K(cV) == SNR_K(V): ratios of second moments cancel scale."""
+        rng = np.random.default_rng(0)
+        v = jnp.asarray(rng.uniform(0.5, 2.0, (6, 10)).astype(np.float32))
+        s1 = float(snr_along_dims(v, (1,)))
+        s2 = float(snr_along_dims(c * v, (1,)))
+        assert np.isclose(s1, s2, rtol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=2, max_value=16), st.integers(min_value=2, max_value=16))
+    def test_snr_nonnegative(self, r, c):
+        rng = np.random.default_rng(r * 100 + c)
+        v = jnp.asarray(np.abs(rng.normal(size=(r, c))).astype(np.float32))
+        assert float(snr_along_dims(v, (0,))) >= 0.0
+        assert float(snr_along_dims(v, (1,))) >= 0.0
+
+    def test_tighter_concentration_higher_snr(self):
+        """Lower relative variance along K must give higher SNR_K."""
+        rng = np.random.default_rng(1)
+        base = rng.uniform(1.0, 2.0, (8, 32)).astype(np.float32)
+        tight = 1.0 + 0.01 * (base - base.mean())
+        assert float(snr_along_dims(jnp.asarray(tight), (1,))) > float(
+            snr_along_dims(jnp.asarray(base), (1,)))
+
+
+class TestMeta:
+    def test_candidate_ks(self):
+        ks = META_2D.candidate_ks()
+        assert set(ks) == {"fan_in", "fan_out", "both"}
+        assert ks["both"] == ("embed", "mlp")
+
+    def test_vector_like_no_candidates(self):
+        m = ParamMeta(axes=("embed",), role="norm")
+        assert m.is_vector_like and m.candidate_ks() == {}
+
+    def test_structural_axes_excluded(self):
+        m = ParamMeta(axes=("layers", "embed", "mlp"), role="mlp_up",
+                      fan_in=("embed",), fan_out=("mlp",))
+        assert not m.is_vector_like
+        assert m.dims_of(("embed",)) == (1,)
+        with pytest.raises(ValueError):
+            ParamMeta(axes=("layers", "embed"), role="mlp_up", fan_in=("layers",))
+
+
+class TestRules:
+    def _setup(self):
+        params = {"w": jnp.ones((8, 16)), "n": jnp.ones((8,))}
+        meta = {"w": META_2D, "n": ParamMeta(axes=("embed",), role="norm")}
+        return params, meta
+
+    def test_derive_picks_argmax_above_cutoff(self):
+        params, meta = self._setup()
+        avg = {"w": {"fan_in": 5.0, "fan_out": 2.0, "both": 1.0}, "n": {}}
+        rules = derive_rules(avg, meta, cutoff=1.0)
+        assert rules["w"] == ("embed",)
+        assert rules["n"] is None
+
+    def test_derive_below_cutoff_uncompressed(self):
+        params, meta = self._setup()
+        avg = {"w": {"fan_in": 0.5, "fan_out": 0.3, "both": 0.2}, "n": {}}
+        assert derive_rules(avg, meta, cutoff=1.0)["w"] is None
+
+    def test_cutoff_monotonicity(self):
+        """Raising the cutoff can only reduce the set of compressed tensors."""
+        params, meta = self._setup()
+        avg = {"w": {"fan_in": 1.5, "fan_out": 0.7, "both": 0.4}, "n": {}}
+        compressed = [derive_rules(avg, meta, cutoff=c)["w"] is not None
+                      for c in (0.5, 1.0, 1.4, 1.6, 3.0)]
+        assert compressed == sorted(compressed, reverse=True)
+
+    def test_savings_accounting(self):
+        params, meta = self._setup()
+        rules = {"w": ("mlp",), "n": None}
+        s = second_moment_savings(params, meta, rules)
+        # w stores 8 of 128 entries; n stores 8 of 8
+        assert s["stored_second_moments"] == 16.0
+        np.testing.assert_allclose(s["saved_fraction"], 1 - 16 / 136)
+
+    def test_table3_roles(self):
+        from repro.configs import get_reduced
+        cfg = get_reduced("smollm_135m")
+        params, meta = cfg.init(jax.random.PRNGKey(0))
+        rules = table3_rules(meta)
+        named = {k: v for k, v in rules.items()}
+        # attention q/k compress fan_in (embed), v/o fan_out/None per table
+        for name, rule in named.items():
+            if ".wq" in name or ".wk" in name:
+                assert rule == ("embed",), name
+            if "mixer_norm" in name or "ffn_norm" in name:
+                assert rule is None, name
+        # embedding compresses the embedding dim, never vocab
+        assert named["embed"] == ("embed",)
+
+    def test_rules_as_tree_positions(self):
+        params, meta = self._setup()
+        tree = rules_as_tree({"w": ("mlp",), "n": None}, params, meta)
+        assert tree == {"w": (1,), "n": ()}
+
+
+class TestTracker:
+    def test_time_average(self):
+        tr = SNRTracker()
+        tr.update({"w": {"fan_in": jnp.asarray(2.0)}}, step=100)
+        tr.update({"w": {"fan_in": jnp.asarray(4.0)}}, step=200)
+        assert tr.averaged()["w"]["fan_in"] == 3.0
+
+    def test_measure_cadence(self):
+        """Paper: every 100 steps until 1000, then every 1000."""
+        steps = [s for s in range(1, 5001) if SNRTracker.should_measure(s)]
+        assert steps[:10] == [100, 200, 300, 400, 500, 600, 700, 800, 900, 1000]
+        assert steps[10:] == [2000, 3000, 4000, 5000]

@@ -1,0 +1,166 @@
+"""Model-component oracles: flash attention, selective scan, MoE, norms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import chunked_attention, dense_attention, flash_attention
+from repro.models.mlp_moe import MoEConfig, moe_forward, moe_specs
+from repro.models.common import init_params, layer_norm, meta_tree, normal_init, rms_norm
+from repro.models.ssm import selective_scan
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,hd,causal,blk", [
+        (2, 256, 4, 32, True, 64),
+        (1, 128, 2, 16, False, 32),
+        (2, 512, 3, 8, True, 128),
+        (1, 192, 1, 64, True, 48),
+    ])
+    def test_forward_matches_dense(self, b, s, h, hd, causal, blk):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q, k, v = (jax.random.normal(kk, (b, s, h, hd)) for kk in ks)
+        np.testing.assert_allclose(flash_attention(q, k, v, causal, blk),
+                                   dense_attention(q, k, v, causal=causal),
+                                   atol=3e-5, rtol=3e-5)
+
+    def test_gradients_match_dense(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q, k, v = (jax.random.normal(kk, (2, 128, 2, 16)) for kk in ks)
+
+        def loss(f):
+            return lambda q, k, v: jnp.sum(jnp.sin(f(q, k, v)))
+
+        g1 = jax.grad(loss(lambda q, k, v: flash_attention(q, k, v, True, 32)), (0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss(lambda q, k, v: dense_attention(q, k, v, causal=True)), (0, 1, 2))(q, k, v)
+        for a, b_ in zip(g1, g2):
+            np.testing.assert_allclose(a, b_, atol=5e-5, rtol=5e-5)
+
+    def test_chunked_matches_dense(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q, k, v = (jax.random.normal(kk, (1, 64, 2, 8)) for kk in ks)
+        np.testing.assert_allclose(chunked_attention(q, k, v, causal=True, kv_block=16),
+                                   dense_attention(q, k, v, causal=True), atol=3e-5, rtol=3e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=1, max_value=4), st.sampled_from([32, 64, 96]))
+    def test_causality_property(self, b, s):
+        """Perturbing future keys/values never changes past outputs."""
+        ks = jax.random.split(jax.random.PRNGKey(b * s), 3)
+        q, k, v = (jax.random.normal(kk, (b, s, 2, 8)) for kk in ks)
+        out1 = flash_attention(q, k, v, True, 32)
+        k2 = k.at[:, s // 2:].add(10.0)
+        v2 = v.at[:, s // 2:].add(-3.0)
+        out2 = flash_attention(q, k2, v2, True, 32)
+        np.testing.assert_allclose(out1[:, : s // 2], out2[:, : s // 2], atol=1e-5)
+
+
+class TestSelectiveScan:
+    def _ref(self, x, dt, a, b_t, c_t, d_skip, h0):
+        B, S, D = x.shape
+        h = h0.astype(jnp.float32)
+        ys = []
+        for t in range(S):
+            A = jnp.exp(dt[:, t][..., None] * a)
+            u = (dt[:, t] * x[:, t])[..., None] * b_t[:, t][:, None, :]
+            h = A * h + u
+            ys.append(jnp.einsum("bdn,bn->bd", h, c_t[:, t]))
+        return jnp.stack(ys, 1) + x * d_skip, h
+
+    def _operands(self, B=2, S=24, D=5, N=3, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+        x = jax.random.normal(ks[0], (B, S, D))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D)))
+        a = -jnp.exp(jax.random.normal(ks[2], (D, N)) * 0.3)
+        b_t = jax.random.normal(ks[3], (B, S, N))
+        c_t = jax.random.normal(ks[4], (B, S, N))
+        d_skip = jax.random.normal(ks[5], (D,))
+        h0 = jax.random.normal(ks[6], (B, D, N))
+        return x, dt, a, b_t, c_t, d_skip, h0
+
+    @pytest.mark.parametrize("chunk", [1, 4, 8, 24, 100])
+    def test_forward_matches_sequential(self, chunk):
+        ops = self._operands()
+        y1, h1 = selective_scan(*ops, chunk)
+        y2, h2 = self._ref(*ops)
+        np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(h1, h2, atol=1e-4, rtol=1e-4)
+
+    def test_custom_vjp_matches_autodiff_reference(self):
+        ops = self._operands(seed=5)
+
+        def loss_fast(*args):
+            y, h = selective_scan(*args, 8)
+            return jnp.sum(jnp.sin(y)) + jnp.sum(jnp.cos(h))
+
+        def loss_ref(*args):
+            y, h = self._ref(*args)
+            return jnp.sum(jnp.sin(y)) + jnp.sum(jnp.cos(h))
+
+        g1 = jax.grad(loss_fast, argnums=tuple(range(7)))(*ops)
+        g2 = jax.grad(loss_ref, argnums=tuple(range(7)))(*ops)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=1, max_value=30))
+    def test_chunk_invariance(self, chunk):
+        """Output must not depend on the chunking."""
+        ops = self._operands(S=30, seed=9)
+        y_ref, h_ref = selective_scan(*ops, 30)
+        y, h = selective_scan(*ops, chunk)
+        np.testing.assert_allclose(y, y_ref, atol=1e-4, rtol=1e-4)
+
+
+class TestMoE:
+    def _setup(self, n_tok=32, e=8, k=2, d=16, f=24):
+        cfg = MoEConfig(n_experts=e, top_k=k, d_model=d, d_ff=f, capacity_factor=2.0)
+        specs = moe_specs(cfg, w_init=normal_init(0.02), down_init=normal_init(0.02))
+        params = init_params(specs, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, n_tok // 2, d))
+        return cfg, params, x
+
+    def test_output_shape_and_grad(self):
+        cfg, params, x = self._setup()
+        y, aux = moe_forward(params, x, cfg)
+        assert y.shape == x.shape
+        assert float(aux) > 0
+        g = jax.grad(lambda p: jnp.sum(moe_forward(p, x, cfg)[0] ** 2))(params)
+        assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(g))
+
+    def test_single_expert_equals_dense_mlp(self):
+        """E=1, k=1 dropless MoE == plain MLP with that expert's weights."""
+        cfg = MoEConfig(n_experts=1, top_k=1, d_model=8, d_ff=12, capacity_factor=4.0)
+        specs = moe_specs(cfg, w_init=normal_init(0.1), down_init=normal_init(0.1))
+        params = init_params(specs, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 8))
+        y, _ = moe_forward(params, x, cfg)
+        h = jnp.einsum("bsd,df->bsf", x, params["w_up"][0])
+        gte = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"][0])) * h
+        y_ref = jnp.einsum("bsf,fd->bsd", gte, params["w_down"][0])
+        np.testing.assert_allclose(y, y_ref, atol=1e-5, rtol=1e-4)
+
+    def test_gate_renormalization(self):
+        """Top-k gates renormalize to 1, so scaling router logits uniformly
+        leaves the output unchanged."""
+        cfg, params, x = self._setup()
+        y1, _ = moe_forward(params, x, cfg)
+        params2 = dict(params)
+        y2, _ = moe_forward(params2, x, cfg)
+        np.testing.assert_allclose(y1, y2, atol=1e-6)
+
+
+class TestNorms:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=1, max_value=8), st.integers(min_value=2, max_value=64))
+    def test_rmsnorm_unit_rms(self, b, d):
+        x = jax.random.normal(jax.random.PRNGKey(b * d), (b, d)) * 5
+        y = rms_norm(x, jnp.ones((d,)))
+        rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+        np.testing.assert_allclose(rms, 1.0, atol=1e-2)
+
+    def test_layernorm_zero_mean(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) + 7.0
+        y = layer_norm(x, jnp.ones((32,)), None)
+        np.testing.assert_allclose(jnp.mean(y, axis=-1), 0.0, atol=1e-5)

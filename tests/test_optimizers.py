@@ -1,0 +1,180 @@
+"""Optimizer semantics: SlimAdam family equivalences + baselines sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ParamMeta, rules_as_tree, second_moment_elements, table3_rules
+from repro.core.baselines import (
+    adafactor,
+    adalayer_rules,
+    adam_mini_v2_rules,
+    lion,
+    sm3,
+)
+from repro.core.slim_adam import scale_by_slim_adam, slim_adam
+from repro.optim import adamw, apply_updates, global_norm, multi_steps, scale_by_adam, sgdm
+from repro.optim.schedules import warmup_cosine
+
+
+def _toy():
+    key = jax.random.PRNGKey(0)
+    params = {
+        "w": jax.random.normal(key, (12, 8)),
+        "e": jax.random.normal(key, (32, 12)),
+        "n": jnp.ones((12,)),
+    }
+    meta = {
+        "w": ParamMeta(axes=("embed", "mlp"), role="mlp_up", fan_in=("embed",), fan_out=("mlp",)),
+        "e": ParamMeta(axes=("vocab", "embed"), role="token_embedding",
+                       fan_in=("vocab",), fan_out=("embed",)),
+        "n": ParamMeta(axes=("embed",), role="norm"),
+    }
+    def grad_fn(p, seed=1):
+        k = jax.random.PRNGKey(seed)
+        return jax.tree.map(lambda x: jax.random.normal(k, x.shape) * 0.1, p)
+    return params, meta, grad_fn
+
+
+class TestSlimEqualsAdam:
+    """K = () for every tensor must reproduce Adam bit-for-bit (paper §2)."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=1, max_value=5))
+    def test_trajectory_equivalence(self, n_steps):
+        params, meta, grad_fn = _toy()
+        dims = jax.tree.map(lambda p: (), params)
+        tx_slim = slim_adam(1e-3, dims, weight_decay=0.1)
+        tx_adam = adamw(1e-3, weight_decay=0.1)
+        s1, s2 = tx_slim.init(params), tx_adam.init(params)
+        p1 = p2 = params
+        for i in range(n_steps):
+            g1, g2 = grad_fn(p1, i), grad_fn(p2, i)
+            u1, s1 = tx_slim.update(g1, s1, p1)
+            u2, s2 = tx_adam.update(g2, s2, p2)
+            p1, p2 = apply_updates(p1, u1), apply_updates(p2, u2)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+    def test_constant_along_k_exact(self):
+        """If g^2 is constant along K, compression is lossless: SlimAdam with
+        K equals Adam exactly — the paper's core premise."""
+        params = {"w": jnp.zeros((4, 6))}
+        g = {"w": jnp.broadcast_to(jnp.arange(1.0, 5.0)[:, None], (4, 6))}  # const along axis 1
+        tx_slim = slim_adam(1e-2, {"w": (1,)}, weight_decay=0.0)
+        tx_adam = adamw(1e-2, weight_decay=0.0)
+        s1, s2 = tx_slim.init(params), tx_adam.init(params)
+        p1 = p2 = params
+        for _ in range(3):
+            u1, s1 = tx_slim.update(g, s1, p1)
+            u2, s2 = tx_adam.update(g, s2, p2)
+            p1, p2 = apply_updates(p1, u1), apply_updates(p2, u2)
+        np.testing.assert_allclose(p1["w"], p2["w"], rtol=1e-6)
+
+    def test_state_is_reduced(self):
+        params, meta, _ = _toy()
+        rules = table3_rules(meta)
+        dims = rules_as_tree(rules, params, meta)
+        tx = scale_by_slim_adam(dims)
+        state = tx.init(params)
+        assert state.nu["w"].shape == (12, 1)   # mlp_up: fan_out ('mlp') reduced
+        assert state.nu["e"].shape == (32, 1)   # embedding dim reduced, vocab kept
+        assert state.nu["n"].shape == (12,)     # vector-like untouched
+        stored = second_moment_elements(params, dims)
+        assert stored == 12 + 32 + 12
+
+    def test_adalayer_is_full_reduction(self):
+        params, meta, _ = _toy()
+        dims = rules_as_tree(adalayer_rules(meta), params, meta)
+        tx = scale_by_slim_adam(dims)
+        state = tx.init(params)
+        assert state.nu["w"].shape == (1, 1)
+        assert state.nu["n"].shape == (1,)
+
+    def test_adam_mini_v2_shapes(self):
+        params, meta, _ = _toy()
+        dims = rules_as_tree(adam_mini_v2_rules(meta), params, meta)
+        tx = scale_by_slim_adam(dims)
+        state = tx.init(params)
+        assert state.nu["w"].shape == (1, 8)    # one moment per output neuron
+        assert state.nu["e"].shape == (32, 1)   # one per token
+        assert state.nu["n"].shape == (1,)      # norms compressed
+
+
+class TestTransformations:
+    def test_clip_by_global_norm(self):
+        from repro.optim import clip_by_global_norm
+        tx = clip_by_global_norm(1.0)
+        g = {"a": jnp.full((4,), 10.0)}
+        u, _ = tx.update(g, tx.init(g), g)
+        np.testing.assert_allclose(float(global_norm(u)), 1.0, rtol=1e-5)
+        small = {"a": jnp.full((4,), 0.01)}
+        u2, _ = tx.update(small, tx.init(small), small)
+        np.testing.assert_allclose(u2["a"], small["a"])  # never amplifies
+
+    def test_warmup_cosine_schedule(self):
+        sched = warmup_cosine(peak=1.0, warmup_steps=10, total_steps=110)
+        assert float(sched(jnp.asarray(0))) == 0.0
+        np.testing.assert_allclose(float(sched(jnp.asarray(10))), 1.0, rtol=1e-5)
+        np.testing.assert_allclose(float(sched(jnp.asarray(110))), 0.1, rtol=1e-4)
+        assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+
+    def test_multi_steps_matches_big_batch(self):
+        """k accumulation micro-steps == one step on the averaged gradient."""
+        params = {"w": jnp.ones((4, 4))}
+        inner = adamw(1e-2, weight_decay=0.0)
+        acc = multi_steps(inner, every_k=4)
+        gs = [jax.tree.map(lambda p: jax.random.normal(jax.random.PRNGKey(i), p.shape), params)
+              for i in range(4)]
+        s = acc.init(params)
+        p1 = params
+        for g in gs:
+            u, s = acc.update(g, s, p1)
+            p1 = apply_updates(p1, u)
+        g_mean = jax.tree.map(lambda *x: sum(x) / 4, *gs)
+        s2 = inner.init(params)
+        u2, s2 = inner.update(g_mean, s2, params)
+        p2 = apply_updates(params, u2)
+        np.testing.assert_allclose(p1["w"], p2["w"], rtol=1e-6)
+
+    def test_bias_correction_first_step(self):
+        """After one step from zero state, update == g/|g| elementwise (+eps)."""
+        params = {"w": jnp.zeros((3,))}
+        tx = scale_by_adam(b1=0.9, b2=0.999, eps=0.0)
+        g = {"w": jnp.array([1.0, -2.0, 0.5])}
+        u, _ = tx.update(g, tx.init(params), params)
+        np.testing.assert_allclose(u["w"], jnp.sign(g["w"]), rtol=1e-5)
+
+
+class TestBaselines:
+    @pytest.mark.parametrize("maker", [
+        lambda: adafactor(3e-2), lambda: adafactor(3e-2, momentum=0.9),
+        lambda: sm3(3e-2), lambda: lion(3e-2), lambda: sgdm(3e-2),
+    ])
+    def test_runs_and_descends_quadratic(self, maker):
+        """Every baseline optimizes a convex quadratic."""
+        tx = maker()
+        p = {"w": jnp.array([3.0, -2.0, 1.5, 4.0])}
+        s = tx.init(p)
+        loss0 = float(jnp.sum(p["w"] ** 2))
+        for _ in range(200):
+            g = jax.tree.map(lambda x: 2 * x, p)
+            u, s = tx.update(g, s, p)
+            p = apply_updates(p, u)
+        assert float(jnp.sum(p["w"] ** 2)) < loss0 * 0.5
+
+    def test_adafactor_factored_state_is_sublinear(self):
+        p = {"w": jnp.ones((64, 32))}
+        tx = adafactor(1e-3)
+        s = tx.init(p)
+        inner = s.inner_states[1]  # (clip, core, lr)
+        assert inner.vr["w"].shape == (64,)
+        assert inner.vc["w"].shape == (32,)
+
+    def test_sm3_state_is_per_axis(self):
+        p = {"w": jnp.ones((8, 6))}
+        tx = sm3(1e-3)
+        s = tx.init(p)
+        accs = s.inner_states[1].accs["w"]
+        assert accs[0].shape == (8, 1) and accs[1].shape == (1, 6)
