@@ -1,0 +1,13 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-quick ci
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench-quick:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --preset quick --only opt_speed
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --preset quick --only opt_speed_tree
+
+ci:
+	bash scripts/ci.sh

@@ -23,6 +23,7 @@ ALL = {
     "rule_robustness": rule_robustness.main,      # Tables 1-2, Fig 30
     "opt_memory": opt_memory.main,                # memory table (full-scale archs)
     "opt_speed": opt_speed.main,                  # kernel micro-bench
+    "opt_speed_tree": opt_speed.tree_main,        # whole-tree fused step, jnp vs fused
     "stability": stability.main,                  # Fig 11
     "resnet_snr": resnet_snr.main,                # Fig 5, §3.1.3
 }

@@ -22,6 +22,8 @@ def main():
                     help="adam (measure SNR) | slim | slim_snr | adam_mini_v2 | ...")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt", default="/tmp/repro_gpt_ckpt")
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "fused", "auto"),
+                    help="optimizer execution backend")
     args = ap.parse_args()
 
     if args.preset == "full":
@@ -34,7 +36,8 @@ def main():
     data = ZipfLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch))
     tc = TrainerConfig(total_steps=args.steps, log_every=max(args.steps // 10, 1),
                        ckpt_every=max(args.steps // 4, 1), ckpt_dir=args.ckpt,
-                       measure_snr=(args.optimizer == "adam"), snr_early_every=20)
+                       measure_snr=(args.optimizer == "adam"), snr_early_every=20,
+                       backend=args.backend)
     tr = Trainer(cfg, args.optimizer, args.lr, data, tc)
     if tr.step:
         print(f"resumed from checkpoint at step {tr.step}")

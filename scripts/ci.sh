@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full test suite + the quick optimizer benchmarks in Pallas
+# interpret mode (correctness harness; the roofline columns are analytic).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.run --preset quick --only opt_speed
+python -m benchmarks.run --preset quick --only opt_speed_tree

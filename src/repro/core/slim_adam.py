@@ -19,16 +19,16 @@ from typing import Any, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..optim import fused
 from ..optim.base import (
     GradientTransformation,
     ScalarOrSchedule,
     add_decayed_weights,
     chain,
     clip_by_global_norm,
+    resolve_backend,
     scale_by_learning_rate,
 )
-from ..optim.adam import bias_correction
-
 PyTree = Any
 Dims = Tuple[int, ...]
 
@@ -60,13 +60,22 @@ def scale_by_slim_adam(
     eps: float = 1e-8,
     *,
     use_first_moment: bool = True,
+    backend: str = "jnp",
+    bucket_min_size: int = fused.DEFAULT_BUCKET_MIN,
 ) -> GradientTransformation:
     """Adam preconditioner with mean-shared second moments along per-leaf dims.
 
     ``dims_tree``: pytree with the *same structure as params*, each leaf a
     (possibly empty) tuple of reduction dims. Tuples are static — they shape
     the state pytree at init.
+
+    ``backend`` selects the execution path (``repro.optim.base.BACKENDS``):
+    'fused' routes K != () leaves through the slim Pallas kernel (any
+    dims-subset, canonicalized to a minor-axis reduction) and K = () leaves
+    through the dense kernel with small-leaf bucketing; the jnp path remains
+    the per-leaf fallback. State layout is backend-independent.
     """
+    backend_r = resolve_backend(backend)
     # Tuples inside a pytree would be traversed; treat them as leaves by
     # flattening once against params at init/update time.
 
@@ -88,28 +97,29 @@ def scale_by_slim_adam(
         d_leaves = [tuple(d) for d in treedef.flatten_up_to(dims_tree)]
         nu_leaves = treedef.flatten_up_to(state.nu)
 
-        new_nu = []
-        for g, v, dims in zip(g_leaves, nu_leaves, d_leaves):
-            g2 = jnp.square(g.astype(jnp.float32))
-            ek = jnp.mean(g2, axis=dims, keepdims=True) if dims else g2
-            new_nu.append(b2 * v + (1 - b2) * ek)
+        if backend_r == "fused":
+            mu_leaves = treedef.flatten_up_to(state.mu) if use_first_moment else None
+            u, mu_l, nu_l = fused.slim_tree_update(
+                g_leaves, mu_leaves, nu_leaves, d_leaves, b1=b1, b2=b2,
+                eps=eps, count=count, use_first_moment=use_first_moment,
+                bucket_min_size=bucket_min_size)
+            unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+            return unflat(u), ScaleBySlimAdamState(
+                count=count, mu=unflat(mu_l) if use_first_moment else None,
+                nu=unflat(nu_l))
 
-        bc1 = bias_correction(b1, count)
-        bc2 = bias_correction(b2, count)
-
-        if use_first_moment:
-            mu_leaves = treedef.flatten_up_to(state.mu)
-            new_mu = [b1 * m + (1 - b1) * g.astype(jnp.float32) for m, g in zip(mu_leaves, g_leaves)]
-            num = [m / bc1 for m in new_mu]
-            mu_out = jax.tree_util.tree_unflatten(treedef, new_mu)
-        else:
-            num = [g.astype(jnp.float32) for g in g_leaves]
-            mu_out = None
-
-        out = [n / (jnp.sqrt(v / bc2) + eps) for n, v in zip(num, new_nu)]
+        # Per-leaf reference math shared with the fused backend's fallback
+        # leaves — one definition of the semantics oracle.
+        mu_leaves = treedef.flatten_up_to(state.mu) if use_first_moment else [None] * len(g_leaves)
+        outs = [fused.jnp_slim_leaf(g, m, v, dims, b1=b1, b2=b2, eps=eps,
+                                    count=count, use_first_moment=use_first_moment)
+                for g, m, v, dims in zip(g_leaves, mu_leaves, nu_leaves, d_leaves)]
+        mu_out = (jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+                  if use_first_moment else None)
         return (
-            jax.tree_util.tree_unflatten(treedef, out),
-            ScaleBySlimAdamState(count=count, mu=mu_out, nu=jax.tree_util.tree_unflatten(treedef, new_nu)),
+            jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs]),
+            ScaleBySlimAdamState(count=count, mu=mu_out,
+                                 nu=jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])),
         )
 
     return GradientTransformation(init_fn, update_fn)
@@ -123,6 +133,7 @@ def slim_adam(
     eps: float = 1e-8,
     weight_decay: float = 0.1,
     grad_clip: Optional[float] = 1.0,
+    backend: str = "jnp",
 ) -> GradientTransformation:
     """Drop-in AdamW recipe with SlimAdam's compressed preconditioner.
 
@@ -132,7 +143,7 @@ def slim_adam(
     parts = []
     if grad_clip is not None:
         parts.append(clip_by_global_norm(grad_clip))
-    parts.append(scale_by_slim_adam(dims_tree, b1=b1, b2=b2, eps=eps))
+    parts.append(scale_by_slim_adam(dims_tree, b1=b1, b2=b2, eps=eps, backend=backend))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
     parts.append(scale_by_learning_rate(learning_rate))

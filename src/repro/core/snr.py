@@ -20,18 +20,39 @@ import jax
 import jax.numpy as jnp
 
 from .labels import ParamMeta, STRUCTURAL_AXES, flatten_with_names
+from ..optim.base import resolve_backend
 
 _VAR_EPS = 1e-30  # guards 0/0 for exactly-constant slices; SNR -> huge (compressible)
 
 
-def snr_along_dims(v: jnp.ndarray, dims: Tuple[int, ...], *, per_remaining_dim: Optional[int] = None) -> jnp.ndarray:
+def snr_along_dims(v: jnp.ndarray, dims: Tuple[int, ...], *, per_remaining_dim: Optional[int] = None,
+                   backend: str = "jnp") -> jnp.ndarray:
     """SNR_K for positional reduction dims.
 
     Returns a scalar, or — when ``per_remaining_dim`` names a remaining dim —
     a vector over that dim (used for per-depth curves on scan-stacked params).
+
+    ``backend='fused'`` computes the scalar form through the fused snr_stats
+    kernel: one pass over V yields per-row (sum, sum-sq) jointly, so the
+    measurement adds a single read of V instead of XLA's separate mean and
+    variance reductions. The per-remaining-dim form always runs in jnp.
     """
     if not dims:
         raise ValueError("K must be non-empty for SNR; K=None means 'no compression'")
+    if (resolve_backend(backend) == "fused" and per_remaining_dim is None
+            and v.ndim >= 1 and v.size > 0):
+        # snr_op is the jit-cached centered-stats kernel + finalization (its
+        # eps equals _VAR_EPS); only the canonicalization happens here.
+        from ..kernels.ops import canon2d, canon_apply, default_interpret, snr_op
+        from ..kernels.tiling import row_fits
+        cn = canon2d(v.shape, dims)
+        # A non-trailing K would materialize a full transpose of V across
+        # the kernel boundary (~3x the single read this path promises), and
+        # a canonical row wider than VMEM can't be strip-tiled at all —
+        # jnp's fused mean/var serves both cases.
+        if not cn.is_transpose and row_fits(cn.cols, 3):
+            v2 = canon_apply(v.astype(jnp.float32), cn)
+            return snr_op(v2, interpret=default_interpret())
     v = v.astype(jnp.float32)
     mean = jnp.mean(v, axis=dims, keepdims=True)
     var = jnp.mean(jnp.square(v - mean), axis=dims, keepdims=True)
@@ -48,12 +69,12 @@ def snr_along_dims(v: jnp.ndarray, dims: Tuple[int, ...], *, per_remaining_dim: 
     return jnp.mean(ratio, axis=other)
 
 
-def measure_leaf_snr(v: jnp.ndarray, meta: ParamMeta) -> Dict[str, jnp.ndarray]:
+def measure_leaf_snr(v: jnp.ndarray, meta: ParamMeta, *, backend: str = "jnp") -> Dict[str, jnp.ndarray]:
     """Scalar SNR per candidate K ('fan_in'/'fan_out'/'both') for one tensor."""
     out: Dict[str, jnp.ndarray] = {}
     for label, axis_names in meta.candidate_ks().items():
         dims = meta.dims_of(axis_names)
-        out[label] = snr_along_dims(v, dims)
+        out[label] = snr_along_dims(v, dims, backend=backend)
     return out
 
 
@@ -69,17 +90,18 @@ def measure_leaf_snr_per_layer(v: jnp.ndarray, meta: ParamMeta) -> Dict[str, jnp
     return out
 
 
-def measure_tree_snr(nu: Any, meta: Any) -> Dict[str, Dict[str, jnp.ndarray]]:
+def measure_tree_snr(nu: Any, meta: Any, *, backend: str = "jnp") -> Dict[str, Dict[str, jnp.ndarray]]:
     """{param_name: {K_label: snr}} over a whole second-moment pytree.
 
     Leaves whose meta marks them vector-like produce an empty dict (the paper
-    never compresses them).
+    never compresses them). ``backend='fused'`` runs each candidate's
+    mean/var through the one-pass snr_stats kernel.
     """
     nu_named, _ = flatten_with_names(nu)
     meta_named, _ = flatten_with_names(meta)
     out: Dict[str, Dict[str, jnp.ndarray]] = {}
     for (name, v), (_, m) in zip(nu_named, meta_named):
-        out[name] = measure_leaf_snr(v, m)
+        out[name] = measure_leaf_snr(v, m, backend=backend)
     return out
 
 

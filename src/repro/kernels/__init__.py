@@ -1,4 +1,18 @@
-from .ops import fused_adam_op, slim_update_op, snr_op
+from .ops import (
+    Canon2D,
+    adam_precond,
+    canon2d,
+    canon_apply,
+    canon_restore,
+    default_interpret,
+    fused_adam_op,
+    slim_precond,
+    slim_update_nd,
+    slim_update_op,
+    snr_op,
+)
 from . import ref
 
-__all__ = ["fused_adam_op", "slim_update_op", "snr_op", "ref"]
+__all__ = ["fused_adam_op", "slim_update_op", "slim_update_nd", "snr_op",
+           "adam_precond", "slim_precond", "Canon2D", "canon2d", "canon_apply",
+           "canon_restore", "default_interpret", "ref"]

@@ -19,6 +19,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def bias_corrections(b1, b2, count) -> jnp.ndarray:
+    """(1-b1^t, 1-b2^t) as a length-2 fp32 operand vector.
+
+    ``count`` may be a Python int or a traced int array — inside a
+    GradientTransformation's jitted update the step counter is state, so the
+    corrections ride in through the scalar operand instead of being baked
+    into the kernel as compile-time constants.
+    """
+    c = jnp.asarray(count, jnp.float32)
+    return jnp.stack([1.0 - jnp.asarray(b1, jnp.float32) ** c,
+                      1.0 - jnp.asarray(b2, jnp.float32) ** c])
+
+
 def _adam_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
                  p_out, m_out, v_out, *, b1: float, b2: float, eps: float, wd: float):
     lr = scal_ref[0]
@@ -71,3 +84,47 @@ def fused_adam(p, g, m, v, *, lr: float, b1: float = 0.9, b2: float = 0.95,
         ],
         interpret=interpret,
     )(p, g, m, v, scal)
+
+
+def _adam_precond_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
+                         *, b1: float, b2: float, eps: float):
+    bc1 = scal_ref[0]
+    bc2 = scal_ref[1]
+    g = g_ref[...].astype(jnp.float32)
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+    u_out[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def adam_precond(g, m, v, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 count=1, block: tuple = (256, 512), interpret: bool = True):
+    """Preconditioned Adam update only: (g, m, v) -> (u, m', v'), all fp32.
+
+    The GradientTransformation form of the fused step — lr / weight decay /
+    the parameter write happen downstream in the chain, so this streams 6
+    tensor passes (g, m, v read + u, m', v' write) and never touches p.
+    ``count`` may be a traced int array (see :func:`bias_corrections`).
+    """
+    r, c = g.shape
+    tr = min(block[0], r)
+    tc = min(block[1], c)
+    if r % tr or c % tc:
+        rp, cp = -(-r // tr) * tr, -(-c // tc) * tc
+        pad = lambda x: jnp.pad(x, ((0, rp - r), (0, cp - c)))
+        uo, mo, vo = adam_precond(pad(g), pad(m), pad(v), b1=b1, b2=b2, eps=eps,
+                                  count=count, block=block, interpret=interpret)
+        return uo[:r, :c], mo[:r, :c], vo[:r, :c]
+
+    scal = bias_corrections(b1, b2, count)
+    spec = pl.BlockSpec((tr, tc), lambda i, j: (i, j))
+    kernel = functools.partial(_adam_precond_kernel, b1=b1, b2=b2, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // tr, c // tc),
+        in_specs=[spec, spec, spec, pl.BlockSpec((2,), lambda i, j: (0,))],
+        out_specs=[spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.float32)] * 3,
+        interpret=interpret,
+    )(g, m, v, scal)

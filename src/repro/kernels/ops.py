@@ -8,17 +8,95 @@ the lane-friendly direction).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .fused_adam import fused_adam
-from .slim_update import slim_update
-from .snr_stats import snr_stats
-from .ref import snr_from_stats
+from .fused_adam import adam_precond, fused_adam
+from .slim_update import slim_precond, slim_update
+from .snr_stats import snr_stats, snr_stats_centered
+from .ref import snr_from_centered_stats, snr_from_stats
 
-__all__ = ["fused_adam_op", "slim_update_op", "snr_op", "fused_adam", "slim_update", "snr_stats"]
+__all__ = ["fused_adam_op", "slim_update_op", "slim_update_nd", "snr_op",
+           "fused_adam", "slim_update", "adam_precond", "slim_precond",
+           "snr_stats", "snr_stats_centered", "Canon2D", "canon2d",
+           "canon_apply", "canon_restore", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend (where the
+    compiled kernel is the point; elsewhere the interpreter is the
+    correctness harness)."""
+    return jax.default_backend() != "tpu"
+
+
+class Canon2D(NamedTuple):
+    """Plan for canonicalizing an n-D reduction to the kernels' 2-D layout.
+
+    The kernels always reduce along the minor axis (the lane-friendly
+    direction on TPU); an arbitrary dims-subset reduction becomes a
+    kept-dims-major transpose followed by a reshape to (prod(kept),
+    prod(reduced)). The transpose is a no-op whenever the reduced dims are
+    already trailing (fan_in of a standard (fan_in-minor) weight). When it
+    is not, the re-layout *materializes* — a pallas_call is an optimization
+    barrier, so XLA cannot fuse a transpose into the kernel — costing extra
+    HBM passes per transposed operand (``is_transpose`` exposes this so
+    byte models can account for it).
+    """
+
+    perm: Tuple[int, ...]       # kept dims first, reduced dims last
+    inv: Tuple[int, ...]        # inverse permutation
+    rows: int                   # prod of kept dim sizes (>= 1)
+    cols: int                   # prod of reduced dim sizes (>= 1)
+
+    @property
+    def is_transpose(self) -> bool:
+        return self.perm != tuple(range(len(self.perm)))
+
+
+def canon2d(shape: Tuple[int, ...], dims: Tuple[int, ...]) -> Canon2D:
+    """Plan a (rows=kept, cols=reduced) 2-D view of ``shape`` for reduction
+    dims ``dims`` (any non-empty subset of axes)."""
+    ndim = len(shape)
+    if not dims:
+        raise ValueError("canon2d needs a non-empty reduction dim set")
+    for d in dims:
+        if not -ndim <= d < ndim:
+            # Match the jnp path's behavior (jnp.mean raises) — a silent
+            # d % ndim wrap would reduce the wrong axis.
+            raise ValueError(f"reduction dim {d} out of range for shape {shape}")
+    dset = {d % ndim for d in dims}
+    if len(dset) != len(dims):
+        # jnp.mean also rejects aliased axes like (1, -1); keep parity.
+        raise ValueError(f"duplicate reduction dims in {dims} for shape {shape}")
+    kept = tuple(i for i in range(ndim) if i not in dset)
+    perm = kept + tuple(sorted(dset))
+    inv = [0] * ndim
+    for newpos, old in enumerate(perm):
+        inv[old] = newpos
+    rows = 1
+    for i in kept:
+        rows *= shape[i]
+    cols = 1
+    for i in sorted(dset):
+        cols *= shape[i]
+    return Canon2D(perm=perm, inv=tuple(inv), rows=rows, cols=cols)
+
+
+def canon_apply(x: jnp.ndarray, cn: Canon2D, *, reduced_cols: bool = False) -> jnp.ndarray:
+    """Bring a full tensor (or a size-1-kept-dims reduced moment, with
+    ``reduced_cols=True``) into the kernel's (rows, cols) layout."""
+    xt = jnp.transpose(x, cn.perm) if cn.is_transpose else x
+    return xt.reshape(cn.rows, 1 if reduced_cols else cn.cols)
+
+
+def canon_restore(y2: jnp.ndarray, cn: Canon2D, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Inverse of :func:`canon_apply` back to the original layout ``shape``
+    (pass the reduced/stored shape for reduced moments)."""
+    permuted = tuple(shape[i] for i in cn.perm)
+    y = y2.reshape(permuted)
+    return jnp.transpose(y, cn.inv) if cn.is_transpose else y
 
 
 @functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "wd", "count", "interpret"))
@@ -48,8 +126,29 @@ def slim_update_op(p, g, m, v_red, *, axis: int, lr, b1=0.9, b2=0.95, eps=1e-8,
                        count=count, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("dims", "lr", "b1", "b2", "eps", "wd", "count", "interpret"))
+def slim_update_nd(p, g, m, v_red, *, dims: Tuple[int, ...], lr, b1=0.9, b2=0.95,
+                   eps=1e-8, wd=0.0, count=1, interpret=True):
+    """n-D params, any reduction-dims subset (the general SlimAdam spec).
+
+    ``v_red`` keeps the reduced axes as size 1, matching
+    ``repro.core.slim_adam`` state layout. Canonicalizes to the 2-D
+    minor-axis kernel via :func:`canon2d` and restores the original layout.
+    """
+    cn = canon2d(p.shape, dims)
+    p2 = canon_apply(p, cn)
+    g2 = canon_apply(g, cn)
+    m2 = canon_apply(m, cn)
+    v2 = canon_apply(v_red, cn, reduced_cols=True)
+    po, mo, vo = slim_update(p2, g2, m2, v2, lr=lr, b1=b1, b2=b2, eps=eps,
+                             wd=wd, count=count, interpret=interpret)
+    return (canon_restore(po, cn, p.shape), canon_restore(mo, cn, m.shape),
+            canon_restore(vo, cn, v_red.shape))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def snr_op(v, *, interpret=True) -> jnp.ndarray:
-    """Scalar SNR along axis=1 of a 2-D moment tensor via the fused kernel."""
-    s1, s2 = snr_stats(v, interpret=interpret)
-    return snr_from_stats(s1, s2, v.shape[1])
+    """Scalar SNR along axis=1 of a 2-D moment tensor via the fused kernel
+    (centered stats — accurate for near-constant, high-SNR rows)."""
+    s1, s1c, s2c = snr_stats_centered(v, interpret=interpret)
+    return snr_from_centered_stats(s1, s1c, s2c, v.shape[1])

@@ -59,3 +59,13 @@ def snr_from_stats(s1: jnp.ndarray, s2: jnp.ndarray, n: int, eps: float = 1e-30)
     mean = s1 / n
     var = s2 / n - jnp.square(mean)
     return jnp.mean(jnp.square(mean) / (jnp.maximum(var, 0.0) + eps))
+
+
+def snr_from_centered_stats(s1: jnp.ndarray, s1c: jnp.ndarray, s2c: jnp.ndarray,
+                            n: int, eps: float = 1e-30) -> jnp.ndarray:
+    """Finalize ``snr_stats_centered`` output: variance from the shifted sums
+    (shift-invariant, no magnitude-scale cancellation), mean from the raw sum."""
+    mean = s1 / n
+    mean_c = s1c / n
+    var = s2c / n - jnp.square(mean_c)
+    return jnp.mean(jnp.square(mean) / (jnp.maximum(var, 0.0) + eps))

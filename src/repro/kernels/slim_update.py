@@ -18,6 +18,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .fused_adam import bias_corrections
+from .tiling import fit_row_block
+
 
 def _slim_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
                  p_out, m_out, v_out, *, b1: float, b2: float, eps: float,
@@ -42,7 +45,9 @@ def slim_update(p, g, m, v_row, *, lr: float, b1: float = 0.9, b2: float = 0.95,
                 row_block: int = 32, interpret: bool = True):
     """p, g, m: (R, C); v_row: (R, 1) fp32 reduced moment. Returns (p', m', v')."""
     r, c = p.shape
-    tr = min(row_block, r)
+    # 6 full-width fp32 buffers live per instance (p, g, m in + p', m' out,
+    # plus cast headroom); shrink the strip for wide reduced dims.
+    tr = fit_row_block(c, row_block, r, 6)
     if r % tr:
         rp = -(-r // tr) * tr
         pad2 = lambda x: jnp.pad(x, ((0, rp - r), (0, 0)))
@@ -71,3 +76,57 @@ def slim_update(p, g, m, v_row, *, lr: float, b1: float = 0.9, b2: float = 0.95,
         ],
         interpret=interpret,
     )(p, g, m, v_row, scal)
+
+
+def _slim_precond_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
+                         *, b1: float, b2: float, eps: float, n_cols: int):
+    bc1 = scal_ref[0]
+    bc2 = scal_ref[1]
+    g = g_ref[...].astype(jnp.float32)                   # (TR, C)
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    ek = jnp.sum(g * g, axis=1, keepdims=True) * (1.0 / n_cols)
+    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # (TR, 1)
+    u_out[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def slim_precond(g, m, v_row, *, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, count=1, row_block: int = 32,
+                 interpret: bool = True):
+    """Preconditioned SlimAdam update only: (g, m, v_row) -> (u, m', v_row').
+
+    g, m: (R, C); v_row: (R, 1) fp32 reduced moment; u is fp32 full-shape.
+    Like :func:`repro.kernels.fused_adam.adam_precond` this is the
+    GradientTransformation form — no parameter read/write, and ``count`` may
+    be traced. Streams 4 full passes (g, m read + u, m' write) plus O(R).
+    """
+    r, c = g.shape
+    # 5 full-width fp32 buffers per instance (g, m in + u, m' out + cast
+    # headroom); shrink the strip for wide reduced dims.
+    tr = fit_row_block(c, row_block, r, 5)
+    if r % tr:
+        rp = -(-r // tr) * tr
+        pad2 = lambda x: jnp.pad(x, ((0, rp - r), (0, 0)))
+        uo, mo, vo = slim_precond(pad2(g), pad2(m), pad2(v_row), b1=b1, b2=b2,
+                                  eps=eps, count=count, row_block=row_block,
+                                  interpret=interpret)
+        return uo[:r], mo[:r], vo[:r]
+
+    scal = bias_corrections(b1, b2, count)
+    strip = pl.BlockSpec((tr, c), lambda i: (i, 0))
+    vspec = pl.BlockSpec((tr, 1), lambda i: (i, 0))
+    kernel = functools.partial(_slim_precond_kernel, b1=b1, b2=b2, eps=eps, n_cols=c)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // tr,),
+        in_specs=[strip, strip, vspec, pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0)),
+                   pl.BlockSpec((tr, c), lambda i: (i, 0)), vspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, m, v_row, scal)

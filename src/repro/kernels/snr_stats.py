@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tiling import fit_row_block
+
 
 def _snr_kernel(v_ref, s1_out, s2_out):
     v = v_ref[...].astype(jnp.float32)        # (TR, C)
@@ -20,7 +22,7 @@ def _snr_kernel(v_ref, s1_out, s2_out):
 def snr_stats(v, *, row_block: int = 64, interpret: bool = True):
     """v: (R, C) -> (row_sum (R,), row_sumsq (R,))."""
     r, c = v.shape
-    tr = min(row_block, r)
+    tr = fit_row_block(c, row_block, r, 2)  # one full-width input + cast copy
     if r % tr:
         rp = -(-r // tr) * tr
         s1, s2 = snr_stats(jnp.pad(v, ((0, rp - r), (0, 0))), row_block=row_block,
@@ -34,5 +36,42 @@ def snr_stats(v, *, row_block: int = 64, interpret: bool = True):
                    pl.BlockSpec((tr,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((r,), jnp.float32),
                    jax.ShapeDtypeStruct((r,), jnp.float32)],
+        interpret=interpret,
+    )(v)
+
+
+def _snr_centered_kernel(v_ref, s1_out, s1c_out, s2c_out):
+    v = v_ref[...].astype(jnp.float32)        # (TR, C)
+    d = v - v[:, 0:1]                         # shift by the row's first entry
+    s1_out[...] = jnp.sum(v, axis=1)
+    s1c_out[...] = jnp.sum(d, axis=1)
+    s2c_out[...] = jnp.sum(d * d, axis=1)
+
+
+def snr_stats_centered(v, *, row_block: int = 64, interpret: bool = True):
+    """v: (R, C) -> (row_sum, shifted_row_sum, shifted_row_sumsq), all (R,).
+
+    The naive one-pass E[v^2] - E[v]^2 variance cancels catastrophically in
+    fp32 for near-constant rows (the high-SNR regime the analysis exists to
+    detect): abs error ~ eps * mean^2 swamps a true variance orders of
+    magnitude smaller. Shifting each row by its first entry makes both sums
+    O(spread) instead of O(magnitude) — variance is shift-invariant, so
+    ``var = s2c/n - (s1c/n)^2`` is accurate to the spread's own precision,
+    still in a single pass over V. The unshifted row sum rides along for the
+    mean (V >= 0, so its summation is stable).
+    """
+    r, c = v.shape
+    tr = fit_row_block(c, row_block, r, 3)  # input + shifted copy + cast
+    if r % tr:
+        rp = -(-r // tr) * tr
+        s1, s1c, s2c = snr_stats_centered(jnp.pad(v, ((0, rp - r), (0, 0))),
+                                          row_block=row_block, interpret=interpret)
+        return s1[:r], s1c[:r], s2c[:r]
+    return pl.pallas_call(
+        _snr_centered_kernel,
+        grid=(r // tr,),
+        in_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tr,), lambda i: (i,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((r,), jnp.float32)] * 3,
         interpret=interpret,
     )(v)

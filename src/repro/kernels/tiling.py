@@ -1,0 +1,28 @@
+"""Shared tiling policy for kernels whose blocks span a full row.
+
+Full-row strips are the right layout for minor-axis reductions
+(slim_update / slim_precond / snr_stats*), but a vocab-width C (50k+) at the
+default row_block would blow VMEM on TPU — never seen in interpret mode, so
+the bound lives here rather than in CI.
+"""
+from __future__ import annotations
+
+# Per-call VMEM working-set budget: conservative slice of the ~16 MiB/core,
+# leaving room for double buffering.
+VMEM_BUDGET = 8 << 20
+
+
+def fit_row_block(n_cols: int, row_block: int, n_rows: int, n_full_width_bufs: int) -> int:
+    """Shrink a row-strip tile so ``n_full_width_bufs`` fp32 (tr, n_cols)
+    buffers fit in :data:`VMEM_BUDGET`. Callers must gate on
+    :func:`row_fits` first — when a single row already exceeds the budget
+    (full-reduction K on a large tensor), no row count can enforce it."""
+    cap = max(1, VMEM_BUDGET // (n_cols * 4 * n_full_width_bufs))
+    return max(1, min(row_block, cap, n_rows))
+
+
+def row_fits(n_cols: int, n_full_width_bufs: int) -> bool:
+    """Whether even a single (1, n_cols) strip's working set fits the budget.
+    When it doesn't, the row-strip kernels can't serve the tensor on a real
+    TPU (interpret mode wouldn't notice) — dispatchers fall back to jnp."""
+    return n_cols * 4 * n_full_width_bufs <= VMEM_BUDGET

@@ -17,7 +17,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..sharding.logical import constrain
+from ..sharding.logical import constrain, shard_map
 from .common import ParamSpec, apply_rotary, normal_init, rotary_embedding, zeros_init
 
 NEG_INF = -1e30
@@ -316,7 +316,7 @@ def _attention_explicit_tp(p, x: jnp.ndarray, cfg: AttnConfig):
         return jax.lax.psum_scatter(y_part, "model", scatter_dimension=1, tiled=True)
 
     kvspec = P(None, "model", None) if kv_sharded else P(None, None, None)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(xspec, P(None, "model", None), kvspec, kvspec, P("model", None, None)),
         out_specs=xspec,

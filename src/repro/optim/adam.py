@@ -11,12 +11,14 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from . import fused
 from .base import (
     GradientTransformation,
     ScalarOrSchedule,
     add_decayed_weights,
     chain,
     clip_by_global_norm,
+    resolve_backend,
     scale_by_learning_rate,
     trace,
 )
@@ -30,11 +32,15 @@ class ScaleByAdamState(NamedTuple):
     nu: object  # second moments, pytree like params (fp32)
 
 
-def bias_correction(decay: float, count: jnp.ndarray) -> jnp.ndarray:
-    return 1.0 - jnp.power(jnp.asarray(decay, jnp.float32), count.astype(jnp.float32))
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
+                  backend: str = "jnp",
+                  bucket_min_size: int = fused.DEFAULT_BUCKET_MIN) -> GradientTransformation:
+    """Adam preconditioner. ``backend`` selects the execution path
+    (see ``repro.optim.base.BACKENDS``): 'fused' streams each eligible leaf
+    through the Pallas kernels with small-leaf bucketing; state layout and
+    results are identical to 'jnp' up to fp32 rounding."""
+    backend = resolve_backend(backend)
 
-
-def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> GradientTransformation:
     def init_fn(params):
         mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -43,20 +49,23 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Grad
     def update_fn(updates, state, params=None):
         del params
         count = state.count + 1
-        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, updates)
-        nu = jax.tree.map(
-            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, updates
-        )
-        bc1 = bias_correction(b1, count)
-        bc2 = bias_correction(b2, count)
-
-        def precond(m, v):
-            m_hat = m / bc1
-            v_hat = v / bc2
-            return m_hat / (jnp.sqrt(v_hat) + eps)
-
-        new_updates = jax.tree.map(precond, mu, nu)
-        return new_updates, ScaleByAdamState(count=count, mu=mu, nu=nu)
+        g_leaves, treedef = jax.tree_util.tree_flatten(updates)
+        mu_leaves = treedef.flatten_up_to(state.mu)
+        nu_leaves = treedef.flatten_up_to(state.nu)
+        if backend == "fused":
+            u, mu_l, nu_l = fused.adam_tree_update(
+                g_leaves, mu_leaves, nu_leaves, b1=b1, b2=b2, eps=eps,
+                count=count, bucket_min_size=bucket_min_size)
+        else:
+            # Per-leaf reference math shared with the fused backend's
+            # fallback leaves — one definition of the semantics oracle.
+            outs = [fused.jnp_adam_leaf(g, m, v, b1=b1, b2=b2, eps=eps, count=count)
+                    for g, m, v in zip(g_leaves, mu_leaves, nu_leaves)]
+            u = [o[0] for o in outs]
+            mu_l = [o[1] for o in outs]
+            nu_l = [o[2] for o in outs]
+        unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+        return unflat(u), ScaleByAdamState(count=count, mu=unflat(mu_l), nu=unflat(nu_l))
 
     return GradientTransformation(init_fn, update_fn)
 
@@ -68,12 +77,13 @@ def adamw(
     eps: float = 1e-8,
     weight_decay: float = 0.1,
     grad_clip: Optional[float] = 1.0,
+    backend: str = "jnp",
 ) -> GradientTransformation:
     """The paper's training recipe: clip(1.0) -> Adam -> decoupled wd -> -lr."""
     parts = []
     if grad_clip is not None:
         parts.append(clip_by_global_norm(grad_clip))
-    parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps))
+    parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps, backend=backend))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
     parts.append(scale_by_learning_rate(learning_rate))

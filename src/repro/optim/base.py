@@ -22,6 +22,23 @@ PyTree = Any
 Schedule = Callable[[jnp.ndarray], jnp.ndarray]
 ScalarOrSchedule = Union[float, Schedule]
 
+# Optimizer execution backends (see repro.optim.fused):
+#   'jnp'   — per-leaf jax.numpy tree-map (the reference path, runs anywhere)
+#   'fused' — route eligible leaves through the fused Pallas kernels
+#             (interpret mode off-TPU), jnp fallback for the rest
+#   'auto'  — 'fused' on TPU, 'jnp' elsewhere (the Pallas interpreter would
+#             be slower than XLA on CPU/GPU, so auto never pays it)
+BACKENDS = ("jnp", "fused", "auto")
+
+
+def resolve_backend(backend: str) -> str:
+    """Collapse 'auto' to a concrete backend for the current jax platform."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+    if backend == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
 
 class GradientTransformation(NamedTuple):
     """A pair of pure functions (init, update).

@@ -1,0 +1,260 @@
+"""Fused optimizer backend: route Adam/SlimAdam pytree updates through the
+Pallas kernels.
+
+The jnp tree-map path materializes every intermediate (g^2, m_hat, v_hat, ...)
+in HBM; the fused kernels stream each tensor exactly once. Per optimizer step
+and leaf the bandwidth model is
+
+    dense Adam       7 passes   (p, g, m, v read + p', m', v' write)
+    SlimAdam (K)     5 passes + O(rows)   (V reduced over K never leaves VMEM)
+
+and in GradientTransformation form (this module: update emitted, p untouched)
+
+    dense precond    6 passes   (g, m, v read + u, m', v' write)
+    slim precond     4 passes + O(rows)
+
+This module implements the per-leaf routing used by
+``repro.optim.adam.scale_by_adam`` and ``repro.core.slim_adam.scale_by_slim_adam``
+when constructed with ``backend="fused"`` (or ``"auto"`` on TPU):
+
+  * canonicalization — any leaf shape goes to 2-D: dense leaves via
+    reshape(-1, minor); compressed leaves via :func:`repro.kernels.canon2d`,
+    which puts the (arbitrary, possibly multi-dim) reduction subset minor so
+    the kernel always reduces along lanes;
+  * dispatch — dense leaves -> ``adam_precond``, compressed leaves ->
+    ``slim_precond``, with a per-leaf jnp fallback for anything the kernels
+    can't serve (scalar leaves, non-float dtypes, empty tensors, the
+    moment-less ``use_first_moment=False`` variant);
+  * bucketing — small dense-treated leaves (elementwise treatment, so
+    flattening is exact) are concatenated into one flat super-tensor per
+    bucket, updated in a single kernel call to amortize launch + padding
+    overhead, and scattered back to the original leaves by an offset map.
+
+All public entry points accept a traced ``count`` (the optimizer step is
+jitted state), and every returned moment/update is fp32, matching the jnp
+path bit-for-bit up to fp32 reassociation.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.fused_adam import bias_corrections
+from ..kernels.ops import (
+    adam_precond,
+    canon2d,
+    canon_apply,
+    canon_restore,
+    default_interpret,
+    slim_precond,
+)
+from ..kernels.tiling import row_fits
+
+Dims = Tuple[int, ...]
+
+# Leaves below this element count get bucketed (one kernel call per bucket
+# instead of per leaf). 16k elements ~ 64 KiB fp32: far below the per-call
+# tile, so launch/pad overhead dominates any per-leaf call at this size.
+DEFAULT_BUCKET_MIN = 1 << 14
+
+
+def _kernel_eligible(g: jnp.ndarray) -> bool:
+    """Leaves the 2-D kernels can serve; the rest take the jnp fallback."""
+    return g.ndim >= 1 and g.size > 0 and jnp.issubdtype(g.dtype, jnp.floating)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf paths
+# ---------------------------------------------------------------------------
+
+
+def jnp_adam_leaf(g, m, v, *, b1, b2, eps, count):
+    """Reference Adam leaf update — the single jnp definition of the
+    semantics; the 'jnp' backend and the fused backend's fallback leaves
+    both call this, with :func:`bias_corrections` shared with the kernels."""
+    g32 = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * g32
+    v_new = b2 * v + (1 - b2) * jnp.square(g32)
+    bc1, bc2 = bias_corrections(b1, b2, count)
+    u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    return u, m_new, v_new
+
+
+def jnp_slim_leaf(g, m, v, dims: Dims, *, b1, b2, eps, count, use_first_moment):
+    """Reference SlimAdam leaf update (see :func:`jnp_adam_leaf`)."""
+    g32 = g.astype(jnp.float32)
+    g2 = jnp.square(g32)
+    ek = jnp.mean(g2, axis=dims, keepdims=True) if dims else g2
+    v_new = b2 * v + (1 - b2) * ek
+    bc1, bc2 = bias_corrections(b1, b2, count)
+    if use_first_moment:
+        m_new = b1 * m + (1 - b1) * g32
+        num = m_new / bc1
+    else:
+        m_new = None
+        num = g32
+    u = num / (jnp.sqrt(v_new / bc2) + eps)
+    return u, m_new, v_new
+
+
+_LANES = 512  # adam_precond's tile width
+
+
+def _fold_lanes(flat: jnp.ndarray) -> jnp.ndarray:
+    """Pad a flat fp32 vector to a (rows, _LANES) layout. A (1, N) shape
+    would tile as single-sublane blocks on TPU, wasting ~8x vector-lane
+    utilization; lane-width rows fill whole tiles. Zero padding yields zero
+    updates, sliced away by the caller."""
+    n = flat.size
+    rows = -(-n // _LANES)
+    return jnp.pad(flat, (0, rows * _LANES - n)).reshape(rows, _LANES)
+
+
+def _dense_kernel_leaf(g, m, v, *, b1, b2, eps, count, interpret):
+    shape = g.shape
+    if g.ndim == 1:
+        n = g.size
+        to2d = lambda x: _fold_lanes(x.astype(jnp.float32))
+        un2d = lambda y: y.ravel()[:n]
+    else:
+        to2d = (lambda x: x) if g.ndim == 2 else (lambda x: x.reshape(-1, shape[-1]))
+        un2d = lambda y: y.reshape(shape)
+    u2, m2, v2 = adam_precond(to2d(g), to2d(m), to2d(v), b1=b1, b2=b2, eps=eps,
+                              count=count, interpret=interpret)
+    return un2d(u2), un2d(m2), un2d(v2)
+
+
+def _slim_kernel_leaf(g, m, v_red, dims: Dims, *, b1, b2, eps, count, interpret):
+    cn = canon2d(g.shape, dims)
+    u2, m2o, v2o = slim_precond(canon_apply(g, cn), canon_apply(m, cn),
+                                canon_apply(v_red, cn, reduced_cols=True),
+                                b1=b1, b2=b2, eps=eps, count=count,
+                                interpret=interpret)
+    return (canon_restore(u2, cn, g.shape), canon_restore(m2o, cn, g.shape),
+            canon_restore(v2o, cn, v_red.shape))
+
+
+# ---------------------------------------------------------------------------
+# Bucketing: one kernel call over many small dense-treated leaves
+# ---------------------------------------------------------------------------
+
+
+def _bucket_update(gs: Sequence[jnp.ndarray], ms: Sequence[jnp.ndarray],
+                   vs: Sequence[jnp.ndarray], *, b1, b2, eps, count, interpret):
+    """Flatten + concatenate small leaves, update as one lane-folded 2-D
+    super-tensor (see :func:`_fold_lanes`), scatter results back by offset.
+    Dense Adam is elementwise, so the round-trip is exact."""
+    flat2d = lambda xs: _fold_lanes(
+        jnp.concatenate([x.astype(jnp.float32).ravel() for x in xs]))
+    ub, mo, vo = adam_precond(flat2d(gs), flat2d(ms), flat2d(vs), b1=b1, b2=b2,
+                              eps=eps, count=count, interpret=interpret)
+    ub, mo, vo = ub.ravel(), mo.ravel(), vo.ravel()
+    out_u: List[jnp.ndarray] = []
+    out_m: List[jnp.ndarray] = []
+    out_v: List[jnp.ndarray] = []
+    off = 0
+    for g in gs:
+        sl = slice(off, off + g.size)
+        out_u.append(ub[sl].reshape(g.shape))
+        out_m.append(mo[sl].reshape(g.shape))
+        out_v.append(vo[sl].reshape(g.shape))
+        off += g.size
+    return out_u, out_m, out_v
+
+
+def _flush_bucket(bucket, gs, ms, vs, out_u, out_m, out_v, *, interpret, **kw):
+    """Resolve the collected small-leaf indices in place: a lone leaf skips
+    the concat round-trip, two or more share one kernel call."""
+    if len(bucket) == 1:
+        i = bucket[0]
+        out_u[i], out_m[i], out_v[i] = _dense_kernel_leaf(
+            gs[i], ms[i], vs[i], interpret=interpret, **kw)
+    elif bucket:
+        us, mss, vss = _bucket_update([gs[i] for i in bucket],
+                                      [ms[i] for i in bucket],
+                                      [vs[i] for i in bucket],
+                                      interpret=interpret, **kw)
+        for i, u, m, v in zip(bucket, us, mss, vss):
+            out_u[i], out_m[i], out_v[i] = u, m, v
+
+
+# ---------------------------------------------------------------------------
+# Tree-level entry points (operate on flat leaf lists; the transformations
+# own flatten/unflatten so pytree structure stays their concern)
+# ---------------------------------------------------------------------------
+
+
+def adam_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Sequence[jnp.ndarray],
+                     nu_leaves: Sequence[jnp.ndarray], *, b1: float, b2: float,
+                     eps: float, count, interpret: Optional[bool] = None,
+                     bucket_min_size: int = DEFAULT_BUCKET_MIN):
+    """Dense Adam over a leaf list: kernels for eligible leaves (small ones
+    bucketed), jnp fallback otherwise. Returns (updates, new_mu, new_nu)."""
+    interpret = default_interpret() if interpret is None else interpret
+    kw = dict(b1=b1, b2=b2, eps=eps, count=count)
+    n = len(g_leaves)
+    out_u: List[Any] = [None] * n
+    out_m: List[Any] = [None] * n
+    out_v: List[Any] = [None] * n
+    bucket: List[int] = []
+    for i, (g, m, v) in enumerate(zip(g_leaves, mu_leaves, nu_leaves)):
+        if not _kernel_eligible(g):
+            out_u[i], out_m[i], out_v[i] = jnp_adam_leaf(g, m, v, **kw)
+        elif bucket_min_size and g.size < bucket_min_size:
+            bucket.append(i)
+        else:
+            out_u[i], out_m[i], out_v[i] = _dense_kernel_leaf(
+                g, m, v, interpret=interpret, **kw)
+    _flush_bucket(bucket, g_leaves, mu_leaves, nu_leaves, out_u, out_m, out_v,
+                  interpret=interpret, **kw)
+    return out_u, out_m, out_v
+
+
+def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequence[jnp.ndarray]],
+                     nu_leaves: Sequence[jnp.ndarray], dims_leaves: Sequence[Dims], *,
+                     b1: float, b2: float, eps: float, count,
+                     use_first_moment: bool = True, interpret: Optional[bool] = None,
+                     bucket_min_size: int = DEFAULT_BUCKET_MIN):
+    """SlimAdam over a leaf list with per-leaf reduction-dim tuples.
+
+    K = () leaves take the dense route (and join the dense bucket when
+    small); K != () leaves dispatch to the slim kernel via canonicalization.
+    ``use_first_moment=False`` runs entirely on the jnp path — the kernels
+    read/write a first moment, so serving the moment-less variant would
+    stream a discarded full-size m and forfeit the bandwidth win.
+    Returns (updates, new_mu_or_None, new_nu)."""
+    interpret = default_interpret() if interpret is None else interpret
+    kw = dict(b1=b1, b2=b2, eps=eps, count=count)
+    n = len(g_leaves)
+    if not use_first_moment:
+        outs = [jnp_slim_leaf(g, None, v, tuple(d), use_first_moment=False, **kw)
+                for g, v, d in zip(g_leaves, nu_leaves, dims_leaves)]
+        return [o[0] for o in outs], None, [o[2] for o in outs]
+    out_u: List[Any] = [None] * n
+    out_m: List[Any] = [None] * n
+    out_v: List[Any] = [None] * n
+    bucket: List[int] = []
+    for i, (g, v, dims) in enumerate(zip(g_leaves, nu_leaves, dims_leaves)):
+        dims = tuple(dims)
+        if not _kernel_eligible(g):
+            out_u[i], out_m[i], out_v[i] = jnp_slim_leaf(
+                g, mu_leaves[i], v, dims, use_first_moment=True, **kw)
+        elif not dims:
+            if bucket_min_size and g.size < bucket_min_size:
+                bucket.append(i)
+            else:
+                out_u[i], out_m[i], out_v[i] = _dense_kernel_leaf(
+                    g, mu_leaves[i], v, interpret=interpret, **kw)
+        elif not row_fits(canon2d(g.shape, dims).cols, 5):
+            # A single canonical row outruns VMEM (full-reduction K on a big
+            # tensor) — the strip kernel can't serve it on a real TPU.
+            out_u[i], out_m[i], out_v[i] = jnp_slim_leaf(
+                g, mu_leaves[i], v, dims, use_first_moment=True, **kw)
+        else:
+            out_u[i], out_m[i], out_v[i] = _slim_kernel_leaf(
+                g, mu_leaves[i], v, dims, interpret=interpret, **kw)
+    _flush_bucket(bucket, g_leaves, mu_leaves, nu_leaves, out_u, out_m, out_v,
+                  interpret=interpret, **kw)
+    return out_u, out_m, out_v

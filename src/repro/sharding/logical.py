@@ -25,6 +25,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
+# jax.shard_map graduated from jax.experimental in 0.4.38; import from
+# whichever home this jax has so call sites stay version-agnostic.
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.4.38
+    from jax.experimental.shard_map import shard_map
+
 _ctx = threading.local()
 
 

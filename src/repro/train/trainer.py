@@ -47,11 +47,14 @@ OPTIMIZERS = ("adam", "slim", "slim_snr", "adalayer", "adalayer_ln_tl",
 
 def make_optimizer(name: str, lr, params, meta, *, weight_decay: float = 0.1,
                    b1: float = 0.9, b2: float = 0.95, grad_clip: float = 1.0,
-                   rules: Optional[Dict[str, Any]] = None):
+                   rules: Optional[Dict[str, Any]] = None, backend: str = "jnp"):
     """Build any of the paper's optimizers. ``rules`` overrides the rule set
-    for 'slim_snr' (derived from a measured SNR pass)."""
+    for 'slim_snr' (derived from a measured SNR pass). ``backend`` selects
+    the execution path for the Adam/SlimAdam family ('jnp' | 'fused' |
+    'auto', see repro.optim.base.BACKENDS); other optimizers ignore it."""
     if name == "adam":
-        return adamw(lr, b1=b1, b2=b2, weight_decay=weight_decay, grad_clip=grad_clip)
+        return adamw(lr, b1=b1, b2=b2, weight_decay=weight_decay, grad_clip=grad_clip,
+                     backend=backend)
     if name in ("slim", "slim_snr", "adalayer", "adalayer_ln_tl", "adam_mini_v1", "adam_mini_v2"):
         if name == "slim":
             r = table3_rules(meta)
@@ -68,7 +71,8 @@ def make_optimizer(name: str, lr, params, meta, *, weight_decay: float = 0.1,
         else:
             r = adam_mini_v2_rules(meta)
         dims = rules_as_tree(r, params, meta)
-        return slim_adam(lr, dims, b1=b1, b2=b2, weight_decay=weight_decay, grad_clip=grad_clip)
+        return slim_adam(lr, dims, b1=b1, b2=b2, weight_decay=weight_decay,
+                         grad_clip=grad_clip, backend=backend)
     if name == "adafactor":
         return adafactor(lr, weight_decay=weight_decay, grad_clip=grad_clip)
     if name == "adafactor_v2":
@@ -115,6 +119,10 @@ class TrainerConfig:
     snr_early_every: int = 100
     snr_late_every: int = 1000
     seed: int = 0
+    # Execution backend for the Adam/SlimAdam update and the SNR measurement
+    # pass: 'jnp' | 'fused' | 'auto' (fused kernels on TPU, jnp elsewhere).
+    # An explicit optimizer_kw['backend'] passed to Trainer wins.
+    backend: str = "jnp"
 
 
 class Trainer:
@@ -126,8 +134,11 @@ class Trainer:
         self.data = data
         key = jax.random.PRNGKey(tc.seed)
         self.params, self.meta = model_cfg.init(key)
+        okw = dict(optimizer_kw or {})
+        okw.setdefault("backend", tc.backend)
+        self.backend = okw["backend"]  # one backend for update + SNR pass
         self.tx = make_optimizer(optimizer_name, lr, self.params, self.meta,
-                                 rules=rules, **(optimizer_kw or {}))
+                                 rules=rules, **okw)
         self.opt_state = self.tx.init(self.params)
         self.step = 0
         self.snr = SNRTracker()
@@ -163,7 +174,7 @@ class Trainer:
         nu = find_adam_nu(self.opt_state)
         if nu is None:
             return
-        snapshot = measure_tree_snr(nu, self.meta)
+        snapshot = measure_tree_snr(nu, self.meta, backend=self.backend)
         self.snr.update(snapshot, self.step)
 
     # -- main loop -----------------------------------------------------------

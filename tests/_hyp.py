@@ -1,0 +1,69 @@
+"""hypothesis, or a deterministic fallback when it isn't installed.
+
+The container may lack hypothesis; ``pytest.importorskip`` would drop whole
+modules of coverage, so instead test files import (given, settings, st) from
+here. With hypothesis present they are the real thing; otherwise a minimal
+shim runs each property test over a small fixed sample grid (min / midpoint /
+max per strategy, zip-cycled across strategies) — deterministic, no shrinking,
+but the property still executes on boundary and interior points.
+"""
+import functools
+import inspect
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=10):
+            return _Strategy(dict.fromkeys(
+                [min_value, (min_value + max_value) // 2, max_value]))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(dict.fromkeys(
+                [min_value, (min_value + max_value) / 2.0, max_value]))
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements)
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(f):
+            sig = inspect.signature(f)
+            names = list(sig.parameters)
+            # hypothesis maps positional strategies onto the *rightmost*
+            # parameters; keyword strategies onto their names.
+            pos_names = names[len(names) - len(arg_strategies):]
+            strategies = dict(zip(pos_names, arg_strategies))
+            strategies.update(kw_strategies)
+
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                n = max(len(s.samples) for s in strategies.values())
+                for i in range(n):
+                    drawn = {k: s.samples[i % len(s.samples)]
+                             for k, s in strategies.items()}
+                    f(*args, **kwargs, **drawn)
+
+            # Hide the drawn parameters from pytest's fixture resolution
+            # (inspect.signature honors __signature__ over __wrapped__).
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strategies
+            ])
+            return wrapper
+
+        return decorate

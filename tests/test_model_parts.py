@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.models.attention import chunked_attention, dense_attention, flash_attention
 from repro.models.mlp_moe import MoEConfig, moe_forward, moe_specs

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import ParamMeta, rules_as_tree, second_moment_elements, table3_rules
 from repro.core.baselines import (
