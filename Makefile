@@ -1,9 +1,18 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-quick ci
+# Parallelize across cores when pytest-xdist is installed (requirements-dev);
+# empty (serial) otherwise so the targets degrade gracefully.
+XDIST := $(shell python -c "import xdist" 2>/dev/null && printf -- "-n auto")
+
+.PHONY: test test-fast bench-quick ci
 
 test:
-	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q $(XDIST)
+
+# Quick iteration loop: skip the slow-marked cases (multi-device subprocess
+# tests, long trainer loops). CI (`make ci`) always runs the full suite.
+test-fast:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q $(XDIST) -m "not slow"
 
 bench-quick:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --preset quick --only opt_speed

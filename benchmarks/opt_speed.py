@@ -83,11 +83,14 @@ def _tree_bytes(params, dims_leaves, *, dense_passes=7, slim_passes=5):
     emitted, params untouched) streams 6 / 4 + O(rows) — pass those counts
     so projection and measurement describe the same operation.
 
-    Compressed leaves whose reduction dims are not trailing need a boundary
-    transpose, and a pallas_call is an optimization barrier, so each
-    full-size operand's re-layout materializes (+2 passes per operand:
-    write the copy + re-read or re-write it). That traffic is charged here
-    — the 5/7 floor only holds for transpose-free (fan_in-minor) leaves.
+    Compressed leaves run transpose-free whenever ``canon2d`` reaches a 2-D
+    orientation by pure reshape — reduced dims trailing (minor kernel) *or*
+    leading (major/sublane kernel), which covers both fan_in and fan_out of
+    standard weights. Only a genuinely interleaved multi-dim K still needs a
+    boundary transpose, and a pallas_call is an optimization barrier, so
+    that re-layout materializes (+2 passes per full-size operand: write the
+    copy + re-read or re-write it). That traffic is charged here — the 5/7
+    floor holds for every reshape-reachable leaf.
     Returns (dense_bytes, compressed_bytes, compressed_dense_equiv,
     transpose_free_compressed_bytes, transpose_free_dense_equiv)."""
     from repro.kernels import canon2d
@@ -98,10 +101,10 @@ def _tree_bytes(params, dims_leaves, *, dense_passes=7, slim_passes=5):
         n = int(p.size) * 4
         if dims:
             cn = canon2d(p.shape, tuple(dims))
-            b = slim_passes * n + 2 * cn.rows * 4
+            b = slim_passes * n + 2 * cn.kept_size * 4
             if cn.is_transpose:
                 # every full-size pass belongs to an operand that must be
-                # re-laid out (the O(rows) moment is separate and tiny)
+                # re-laid out (the O(kept) moment is separate and tiny)
                 b += 2 * slim_passes * n
             else:
                 tf_compressed += b
@@ -173,9 +176,11 @@ def tree_main(preset: str = "quick"):
     fused_us = next(r["us"] for r in rows if r["impl"] == "slim_fused_bucketed")
     emit("opt_speed_tree", fused_us,
          f"{full.name} full-apply form: fused tree step streams {f_slim/f_adam:.2f}x "
-         f"of dense-Adam bytes (transpose re-layout traffic charged); "
-         f"transpose-free fan_in-compressed leaves hit the 5/7={5/7:.3f} "
-         f"tensor-pass floor ({tf_ratio:.3f}x bytes incl. O(rows) reduced moments) -> "
+         f"of dense-Adam bytes (re-layout traffic charged only for "
+         f"interleaved-K leaves); transpose-free compressed leaves — fan_in "
+         f"via the minor kernel, fan_out via the major/sublane kernel — hit "
+         f"the 5/7={5/7:.3f} tensor-pass floor ({tf_ratio:.3f}x bytes incl. "
+         f"O(kept) reduced moments) -> "
          f"projected v5e {f_slim/HBM_BW*1e3:.2f}ms vs {f_adam/HBM_BW*1e3:.2f}ms")
     return rows
 

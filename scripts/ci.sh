@@ -1,10 +1,22 @@
 #!/usr/bin/env bash
 # Tier-1 gate: full test suite + the quick optimizer benchmarks in Pallas
 # interpret mode (correctness harness; the roofline columns are analytic).
+#
+# The suite is embarrassingly parallel, so when pytest-xdist is available
+# (requirements-dev.txt) the run fans out across cores (-n auto), cutting
+# ~300 s serial to well under the ~150 s budget. The slowest cases carry a
+# `slow` marker so quick local loops (`make test-fast`) can skip them; this
+# gate always runs the *full* suite — parallelism, never deselection, is
+# what keeps it under budget.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+XDIST_FLAGS=""
+if python -c "import xdist" >/dev/null 2>&1; then
+  XDIST_FLAGS="-n auto"
+fi
+
+python -m pytest -x -q ${XDIST_FLAGS}
 python -m benchmarks.run --preset quick --only opt_speed
 python -m benchmarks.run --preset quick --only opt_speed_tree

@@ -22,12 +22,14 @@ Design notes for scale:
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import shutil
 import threading
+import weakref
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -72,26 +74,57 @@ def save(ckpt_dir: str | Path, step: int, tree: Any, *, extra: Optional[Dict[str
 
 
 class AsyncCheckpointer:
-    """Fire-and-forget background saves (one in flight; extra requests queue
-    behind a lock — last writer wins on LATEST)."""
+    """Fire-and-forget background saves (writes serialize behind a lock —
+    last writer wins on LATEST).
+
+    Every in-flight thread is tracked: ``wait()`` joins them *all* (not just
+    the newest — overlapping saves used to orphan the older thread), and a
+    module-level ``atexit`` hook flushes every live checkpointer so the
+    daemon threads can't be killed mid-write at interpreter exit (a WeakSet,
+    so instances stay collectable)."""
 
     def __init__(self):
-        self._lock = threading.Lock()
-        self._thread: Optional[threading.Thread] = None
+        self._io_lock = threading.Lock()       # serializes the actual writes
+        self._reg_lock = threading.Lock()      # guards the in-flight list
+        self._threads: List[threading.Thread] = []
+        _live_checkpointers.add(self)
 
     def save(self, ckpt_dir, step, tree, **kw):
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
-            with self._lock:
+            with self._io_lock:
                 save(ckpt_dir, step, host_tree, **kw)
 
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
+        t = threading.Thread(target=work, daemon=True)
+        with self._reg_lock:
+            # prune finished saves so fire-and-forget usage (no wait() until
+            # exit) doesn't accumulate one dead Thread per checkpoint
+            self._threads = [x for x in self._threads if x.is_alive()]
+            # started under the lock so wait() can never join an
+            # appended-but-unstarted thread (that raises RuntimeError)
+            self._threads.append(t)
+            t.start()
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
+        """Block until every save issued so far has hit disk."""
+        with self._reg_lock:
+            pending = list(self._threads)
+        for t in pending:
+            t.join()
+        with self._reg_lock:
+            self._threads = [t for t in self._threads if t.is_alive()]
+
+
+_live_checkpointers: "weakref.WeakSet[AsyncCheckpointer]" = weakref.WeakSet()
+
+
+def _flush_live_checkpointers():
+    for acp in list(_live_checkpointers):
+        acp.wait()
+
+
+atexit.register(_flush_live_checkpointers)
 
 
 def latest_step(ckpt_dir: str | Path) -> Optional[int]:

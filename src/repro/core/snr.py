@@ -44,15 +44,19 @@ def snr_along_dims(v: jnp.ndarray, dims: Tuple[int, ...], *, per_remaining_dim: 
         # snr_op is the jit-cached centered-stats kernel + finalization (its
         # eps equals _VAR_EPS); only the canonicalization happens here.
         from ..kernels.ops import canon2d, canon_apply, default_interpret, snr_op
-        from ..kernels.tiling import row_fits
+        from ..kernels.tiling import col_fits, row_fits
         cn = canon2d(v.shape, dims)
-        # A non-trailing K would materialize a full transpose of V across
-        # the kernel boundary (~3x the single read this path promises), and
-        # a canonical row wider than VMEM can't be strip-tiled at all —
-        # jnp's fused mean/var serves both cases.
-        if not cn.is_transpose and row_fits(cn.cols, 3):
+        # canon2d plans whichever orientation (minor = lane reduction, major
+        # = sublane reduction) a pure reshape reaches, so leading *or*
+        # trailing K runs as one kernel pass. An interleaved K would
+        # materialize a full transpose of V across the kernel boundary (~3x
+        # the single read this path promises), and a reduction line wider
+        # than VMEM can't be strip-tiled at all — jnp's fused mean/var
+        # serves both cases.
+        fits = row_fits(cn.cols, 3) if cn.axis == 1 else col_fits(cn.rows, 3)
+        if not cn.is_transpose and fits:
             v2 = canon_apply(v.astype(jnp.float32), cn)
-            return snr_op(v2, interpret=default_interpret())
+            return snr_op(v2, axis=cn.axis, interpret=default_interpret())
     v = v.astype(jnp.float32)
     mean = jnp.mean(v, axis=dims, keepdims=True)
     var = jnp.mean(jnp.square(v - mean), axis=dims, keepdims=True)

@@ -7,6 +7,8 @@ from .ops import (
     default_interpret,
     fused_adam_op,
     slim_precond,
+    slim_precond_major,
+    slim_update_major,
     slim_update_nd,
     slim_update_op,
     snr_op,
@@ -14,5 +16,6 @@ from .ops import (
 from . import ref
 
 __all__ = ["fused_adam_op", "slim_update_op", "slim_update_nd", "snr_op",
-           "adam_precond", "slim_precond", "Canon2D", "canon2d", "canon_apply",
+           "adam_precond", "slim_precond", "slim_precond_major",
+           "slim_update_major", "Canon2D", "canon2d", "canon_apply",
            "canon_restore", "default_interpret", "ref"]

@@ -18,6 +18,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Default (sublane, lane) tile for the dense kernels. The lane width is the
+# single source of truth for any layout folded to match these tiles
+# (repro.optim.fused lane-folds 1-D/bucketed leaves to LANES-wide rows);
+# deriving from one constant keeps a block change from desyncing them.
+BLOCK = (256, 512)
+LANES = BLOCK[1]
+
 
 def bias_corrections(b1, b2, count) -> jnp.ndarray:
     """(1-b1^t, 1-b2^t) as a length-2 fp32 operand vector.
@@ -50,7 +57,7 @@ def _adam_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
 
 def fused_adam(p, g, m, v, *, lr: float, b1: float = 0.9, b2: float = 0.95,
                eps: float = 1e-8, wd: float = 0.0, count: int = 1,
-               block: tuple = (256, 512), interpret: bool = True):
+               block: tuple = BLOCK, interpret: bool = True):
     """p, g: (R, C) any float dtype; m, v: (R, C) fp32. Returns (p', m', v')."""
     r, c = p.shape
     tr = min(block[0], r)
@@ -99,7 +106,7 @@ def _adam_precond_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
 
 
 def adam_precond(g, m, v, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-                 count=1, block: tuple = (256, 512), interpret: bool = True):
+                 count=1, block: tuple = BLOCK, interpret: bool = True):
     """Preconditioned Adam update only: (g, m, v) -> (u, m', v'), all fp32.
 
     The GradientTransformation form of the fused step — lr / weight decay /

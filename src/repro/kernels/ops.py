@@ -1,9 +1,12 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``slim_update_any_axis`` generalizes the fan_in kernel to fan_out compression
-by transposing at the boundary (XLA fuses the transpose into the surrounding
-copy; on TPU the kernel itself always reduces along the minor axis, which is
-the lane-friendly direction).
+``slim_update_any_axis`` history: the fan_in kernel used to serve fan_out
+compression by transposing at the boundary — but a pallas_call is an
+optimization barrier, so that transpose *materializes* (XLA cannot fuse it
+into the kernel). The planner (:func:`canon2d`) now emits whichever 2-D
+orientation — reduced-minor (lane reduction) or reduced-major (sublane
+reduction) — is reachable by pure reshape, and only falls back to a real
+transpose when neither is; dispatchers pick the matching kernel variant.
 """
 from __future__ import annotations
 
@@ -14,14 +17,20 @@ import jax
 import jax.numpy as jnp
 
 from .fused_adam import adam_precond, fused_adam
-from .slim_update import slim_precond, slim_update
-from .snr_stats import snr_stats, snr_stats_centered
+from .slim_update import (
+    slim_precond,
+    slim_precond_major,
+    slim_update,
+    slim_update_major,
+)
+from .snr_stats import snr_stats, snr_stats_centered, snr_stats_centered_major
 from .ref import snr_from_centered_stats, snr_from_stats
 
 __all__ = ["fused_adam_op", "slim_update_op", "slim_update_nd", "snr_op",
-           "fused_adam", "slim_update", "adam_precond", "slim_precond",
-           "snr_stats", "snr_stats_centered", "Canon2D", "canon2d",
-           "canon_apply", "canon_restore", "default_interpret"]
+           "fused_adam", "slim_update", "slim_update_major", "adam_precond",
+           "slim_precond", "slim_precond_major", "snr_stats",
+           "snr_stats_centered", "snr_stats_centered_major", "Canon2D",
+           "canon2d", "canon_apply", "canon_restore", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -32,32 +41,51 @@ def default_interpret() -> bool:
 
 
 class Canon2D(NamedTuple):
-    """Plan for canonicalizing an n-D reduction to the kernels' 2-D layout.
+    """Plan for canonicalizing an n-D reduction to the kernels' 2-D layouts.
 
-    The kernels always reduce along the minor axis (the lane-friendly
-    direction on TPU); an arbitrary dims-subset reduction becomes a
-    kept-dims-major transpose followed by a reshape to (prod(kept),
-    prod(reduced)). The transpose is a no-op whenever the reduced dims are
-    already trailing (fan_in of a standard (fan_in-minor) weight). When it
-    is not, the re-layout *materializes* — a pallas_call is an optimization
-    barrier, so XLA cannot fuse a transpose into the kernel — costing extra
-    HBM passes per transposed operand (``is_transpose`` exposes this so
-    byte models can account for it).
+    The slim/SNR kernels come in two orientations: reduced-minor (reduce
+    along lanes, axis 1) and reduced-major (reduce along sublanes, axis 0).
+    The planner emits whichever orientation is reachable by *pure reshape* —
+    reduced dims trailing -> minor (fan_in of a standard fan_in-minor
+    weight), reduced dims leading -> major (fan_out, conv fan_in) — with
+    size-1 axes ignored, since moving them never changes memory order. Only
+    when neither orientation is reshape-reachable (a genuinely interleaved
+    multi-dim K) does the plan fall back to a kept-dims-major transpose,
+    which *materializes* — a pallas_call is an optimization barrier, so XLA
+    cannot fuse a transpose into the kernel — costing extra HBM passes per
+    transposed operand (``is_transpose`` exposes this so byte models can
+    account for it).
     """
 
-    perm: Tuple[int, ...]       # kept dims first, reduced dims last
+    perm: Tuple[int, ...]       # permutation applied before the 2-D reshape
     inv: Tuple[int, ...]        # inverse permutation
-    rows: int                   # prod of kept dim sizes (>= 1)
-    cols: int                   # prod of reduced dim sizes (>= 1)
+    rows: int                   # 2-D view leading extent
+    cols: int                   # 2-D view trailing extent
+    axis: int                   # reduction axis of the 2-D view: 1 | 0
+    reshape_only: bool          # True -> canon_apply is a pure reshape
+
+    @property
+    def orientation(self) -> str:
+        return "minor" if self.axis == 1 else "major"
+
+    @property
+    def kept_size(self) -> int:
+        """Stored reduced-moment extent (the O(kept) side channel)."""
+        return self.rows if self.axis == 1 else self.cols
+
+    @property
+    def red_size(self) -> int:
+        """Reduction extent — the axis a kernel instance must hold whole."""
+        return self.cols if self.axis == 1 else self.rows
 
     @property
     def is_transpose(self) -> bool:
-        return self.perm != tuple(range(len(self.perm)))
+        return not self.reshape_only
 
 
 def canon2d(shape: Tuple[int, ...], dims: Tuple[int, ...]) -> Canon2D:
-    """Plan a (rows=kept, cols=reduced) 2-D view of ``shape`` for reduction
-    dims ``dims`` (any non-empty subset of axes)."""
+    """Plan a 2-D view of ``shape`` for reduction dims ``dims`` (any
+    non-empty subset of axes), preferring a transpose-free orientation."""
     ndim = len(shape)
     if not dims:
         raise ValueError("canon2d needs a non-empty reduction dim set")
@@ -70,33 +98,56 @@ def canon2d(shape: Tuple[int, ...], dims: Tuple[int, ...]) -> Canon2D:
     if len(dset) != len(dims):
         # jnp.mean also rejects aliased axes like (1, -1); keep parity.
         raise ValueError(f"duplicate reduction dims in {dims} for shape {shape}")
+    red = tuple(sorted(dset))
     kept = tuple(i for i in range(ndim) if i not in dset)
-    perm = kept + tuple(sorted(dset))
-    inv = [0] * ndim
-    for newpos, old in enumerate(perm):
-        inv[old] = newpos
-    rows = 1
+    red_size = kept_size = 1
+    for i in red:
+        red_size *= shape[i]
     for i in kept:
-        rows *= shape[i]
-    cols = 1
-    for i in sorted(dset):
-        cols *= shape[i]
-    return Canon2D(perm=perm, inv=tuple(inv), rows=rows, cols=cols)
+        kept_size *= shape[i]
+
+    # Reshape-reachability ignores size-1 axes: shuffling them around never
+    # changes memory order, so only the relative order of the non-trivial
+    # reduced vs kept axes matters.
+    nt_red = [i for i in red if shape[i] > 1]
+    nt_kept = [i for i in kept if shape[i] > 1]
+    minor_ok = not nt_red or not nt_kept or max(nt_kept) < min(nt_red)
+    major_ok = not nt_red or not nt_kept or max(nt_red) < min(nt_kept)
+
+    def _plan(perm, rows, cols, axis, reshape_only):
+        inv = [0] * ndim
+        for newpos, old in enumerate(perm):
+            inv[old] = newpos
+        return Canon2D(perm=perm, inv=tuple(inv), rows=rows, cols=cols,
+                       axis=axis, reshape_only=reshape_only)
+
+    if minor_ok:
+        return _plan(kept + red, kept_size, red_size, 1, True)
+    if major_ok:
+        return _plan(red + kept, red_size, kept_size, 0, True)
+    return _plan(kept + red, kept_size, red_size, 1, False)
 
 
 def canon_apply(x: jnp.ndarray, cn: Canon2D, *, reduced_cols: bool = False) -> jnp.ndarray:
-    """Bring a full tensor (or a size-1-kept-dims reduced moment, with
-    ``reduced_cols=True``) into the kernel's (rows, cols) layout."""
-    xt = jnp.transpose(x, cn.perm) if cn.is_transpose else x
-    return xt.reshape(cn.rows, 1 if reduced_cols else cn.cols)
+    """Bring a full tensor (or a size-1-reduced-dims reduced moment, with
+    ``reduced_cols=True``) into the kernel's (rows, cols) layout. The
+    reduced moment collapses the reduction axis of the 2-D view to 1."""
+    if reduced_cols:
+        target = (cn.rows, 1) if cn.axis == 1 else (1, cn.cols)
+    else:
+        target = (cn.rows, cn.cols)
+    if cn.reshape_only:
+        return x.reshape(target)
+    return jnp.transpose(x, cn.perm).reshape(target)
 
 
 def canon_restore(y2: jnp.ndarray, cn: Canon2D, shape: Tuple[int, ...]) -> jnp.ndarray:
     """Inverse of :func:`canon_apply` back to the original layout ``shape``
     (pass the reduced/stored shape for reduced moments)."""
+    if cn.reshape_only:
+        return y2.reshape(shape)
     permuted = tuple(shape[i] for i in cn.perm)
-    y = y2.reshape(permuted)
-    return jnp.transpose(y, cn.inv) if cn.is_transpose else y
+    return jnp.transpose(y2.reshape(permuted), cn.inv)
 
 
 @functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "wd", "count", "interpret"))
@@ -116,12 +167,12 @@ def fused_adam_op(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.0, count=1,
 def slim_update_op(p, g, m, v_red, *, axis: int, lr, b1=0.9, b2=0.95, eps=1e-8,
                    wd=0.0, count=1, interpret=True):
     """2-D params; ``axis`` is the compressed (reduced) dim. v_red keeps the
-    reduced dim as size 1 (matching repro.core.slim_adam state layout)."""
+    reduced dim as size 1 (matching repro.core.slim_adam state layout).
+    axis=0 runs the major-axis (sublane-reduction) kernel — no transpose."""
     assert p.ndim == 2 and axis in (0, 1)
     if axis == 0:
-        po, mo, vo = slim_update(p.T, g.T, m.T, v_red.T, lr=lr, b1=b1, b2=b2,
-                                 eps=eps, wd=wd, count=count, interpret=interpret)
-        return po.T, mo.T, vo.T
+        return slim_update_major(p, g, m, v_red, lr=lr, b1=b1, b2=b2, eps=eps,
+                                 wd=wd, count=count, interpret=interpret)
     return slim_update(p, g, m, v_red, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
                        count=count, interpret=interpret)
 
@@ -132,23 +183,30 @@ def slim_update_nd(p, g, m, v_red, *, dims: Tuple[int, ...], lr, b1=0.9, b2=0.95
     """n-D params, any reduction-dims subset (the general SlimAdam spec).
 
     ``v_red`` keeps the reduced axes as size 1, matching
-    ``repro.core.slim_adam`` state layout. Canonicalizes to the 2-D
-    minor-axis kernel via :func:`canon2d` and restores the original layout.
+    ``repro.core.slim_adam`` state layout. Canonicalizes via :func:`canon2d`
+    to whichever 2-D orientation avoids a transpose and dispatches to the
+    matching kernel variant, restoring the original layout after.
     """
     cn = canon2d(p.shape, dims)
+    fn = slim_update if cn.axis == 1 else slim_update_major
     p2 = canon_apply(p, cn)
     g2 = canon_apply(g, cn)
     m2 = canon_apply(m, cn)
     v2 = canon_apply(v_red, cn, reduced_cols=True)
-    po, mo, vo = slim_update(p2, g2, m2, v2, lr=lr, b1=b1, b2=b2, eps=eps,
-                             wd=wd, count=count, interpret=interpret)
+    po, mo, vo = fn(p2, g2, m2, v2, lr=lr, b1=b1, b2=b2, eps=eps,
+                    wd=wd, count=count, interpret=interpret)
     return (canon_restore(po, cn, p.shape), canon_restore(mo, cn, m.shape),
             canon_restore(vo, cn, v_red.shape))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def snr_op(v, *, interpret=True) -> jnp.ndarray:
-    """Scalar SNR along axis=1 of a 2-D moment tensor via the fused kernel
-    (centered stats — accurate for near-constant, high-SNR rows)."""
+@functools.partial(jax.jit, static_argnames=("axis", "interpret"))
+def snr_op(v, *, axis: int = 1, interpret=True) -> jnp.ndarray:
+    """Scalar SNR along ``axis`` of a 2-D moment tensor via the fused kernels
+    (centered stats — accurate for near-constant, high-SNR slices). axis=1
+    reduces along lanes; axis=0 along sublanes (transpose-free for moments
+    whose compression dims are leading)."""
+    if axis == 0:
+        s1, s1c, s2c = snr_stats_centered_major(v, interpret=interpret)
+        return snr_from_centered_stats(s1, s1c, s2c, v.shape[0])
     s1, s1c, s2c = snr_stats_centered(v, interpret=interpret)
     return snr_from_centered_stats(s1, s1c, s2c, v.shape[1])

@@ -1,14 +1,25 @@
-"""Fused SlimAdam update (fan_in-compressed second moment) — Pallas TPU kernel.
+"""Fused SlimAdam update (compressed second moment) — Pallas TPU kernels.
 
 The paper's memory saving becomes a *bandwidth* saving here: the second
-moment is (R, 1) instead of (R, C), so one optimizer step streams
-p, g, m (read) + p', m' (write) + O(R) for V — 5 tensor passes vs dense
+moment is reduced over the compression dims K, so one optimizer step streams
+p, g, m (read) + p', m' (write) + O(kept) for V — 5 tensor passes vs dense
 Adam's 7, and the squared gradient / E_K[g^2] reduction never touches HBM.
 
-Layout: grid over row tiles only; each kernel instance holds a full
-(TR, C) row strip of p/g/m in VMEM (fan_in up to 22k fits at TR<=32 in
-fp32), computes the row mean of g^2 on the VPU, updates the reduced moment,
-and applies the preconditioned update in the same pass.
+Two orientations, so either reduction layout runs without a boundary
+transpose (a pallas_call is an optimization barrier — XLA can't fuse a
+re-layout into the kernel, so a transpose would materialize extra HBM
+passes):
+
+  * minor (``slim_update`` / ``slim_precond``): V is (R, 1); grid over row
+    strips, each instance holds a full (TR, C) strip in VMEM (fan_in up to
+    22k fits at TR<=32 in fp32) and reduces along lanes;
+  * major (``slim_update_major`` / ``slim_precond_major``): V is (1, C);
+    grid over column strips, each instance holds a full (R, TC) strip and
+    reduces along sublanes — the transpose-free path for leaves whose
+    reduced dims are *leading* (fan_out of a standard weight, conv fan_in).
+
+Both compute the strip's E_K[g^2] on the VPU, update the reduced moment,
+and apply the preconditioned update in the same pass.
 """
 from __future__ import annotations
 
@@ -19,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .fused_adam import bias_corrections
-from .tiling import fit_row_block
+from .tiling import fit_col_block, fit_row_block
 
 
 def _slim_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
@@ -130,3 +141,121 @@ def slim_precond(g, m, v_row, *, b1: float = 0.9, b2: float = 0.95,
         ],
         interpret=interpret,
     )(g, m, v_row, scal)
+
+
+# ---------------------------------------------------------------------------
+# Major-axis (sublane-reduction) variants: V reduced over the *leading* dim.
+# ---------------------------------------------------------------------------
+
+
+def _slim_major_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
+                       p_out, m_out, v_out, *, b1: float, b2: float, eps: float,
+                       wd: float, n_rows: int):
+    lr = scal_ref[0]
+    bc1 = scal_ref[1]
+    bc2 = scal_ref[2]
+    g = g_ref[...].astype(jnp.float32)                   # (R, TC)
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    ek = jnp.sum(g * g, axis=0, keepdims=True) * (1.0 / n_rows)
+    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # (1, TC)
+    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    if wd:
+        update = update + wd * p_ref[...].astype(jnp.float32)
+    p_out[...] = (p_ref[...].astype(jnp.float32) - lr * update).astype(p_out.dtype)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def slim_update_major(p, g, m, v_col, *, lr: float, b1: float = 0.9, b2: float = 0.95,
+                      eps: float = 1e-8, wd: float = 0.0, count: int = 1,
+                      col_block: int = 256, interpret: bool = True):
+    """p, g, m: (R, C); v_col: (1, C) fp32 moment reduced over rows.
+    Returns (p', m', v'). Mirrors :func:`slim_update` with the grid over
+    column strips and the reduction over sublanes — transpose-free for
+    leading reduced dims."""
+    r, c = p.shape
+    # 6 full-height fp32 buffers live per instance (p, g, m in + p', m' out,
+    # plus cast headroom); shrink the strip for tall reduced dims.
+    tc = fit_col_block(r, col_block, c, 6)
+    if c % tc:
+        cp = -(-c // tc) * tc
+        pad2 = lambda x: jnp.pad(x, ((0, 0), (0, cp - c)))
+        po, mo, vo = slim_update_major(pad2(p), pad2(g), pad2(m), pad2(v_col),
+                                       lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
+                                       count=count, col_block=col_block,
+                                       interpret=interpret)
+        return po[:, :c], mo[:, :c], vo[:, :c]
+
+    bc1 = 1.0 - b1 ** count
+    bc2 = 1.0 - b2 ** count
+    scal = jnp.array([lr, bc1, bc2], jnp.float32)
+
+    strip = pl.BlockSpec((r, tc), lambda j: (0, j))
+    vspec = pl.BlockSpec((1, tc), lambda j: (0, j))
+    kernel = functools.partial(_slim_major_kernel, b1=b1, b2=b2, eps=eps, wd=wd,
+                               n_rows=r)
+    return pl.pallas_call(
+        kernel,
+        grid=(c // tc,),
+        in_specs=[strip, strip, strip, vspec, pl.BlockSpec((3,), lambda j: (0,))],
+        out_specs=[strip, strip, vspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), p.dtype),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+            jax.ShapeDtypeStruct((1, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(p, g, m, v_col, scal)
+
+
+def _slim_precond_major_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
+                               *, b1: float, b2: float, eps: float, n_rows: int):
+    bc1 = scal_ref[0]
+    bc2 = scal_ref[1]
+    g = g_ref[...].astype(jnp.float32)                   # (R, TC)
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    ek = jnp.sum(g * g, axis=0, keepdims=True) * (1.0 / n_rows)
+    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # (1, TC)
+    u_out[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def slim_precond_major(g, m, v_col, *, b1: float = 0.9, b2: float = 0.95,
+                       eps: float = 1e-8, count=1, col_block: int = 256,
+                       interpret: bool = True):
+    """Preconditioned major-axis SlimAdam update: (g, m, v_col) -> (u, m', v').
+
+    g, m: (R, C); v_col: (1, C) fp32 moment reduced over rows; u is fp32
+    full-shape. The GradientTransformation form of :func:`slim_update_major`
+    — no parameter read/write, traced ``count`` fine. Streams 4 full passes
+    (g, m read + u, m' write) plus O(C)."""
+    r, c = g.shape
+    # 5 full-height fp32 buffers per instance (g, m in + u, m' out + cast
+    # headroom); shrink the strip for tall reduced dims.
+    tc = fit_col_block(r, col_block, c, 5)
+    if c % tc:
+        cp = -(-c // tc) * tc
+        pad2 = lambda x: jnp.pad(x, ((0, 0), (0, cp - c)))
+        uo, mo, vo = slim_precond_major(pad2(g), pad2(m), pad2(v_col), b1=b1,
+                                        b2=b2, eps=eps, count=count,
+                                        col_block=col_block, interpret=interpret)
+        return uo[:, :c], mo[:, :c], vo[:, :c]
+
+    scal = bias_corrections(b1, b2, count)
+    strip = pl.BlockSpec((r, tc), lambda j: (0, j))
+    vspec = pl.BlockSpec((1, tc), lambda j: (0, j))
+    kernel = functools.partial(_slim_precond_major_kernel, b1=b1, b2=b2, eps=eps,
+                               n_rows=r)
+    return pl.pallas_call(
+        kernel,
+        grid=(c // tc,),
+        in_specs=[strip, strip, vspec, pl.BlockSpec((2,), lambda j: (0,))],
+        out_specs=[strip, strip, vspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+            jax.ShapeDtypeStruct((1, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, m, v_col, scal)

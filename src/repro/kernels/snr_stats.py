@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tiling import fit_row_block
+from .tiling import fit_col_block, fit_row_block
 
 
 def _snr_kernel(v_ref, s1_out, s2_out):
@@ -73,5 +73,40 @@ def snr_stats_centered(v, *, row_block: int = 64, interpret: bool = True):
         in_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((tr,), lambda i: (i,))] * 3,
         out_shape=[jax.ShapeDtypeStruct((r,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(v)
+
+
+def _snr_centered_major_kernel(v_ref, s1_out, s1c_out, s2c_out):
+    v = v_ref[...].astype(jnp.float32)        # (R, TC)
+    d = v - v[0:1, :]                         # shift by the column's first entry
+    s1_out[...] = jnp.sum(v, axis=0)
+    s1c_out[...] = jnp.sum(d, axis=0)
+    s2c_out[...] = jnp.sum(d * d, axis=0)
+
+
+def snr_stats_centered_major(v, *, col_block: int = 256, interpret: bool = True):
+    """v: (R, C) -> (col_sum, shifted_col_sum, shifted_col_sumsq), all (C,).
+
+    Major-axis twin of :func:`snr_stats_centered`: the reduction runs over
+    sublanes (axis 0), so a moment tensor whose compression dims are leading
+    gets its one-pass centered stats without a boundary transpose. Same
+    shift-centering argument — variance is shift-invariant, so subtracting
+    each column's first entry keeps the sums O(spread) in the near-constant
+    high-SNR regime."""
+    r, c = v.shape
+    tc = fit_col_block(r, col_block, c, 3)  # input + shifted copy + cast
+    if c % tc:
+        cp = -(-c // tc) * tc
+        s1, s1c, s2c = snr_stats_centered_major(jnp.pad(v, ((0, 0), (0, cp - c))),
+                                                col_block=col_block,
+                                                interpret=interpret)
+        return s1[:c], s1c[:c], s2c[:c]
+    return pl.pallas_call(
+        _snr_centered_major_kernel,
+        grid=(c // tc,),
+        in_specs=[pl.BlockSpec((r, tc), lambda j: (0, j))],
+        out_specs=[pl.BlockSpec((tc,), lambda j: (j,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((c,), jnp.float32)] * 3,
         interpret=interpret,
     )(v)

@@ -1,9 +1,10 @@
-"""Shared tiling policy for kernels whose blocks span a full row.
+"""Shared tiling policy for kernels whose blocks span a full reduction axis.
 
 Full-row strips are the right layout for minor-axis reductions
-(slim_update / slim_precond / snr_stats*), but a vocab-width C (50k+) at the
-default row_block would blow VMEM on TPU — never seen in interpret mode, so
-the bound lives here rather than in CI.
+(slim_update / slim_precond / snr_stats*) and full-column strips for the
+major-axis (sublane-reduction) twins, but a vocab-width reduction extent
+(50k+) at the default block would blow VMEM on TPU — never seen in interpret
+mode, so the bound lives here rather than in CI.
 """
 from __future__ import annotations
 
@@ -26,3 +27,19 @@ def row_fits(n_cols: int, n_full_width_bufs: int) -> bool:
     When it doesn't, the row-strip kernels can't serve the tensor on a real
     TPU (interpret mode wouldn't notice) — dispatchers fall back to jnp."""
     return n_cols * 4 * n_full_width_bufs <= VMEM_BUDGET
+
+
+def fit_col_block(n_rows: int, col_block: int, n_cols: int, n_full_height_bufs: int) -> int:
+    """:func:`fit_row_block` twin for the major-axis kernels: shrink a
+    column-strip tile so ``n_full_height_bufs`` fp32 (n_rows, tc) buffers fit
+    in :data:`VMEM_BUDGET`. Callers must gate on :func:`col_fits` first —
+    when a single column already exceeds the budget, no column count can
+    enforce it."""
+    cap = max(1, VMEM_BUDGET // (n_rows * 4 * n_full_height_bufs))
+    return max(1, min(col_block, cap, n_cols))
+
+
+def col_fits(n_rows: int, n_full_height_bufs: int) -> bool:
+    """Whether a single (n_rows, 1) strip's working set fits the budget —
+    the major-axis analogue of :func:`row_fits`."""
+    return n_rows * 4 * n_full_height_bufs <= VMEM_BUDGET

@@ -18,11 +18,22 @@ layer via ``TrainerConfig.backend`` / ``make_optimizer(backend=...)``:
       ``bucket_min_size`` (default 16k elements) are *bucketed* — flattened,
       concatenated, updated in one kernel call, and scattered back — to
       amortize per-call launch and tile-padding overhead;
-    * compressed leaves (SlimAdam K != ()) are canonicalized so the reduction
-      subset is minor (any single- or multi-dim K, via transpose/reshape at
-      the boundary) and dispatched to the fused slim kernel;
+    * compressed leaves (SlimAdam K != ()) are planned by
+      ``repro.kernels.canon2d`` into whichever 2-D *orientation* a pure
+      reshape reaches, and dispatched to the matching slim kernel variant:
+      reduced dims trailing -> minor orientation (lane reduction,
+      ``slim_precond``; fan_in of a standard fan_in-minor weight), reduced
+      dims leading -> major orientation (sublane reduction,
+      ``slim_precond_major``; fan_out, conv fan_in). Size-1 axes never force
+      a transpose. Only a genuinely *interleaved* K — kept dims on both
+      sides of the reduced subset, e.g. a scan-stacked (layers, embed,
+      heads, head_dim) tensor reducing embed — still materializes a
+      boundary transpose (a pallas_call is an optimization barrier, so XLA
+      cannot fuse the re-layout into the kernel; the opt_speed roofline
+      charges those leaves the extra passes);
     * leaves the kernels can't serve fall back to the jnp path per leaf:
-      scalar (0-d) leaves, non-float dtypes, empty tensors, and the
+      scalar (0-d) leaves, non-float dtypes, empty tensors, leaves whose
+      canonical reduction line outruns VMEM in either orientation, and the
       ``use_first_moment=False`` variant (the kernels stream a first
       moment; serving it would forfeit the bandwidth win).
 
@@ -42,14 +53,16 @@ kept rows, one fused step streams:
     dense Adam     7n * 4 B      (p, g, m, v read + p', m', v' write)
     SlimAdam (K)   5n * 4 B + O(r)   (V is (r, 1); E_K[g^2] never hits HBM)
 
-i.e. fan_in-compressed leaves stream 5/7 ≈ 0.71 of dense-Adam bytes — the
-paper's memory saving is also a step-time saving. ``benchmarks/opt_speed.py``
+i.e. compressed leaves stream 5/7 ≈ 0.71 of dense-Adam bytes — the paper's
+memory saving is also a step-time saving. With both kernel orientations,
+fan_in- *and* fan_out-compressed leaves hit that floor transpose-free; only
+interleaved-K leaves pay re-layout traffic. ``benchmarks/opt_speed.py``
 reports measured interpret-mode times next to the roofline projection
 (bytes / 819 GB/s, TPU v5e): ~25.6 us vs ~35.8 us per 1024x1024 fp32 tensor,
 and a tree-level column for the whole GPT-small parameter tree (where
-re-layout traffic for transposed-K leaves is charged explicitly). The
-GradientTransformation form used here (update emitted, params untouched)
-streams 6n (dense) / 4n + O(r) (slim) instead.
+re-layout traffic for the remaining transposed-K leaves is charged
+explicitly). The GradientTransformation form used here (update emitted,
+params untouched) streams 6n (dense) / 4n + O(kept) (slim) instead.
 """
 from .base import (
     BACKENDS,

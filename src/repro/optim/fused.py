@@ -19,12 +19,15 @@ when constructed with ``backend="fused"`` (or ``"auto"`` on TPU):
 
   * canonicalization — any leaf shape goes to 2-D: dense leaves via
     reshape(-1, minor); compressed leaves via :func:`repro.kernels.canon2d`,
-    which puts the (arbitrary, possibly multi-dim) reduction subset minor so
-    the kernel always reduces along lanes;
+    which plans whichever 2-D orientation (reduction minor = lanes, or
+    reduction major = sublanes) is reachable by pure reshape, transposing
+    only when the (arbitrary, possibly multi-dim) reduction subset is
+    genuinely interleaved with the kept dims;
   * dispatch — dense leaves -> ``adam_precond``, compressed leaves ->
-    ``slim_precond``, with a per-leaf jnp fallback for anything the kernels
-    can't serve (scalar leaves, non-float dtypes, empty tensors, the
-    moment-less ``use_first_moment=False`` variant);
+    ``slim_precond`` / ``slim_precond_major`` per the plan's orientation,
+    with a per-leaf jnp fallback for anything the kernels can't serve
+    (scalar leaves, non-float dtypes, empty tensors, the moment-less
+    ``use_first_moment=False`` variant);
   * bucketing — small dense-treated leaves (elementwise treatment, so
     flattening is exact) are concatenated into one flat super-tensor per
     bucket, updated in a single kernel call to amortize launch + padding
@@ -41,7 +44,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels.fused_adam import bias_corrections
+from ..kernels.fused_adam import LANES, bias_corrections
 from ..kernels.ops import (
     adam_precond,
     canon2d,
@@ -49,8 +52,9 @@ from ..kernels.ops import (
     canon_restore,
     default_interpret,
     slim_precond,
+    slim_precond_major,
 )
-from ..kernels.tiling import row_fits
+from ..kernels.tiling import col_fits, row_fits
 
 Dims = Tuple[int, ...]
 
@@ -99,7 +103,9 @@ def jnp_slim_leaf(g, m, v, dims: Dims, *, b1, b2, eps, count, use_first_moment):
     return u, m_new, v_new
 
 
-_LANES = 512  # adam_precond's tile width
+# adam_precond's tile width — imported from the kernel module so a block
+# change there can't desync this lane-folding layout.
+_LANES = LANES
 
 
 def _fold_lanes(flat: jnp.ndarray) -> jnp.ndarray:
@@ -128,12 +134,19 @@ def _dense_kernel_leaf(g, m, v, *, b1, b2, eps, count, interpret):
 
 def _slim_kernel_leaf(g, m, v_red, dims: Dims, *, b1, b2, eps, count, interpret):
     cn = canon2d(g.shape, dims)
-    u2, m2o, v2o = slim_precond(canon_apply(g, cn), canon_apply(m, cn),
-                                canon_apply(v_red, cn, reduced_cols=True),
-                                b1=b1, b2=b2, eps=eps, count=count,
-                                interpret=interpret)
+    fn = slim_precond if cn.axis == 1 else slim_precond_major
+    u2, m2o, v2o = fn(canon_apply(g, cn), canon_apply(m, cn),
+                      canon_apply(v_red, cn, reduced_cols=True),
+                      b1=b1, b2=b2, eps=eps, count=count, interpret=interpret)
     return (canon_restore(u2, cn, g.shape), canon_restore(m2o, cn, g.shape),
             canon_restore(v2o, cn, v_red.shape))
+
+
+def _strip_fits(cn) -> bool:
+    """Whether the orientation's strip kernel can hold one full reduction
+    line (plus working copies) in VMEM — 5 full-size fp32 buffers per
+    instance for the precond forms."""
+    return row_fits(cn.cols, 5) if cn.axis == 1 else col_fits(cn.rows, 5)
 
 
 # ---------------------------------------------------------------------------
@@ -247,9 +260,10 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
             else:
                 out_u[i], out_m[i], out_v[i] = _dense_kernel_leaf(
                     g, mu_leaves[i], v, interpret=interpret, **kw)
-        elif not row_fits(canon2d(g.shape, dims).cols, 5):
-            # A single canonical row outruns VMEM (full-reduction K on a big
-            # tensor) — the strip kernel can't serve it on a real TPU.
+        elif not _strip_fits(canon2d(g.shape, dims)):
+            # A single canonical reduction line outruns VMEM (full-reduction
+            # K on a big tensor) — neither strip kernel can serve it on a
+            # real TPU.
             out_u[i], out_m[i], out_v[i] = jnp_slim_leaf(
                 g, mu_leaves[i], v, dims, use_first_moment=True, **kw)
         else:

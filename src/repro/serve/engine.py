@@ -6,6 +6,7 @@ caches (the decode_32k / long_500k dry-run cells lower exactly this step).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -44,6 +45,21 @@ class Engine:
         fast path on real hardware.
         """
         b, s_prompt = prompts.shape
+        # The KV/SSM caches hold max_seq positions; dynamic_update_slice
+        # *clamps* out-of-range writes, so an unchecked overrun would
+        # silently overwrite the last cache slot instead of failing.
+        budget = self.sc.max_seq - s_prompt
+        if budget <= 0:
+            raise ValueError(
+                f"prompt length {s_prompt} leaves no room to generate within "
+                f"max_seq={self.sc.max_seq}")
+        max_new = self.sc.max_new_tokens
+        if max_new > budget:
+            warnings.warn(
+                f"truncating max_new_tokens {max_new} -> {budget}: "
+                f"prompt length {s_prompt} + requested tokens would overrun "
+                f"the max_seq={self.sc.max_seq} cache")
+            max_new = budget
         cache = transformer.init_decode_cache(
             self.cfg, b, self.sc.max_seq,
             dtype=jnp.float32 if self.cfg.dtype == jnp.float32 else jnp.bfloat16)
@@ -55,12 +71,14 @@ class Engine:
             logits, cache = self._decode(self.params, cache, prompts[:, i:i + 1])
         out: List[jnp.ndarray] = [tokens]
         done = jnp.zeros((b, 1), bool)
-        for _ in range(self.sc.max_new_tokens):        # decode
+        for _ in range(max_new):                       # decode
             key, sub = jax.random.split(key)
             nxt = self._sample(logits, sub)
             if eos_id is not None:
                 done = done | (nxt == eos_id)
-                nxt = jnp.where(done, eos_id if eos_id is not None else 0, nxt)
+                nxt = jnp.where(done, eos_id, nxt)
             out.append(nxt)
+            if eos_id is not None and bool(done.all()):
+                break                                  # every row finished
             logits, cache = self._decode(self.params, cache, nxt)
         return jnp.concatenate(out, axis=1)

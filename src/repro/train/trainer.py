@@ -38,7 +38,7 @@ from ..core.slim_adam import slim_adam
 from ..data.pipeline import DataConfig, ZipfLM
 from ..models import transformer
 from ..optim.adam import adamw, sgdm
-from .step import make_train_step
+from .step import make_eval_step, make_train_step
 
 OPTIMIZERS = ("adam", "slim", "slim_snr", "adalayer", "adalayer_ln_tl",
               "adam_mini_v1", "adam_mini_v2", "adafactor", "adafactor_v2",
@@ -181,8 +181,20 @@ class Trainer:
 
     def run(self, steps: Optional[int] = None) -> Dict[str, float]:
         steps = steps if steps is not None else self.tc.total_steps
-        last = {}
         t0 = time.time()
+        if self.step >= steps:
+            # A restored checkpoint can already be at/past the target step.
+            # Returning {} here crashed callers that index last["loss"]; run
+            # a forward-only eval instead so the no-op still yields the full
+            # metrics dict (grad_norm 0: no update happened).
+            batch = {k: jnp.asarray(v) for k, v in self.data.batch(self.step).items()}
+            metrics = jax.jit(make_eval_step(self.model_cfg))(self.params, batch)
+            last = {k: float(v) for k, v in metrics.items()}
+            last.update(grad_norm=0.0, step=self.step,
+                        wall_s=round(time.time() - t0, 2))
+            self.metrics_log.append(last)
+            return last
+        last = {}
         while self.step < steps:
             batch = self.data.batch(self.step)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}

@@ -2,4 +2,8 @@ import pytest
 
 
 def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: multi-device subprocess tests")
+    config.addinivalue_line(
+        "markers",
+        "slow: slowest cases (multi-device subprocess tests, long trainer "
+        "loops); deselect with -m 'not slow' for a quick local loop — CI "
+        "always runs the full suite, parallelized via pytest-xdist")

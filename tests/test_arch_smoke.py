@@ -31,6 +31,7 @@ def _batch(cfg, key):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_forward_shapes_no_nans(arch):
     cfg = get_reduced(arch)
@@ -46,6 +47,7 @@ def test_forward_shapes_no_nans(arch):
         assert float(aux) > 0.0  # MoE aux losses flow
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_slim_train_step(arch):
     cfg = get_reduced(arch)
@@ -116,6 +118,7 @@ def test_int8_kv_cache_decode():
     assert rel < 0.05 and agree > 0.95
 
 
+@pytest.mark.slow
 def test_resnet_smoke():
     """Paper §3.1.3 regime: reduced ResNet forward + SlimAdam step on CPU."""
     from repro.models.resnet import ResNetConfig, forward as resnet_forward, synthetic_cifar

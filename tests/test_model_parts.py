@@ -87,6 +87,7 @@ class TestSelectiveScan:
         np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-4)
         np.testing.assert_allclose(h1, h2, atol=1e-4, rtol=1e-4)
 
+    @pytest.mark.slow
     def test_custom_vjp_matches_autodiff_reference(self):
         ops = self._operands(seed=5)
 
@@ -121,6 +122,7 @@ class TestMoE:
         x = jax.random.normal(jax.random.PRNGKey(1), (2, n_tok // 2, d))
         return cfg, params, x
 
+    @pytest.mark.slow
     def test_output_shape_and_grad(self):
         cfg, params, x = self._setup()
         y, aux = moe_forward(params, x, cfg)

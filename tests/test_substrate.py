@@ -1,4 +1,6 @@
 """Data pipeline, checkpointing (incl. resharding restore), trainer, serving."""
+import time
+
 import numpy as np
 import pytest
 
@@ -84,6 +86,31 @@ class TestCheckpoint:
         acp.wait()
         assert store.latest_step(tmp_path) == 7
 
+    def test_async_checkpointer_overlapping_saves(self, tmp_path, monkeypatch):
+        """Two in-flight saves: wait() must join *both* threads (the old
+        single-slot tracking joined only the newest, orphaning the other
+        mid-write), so both checkpoints are on disk afterwards."""
+        real_save = store.save
+        slowed = []
+
+        def slow_save(ckpt_dir, step, tree, **kw):
+            if not slowed:           # whichever thread runs first is delayed
+                slowed.append(step)
+                time.sleep(0.3)
+            return real_save(ckpt_dir, step, tree, **kw)
+
+        monkeypatch.setattr(store, "save", slow_save)
+        t = self._tree()
+        acp = store.AsyncCheckpointer()
+        acp.save(tmp_path, 7, t)
+        acp.save(tmp_path, 9, t)
+        assert len(acp._threads) == 2   # both tracked, not last-writer-wins
+        acp.wait()
+        assert (tmp_path / "step_00000007" / "manifest.json").exists()
+        assert (tmp_path / "step_00000009" / "manifest.json").exists()
+        assert store.latest_step(tmp_path) in (7, 9)
+        acp.wait()                      # idempotent after pruning
+
 
 class TestTrainerFaultTolerance:
     def _mk(self, tmp_path, steps=10):
@@ -93,6 +120,7 @@ class TestTrainerFaultTolerance:
                            ckpt_dir=str(tmp_path), seed=0)
         return cfg, data, tc
 
+    @pytest.mark.slow
     def test_preemption_resume_identical(self, tmp_path):
         """Train 10; separately train 5 -> 'preempt' -> resume 5 more. The
         deterministic data pipeline makes the trajectories identical."""
@@ -113,6 +141,22 @@ class TestTrainerFaultTolerance:
         for a, b in zip(jax.tree.leaves(t_full.params), jax.tree.leaves(t_resumed.params)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
+    def test_restore_past_target_returns_metrics(self, tmp_path):
+        """A restored checkpoint already at/past the requested step count:
+        run() used to return {} (crashing callers indexing last["loss"]); it
+        must return a well-formed no-op metrics dict instead."""
+        cfg, data, tc = self._mk(tmp_path, steps=5)
+        Trainer(cfg, "adam", 1e-3, data, tc).run()
+
+        t2 = Trainer(cfg, "adam", 1e-3, data, tc)   # restores step=5
+        assert t2.step == 5
+        last = t2.run(steps=3)                       # target already passed
+        assert t2.step == 5                          # no training happened
+        for key in ("loss", "grad_norm", "step", "wall_s"):
+            assert key in last
+        assert last["step"] == 5 and last["grad_norm"] == 0.0
+        assert np.isfinite(last["loss"])
+
 
 class TestServe:
     def test_batched_generation(self):
@@ -132,3 +176,38 @@ class TestServe:
         out1 = eng.generate(prompts)
         out2 = eng.generate(prompts)
         np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+    def test_cache_overflow_truncates_with_warning(self):
+        """prompt + max_new_tokens > max_seq used to write past the KV/SSM
+        cache (dynamic_update_slice clamps, silently overwriting the last
+        slot). The engine must truncate generation to fit instead."""
+        cfg = get_reduced("smollm_135m")
+        params, _ = cfg.init(jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, ServeConfig(max_new_tokens=64, max_seq=8))
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab_size)
+        with pytest.warns(UserWarning, match="truncating max_new_tokens"):
+            out = eng.generate(prompts)
+        assert out.shape == (2, 8)  # 4 prompt + 4 generated = max_seq
+
+    def test_prompt_filling_cache_rejected(self):
+        cfg = get_reduced("smollm_135m")
+        params, _ = cfg.init(jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, ServeConfig(max_new_tokens=4, max_seq=4))
+        prompts = jnp.zeros((1, 6), jnp.int32)
+        with pytest.raises(ValueError, match="no room"):
+            eng.generate(prompts)
+
+    def test_eos_stops_decode_early(self):
+        """Once every row has emitted eos, the decode loop must stop instead
+        of burning max_new_tokens steps; rows that finished stay pinned at
+        eos for whatever suffix is emitted."""
+        cfg = get_reduced("smollm_135m")
+        params, _ = cfg.init(jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, ServeConfig(max_new_tokens=16, max_seq=32))
+        prompts = jnp.array([[1, 2, 3]], dtype=jnp.int32)
+        free = eng.generate(prompts)             # no eos: full length
+        assert free.shape == (1, 3 + 16)
+        eos = int(free[0, 3])                    # greedy first token == eos
+        out = eng.generate(prompts, eos_id=eos)
+        assert out.shape[1] == 4                 # stopped right after eos
+        assert int(out[0, -1]) == eos
