@@ -4,7 +4,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 # empty (serial) otherwise so the targets degrade gracefully.
 XDIST := $(shell python -c "import xdist" 2>/dev/null && printf -- "-n auto")
 
-.PHONY: test test-fast bench-quick ci
+.PHONY: test test-fast bench-quick bench-roofline ci
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q $(XDIST)
@@ -17,6 +17,12 @@ test-fast:
 bench-quick:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --preset quick --only opt_speed
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --preset quick --only opt_speed_tree
+
+# Planner gate: the opt_speed_tree byte model over the full GPT-small leaf
+# set must stay transpose-free (fails if any leaf regresses to a
+# materialized-transpose plan). Analytic — safe and fast in interpret mode.
+bench-roofline:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.opt_speed --check-roofline
 
 ci:
 	bash scripts/ci.sh

@@ -78,29 +78,33 @@ def main(preset: str = "quick"):
 def _tree_bytes(params, dims_leaves, *, dense_passes=7, slim_passes=5):
     """Roofline bytes-streamed model for one full-tree optimizer step.
 
-    Defaults model the p-apply form (7 passes dense, 5 + O(rows) slim); the
+    Defaults model the p-apply form (7 passes dense, 5 + O(kept) slim); the
     GradientTransformation form actually timed in ``tree_main`` (update
-    emitted, params untouched) streams 6 / 4 + O(rows) — pass those counts
+    emitted, params untouched) streams 6 / 4 + O(kept) — pass those counts
     so projection and measurement describe the same operation.
 
-    Compressed leaves run transpose-free whenever ``canon2d`` reaches a 2-D
-    orientation by pure reshape — reduced dims trailing (minor kernel) *or*
-    leading (major/sublane kernel), which covers both fan_in and fan_out of
-    standard weights. Only a genuinely interleaved multi-dim K still needs a
-    boundary transpose, and a pallas_call is an optimization barrier, so
-    that re-layout materializes (+2 passes per full-size operand: write the
-    copy + re-read or re-write it). That traffic is charged here — the 5/7
-    floor holds for every reshape-reachable leaf.
+    Compressed leaves run transpose-free whenever ``canon_nd`` reaches the
+    batched (B, R, C) canonical form by pure reshape — reduced dims trailing
+    (minor kernel), leading (major/sublane kernel), *or* sandwiched between
+    kept axes (batched major kernel: the kept prefix becomes a batch grid
+    dim, which covers every scan-stacked leaf like (layers, embed, heads,
+    hd) reducing embed). Only a genuinely interleaved K — the reduced dims
+    not forming one contiguous block with kept dims only outside it (e.g. a
+    kept dim inside the reduced span) — still needs a boundary
+    transpose, and a pallas_call is an optimization barrier, so that
+    re-layout materializes (+2 passes per full-size operand: write the copy
+    + re-read or re-write it). That traffic is charged here — the 5/7 floor
+    holds for every reshape-reachable leaf, batch-reachable ones included.
     Returns (dense_bytes, compressed_bytes, compressed_dense_equiv,
     transpose_free_compressed_bytes, transpose_free_dense_equiv)."""
-    from repro.kernels import canon2d
+    from repro.kernels import canon_nd
 
     dense = compressed = compressed_dense_equiv = 0
     tf_compressed = tf_dense_equiv = 0
     for p, dims in zip(jax.tree.leaves(params), dims_leaves):
         n = int(p.size) * 4
         if dims:
-            cn = canon2d(p.shape, tuple(dims))
+            cn = canon_nd(p.shape, tuple(dims))
             b = slim_passes * n + 2 * cn.kept_size * 4
             if cn.is_transpose:
                 # every full-size pass belongs to an operand that must be
@@ -114,6 +118,28 @@ def _tree_bytes(params, dims_leaves, *, dense_passes=7, slim_passes=5):
         else:
             dense += dense_passes * n
     return dense, compressed, compressed_dense_equiv, tf_compressed, tf_dense_equiv
+
+
+def _gpt_small_full_leaves():
+    """Named shape-leaves + per-leaf dims for the real 124M GPT-small.
+
+    Shapes via eval_shape (no 124M-param materialization); meta from the
+    reduced config, whose tree structure and axis names are identical. One
+    derivation shared by the ``tree_main`` headline roofline and the
+    ``roofline_check`` CI gate, so the gate validates exactly the leaf set
+    the benchmark projects. Returns (full_cfg, params_full, named, dims)."""
+    from repro.configs import gpt_small
+    from repro.core import rules_as_tree, table3_rules
+    from repro.core.labels import flatten_with_names
+
+    _, meta = gpt_small.reduced().init(jax.random.PRNGKey(0))
+    full = gpt_small.config()
+    params_full = jax.eval_shape(lambda k: full.init(k)[0], jax.random.PRNGKey(0))
+    dims_full = rules_as_tree(table3_rules(meta), params_full, meta)
+    named, _ = flatten_with_names(params_full)
+    dfl = [tuple(d) for d in
+           jax.tree_util.tree_flatten(params_full)[1].flatten_up_to(dims_full)]
+    return full, params_full, named, dfl
 
 
 def tree_main(preset: str = "quick"):
@@ -158,16 +184,10 @@ def tree_main(preset: str = "quick"):
     write_csv("opt_speed_tree.csv", rows)
 
     # Headline roofline for the full AdamW *apply* form (7 passes dense,
-    # 5 + O(rows) slim — the paper's 5-vs-7 claim) on the real GPT-small
-    # regardless of preset: shapes via eval_shape (no 124M-param
-    # materialization); meta from the reduced config, whose tree structure
-    # and axis names are identical.
-    full = gpt_small.config()
-    params_full = jax.eval_shape(lambda k: full.init(k)[0], jax.random.PRNGKey(0))
-    dims_full = rules_as_tree(table3_rules(meta), params_full, meta)
-    dfl = [tuple(d) for d in
-           jax.tree_util.tree_flatten(params_full)[1].flatten_up_to(dims_full)]
-    fdense_b, fcomp_b, fcomp_dense, ftf_b, ftf_dense = _tree_bytes(params_full, dfl)
+    # 5 + O(kept) slim — the paper's 5-vs-7 claim) on the real GPT-small
+    # regardless of preset.
+    full, params_full, _, dfl = _gpt_small_full_leaves()
+    fdense_b, fcomp_b, _, ftf_b, ftf_dense = _tree_bytes(params_full, dfl)
     f_adam = 7 * sum(int(p.size) for p in jax.tree.leaves(params_full)) * 4
     f_slim = fdense_b + fcomp_b
     tf_ratio = ftf_b / ftf_dense if ftf_dense else 1.0
@@ -176,15 +196,60 @@ def tree_main(preset: str = "quick"):
     fused_us = next(r["us"] for r in rows if r["impl"] == "slim_fused_bucketed")
     emit("opt_speed_tree", fused_us,
          f"{full.name} full-apply form: fused tree step streams {f_slim/f_adam:.2f}x "
-         f"of dense-Adam bytes (re-layout traffic charged only for "
+         f"of dense-Adam bytes (re-layout traffic charged only for genuinely "
          f"interleaved-K leaves); transpose-free compressed leaves — fan_in "
-         f"via the minor kernel, fan_out via the major/sublane kernel — hit "
-         f"the 5/7={5/7:.3f} tensor-pass floor ({tf_ratio:.3f}x bytes incl. "
+         f"via the minor kernel, fan_out via the major/sublane kernel, "
+         f"scan-stacked middle-K via the batched major kernel — hit the "
+         f"5/7={5/7:.3f} tensor-pass floor ({tf_ratio:.3f}x bytes incl. "
          f"O(kept) reduced moments) -> "
          f"projected v5e {f_slim/HBM_BW*1e3:.2f}ms vs {f_adam/HBM_BW*1e3:.2f}ms")
     return rows
 
 
+def roofline_check() -> int:
+    """CI gate (`make bench-roofline`): run the opt_speed_tree byte model
+    over the *full* GPT-small leaf set and fail if any compressed leaf
+    regresses to a transposing plan (``is_transpose=True``) — i.e. if the
+    planner stops reaching the batched canonical form for the scan-stacked
+    leaves, or either 2-D orientation for the rest. Analytic (eval_shape +
+    planner); no kernels run, so it is interpret-mode safe and fast."""
+    from repro.kernels import canon_nd
+
+    full, params_full, named, dfl = _gpt_small_full_leaves()
+    regressed = []
+    for (name, p), dims in zip(named, dfl):
+        if not dims:
+            continue
+        cn = canon_nd(p.shape, dims)
+        tag = f"batch={cn.batch}" if cn.batch > 1 else cn.orientation
+        print(f"  {name:45s} {str(p.shape):22s} K={dims} -> {tag}"
+              + (" TRANSPOSE" if cn.is_transpose else ""))
+        if cn.is_transpose:
+            regressed.append((name, p.shape, dims))
+    dense_b, comp_b, _, tf_b, tf_dense = _tree_bytes(params_full, dfl)
+    n_total = sum(int(p.size) for p in jax.tree.leaves(params_full)) * 4
+    ratio = (dense_b + comp_b) / (7 * n_total)
+    floor = f"{tf_b / tf_dense * 7 / 5:.4f}x of 5/7" if tf_dense else "n/a (no transpose-free leaves)"
+    print(f"{full.name}: compressed tree streams {ratio:.4f}x of dense-Adam "
+          f"bytes (transpose-free floor {floor})")
+    if regressed:
+        print(f"ROOFLINE REGRESSION: {len(regressed)} leaf/leaves plan a "
+              f"materialized transpose: {regressed}")
+        return 1
+    print("roofline OK: every compressed GPT-small leaf is transpose-free")
+    return 0
+
+
 if __name__ == "__main__":
-    main()
-    tree_main()
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=("quick", "full"), default="quick")
+    ap.add_argument("--check-roofline", action="store_true",
+                    help="planner gate only: fail if any gpt_small leaf transposes")
+    args = ap.parse_args()
+    if args.check_roofline:
+        sys.exit(roofline_check())
+    main(args.preset)
+    tree_main(args.preset)

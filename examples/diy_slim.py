@@ -2,8 +2,10 @@
 on *your* model, inspect the per-layer SNR table, derive rules, and train
 with them — the full workflow on a hybrid MoE model.
 
-    PYTHONPATH=src python examples/diy_slim.py
+    PYTHONPATH=src python examples/diy_slim.py [--backend jnp|fused|auto]
 """
+import argparse
+
 from repro.configs import get_reduced
 from repro.core import second_moment_savings
 from repro.data import DataConfig, ZipfLM
@@ -11,11 +13,17 @@ from repro.train import Trainer, TrainerConfig
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "fused", "auto"),
+                    help="optimizer execution backend (fused = Pallas kernels)")
+    args = ap.parse_args()
+
     cfg = get_reduced("jamba_v01_52b")   # mamba + attention + MoE in one model
     data = ZipfLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4))
 
     # 1) probe: short Adam run with SNR measurement
-    tc = TrainerConfig(total_steps=60, log_every=20, measure_snr=True, snr_early_every=10)
+    tc = TrainerConfig(total_steps=60, log_every=20, measure_snr=True,
+                       snr_early_every=10, backend=args.backend)
     probe = Trainer(cfg, "adam", 3e-3, data, tc)
     probe.run()
 
@@ -34,7 +42,8 @@ def main():
 
     # 3) train with the derived rules (SlimAdam)
     slim = Trainer(cfg, "slim_snr", 3e-3, data,
-                   TrainerConfig(total_steps=60, log_every=20), rules=rules)
+                   TrainerConfig(total_steps=60, log_every=20,
+                                 backend=args.backend), rules=rules)
     final = slim.run()
     print(f"SlimAdam(SNR rules) final loss: {final['loss']:.3f}")
 

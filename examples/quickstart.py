@@ -1,7 +1,9 @@
 """Quickstart: swap Adam for SlimAdam on any model in three lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--backend jnp|fused|auto]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -14,13 +16,18 @@ from repro.train.step import make_train_step
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "fused", "auto"),
+                    help="optimizer execution backend (fused = Pallas kernels)")
+    args = ap.parse_args()
+
     cfg = get_reduced("smollm_135m")
     params, meta = cfg.init(jax.random.PRNGKey(0))
 
     # --- the three lines: derive rules, build the optimizer, done -------
     rules = table3_rules(meta)                       # paper Table 3 defaults
     dims = rules_as_tree(rules, params, meta)
-    tx = slim_adam(3e-4, dims)                       # drop-in AdamW recipe
+    tx = slim_adam(3e-4, dims, backend=args.backend)  # drop-in AdamW recipe
     # ---------------------------------------------------------------------
 
     s = second_moment_savings(params, meta, rules)

@@ -18,5 +18,6 @@ if python -c "import xdist" >/dev/null 2>&1; then
 fi
 
 python -m pytest -x -q ${XDIST_FLAGS}
+python -m benchmarks.opt_speed --check-roofline
 python -m benchmarks.run --preset quick --only opt_speed
 python -m benchmarks.run --preset quick --only opt_speed_tree

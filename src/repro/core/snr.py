@@ -39,24 +39,23 @@ def snr_along_dims(v: jnp.ndarray, dims: Tuple[int, ...], *, per_remaining_dim: 
     """
     if not dims:
         raise ValueError("K must be non-empty for SNR; K=None means 'no compression'")
-    if (resolve_backend(backend) == "fused" and per_remaining_dim is None
-            and v.ndim >= 1 and v.size > 0):
+    if resolve_backend(backend) == "fused" and per_remaining_dim is None:
         # snr_op is the jit-cached centered-stats kernel + finalization (its
         # eps equals _VAR_EPS); only the canonicalization happens here.
-        from ..kernels.ops import canon2d, canon_apply, default_interpret, snr_op
-        from ..kernels.tiling import col_fits, row_fits
-        cn = canon2d(v.shape, dims)
-        # canon2d plans whichever orientation (minor = lane reduction, major
-        # = sublane reduction) a pure reshape reaches, so leading *or*
-        # trailing K runs as one kernel pass. An interleaved K would
-        # materialize a full transpose of V across the kernel boundary (~3x
-        # the single read this path promises), and a reduction line wider
-        # than VMEM can't be strip-tiled at all — jnp's fused mean/var
-        # serves both cases.
-        fits = row_fits(cn.cols, 3) if cn.axis == 1 else col_fits(cn.rows, 3)
-        if not cn.is_transpose and fits:
-            v2 = canon_apply(v.astype(jnp.float32), cn)
-            return snr_op(v2, axis=cn.axis, interpret=default_interpret())
+        from ..kernels.ops import canon_apply, default_interpret, leaf_plan, snr_op
+        from ..kernels.snr_stats import CENTERED_BUFS
+        # leaf_plan names whichever batched (B, R, C) layout a pure reshape
+        # reaches — trailing K (minor), leading K (major), or a scan-stacked
+        # kept/K/kept pattern (batched major) — and gates on VMEM. It routes
+        # to jnp when the plan would transpose (an interleaved K would
+        # materialize a full re-layout of V across the kernel boundary, ~3x
+        # the single read this path promises) or the reduction line can't be
+        # strip-tiled at all.
+        plan = leaf_plan(v.shape, v.dtype, dims, n_bufs=CENTERED_BUFS,
+                         allow_transpose=False)
+        if plan.route == "slim":
+            v2 = canon_apply(v.astype(jnp.float32), plan.cn)
+            return snr_op(v2, axis=plan.cn.axis, interpret=default_interpret())
     v = v.astype(jnp.float32)
     mean = jnp.mean(v, axis=dims, keepdims=True)
     var = jnp.mean(jnp.square(v - mean), axis=dims, keepdims=True)

@@ -1,13 +1,19 @@
 from .ops import (
     Canon2D,
+    CanonND,
+    LeafPlan,
     adam_precond,
     canon2d,
     canon_apply,
+    canon_nd,
     canon_restore,
     default_interpret,
     fused_adam_op,
+    leaf_plan,
     slim_precond,
+    slim_precond_batched,
     slim_precond_major,
+    slim_update_batched,
     slim_update_major,
     slim_update_nd,
     slim_update_op,
@@ -17,5 +23,7 @@ from . import ref
 
 __all__ = ["fused_adam_op", "slim_update_op", "slim_update_nd", "snr_op",
            "adam_precond", "slim_precond", "slim_precond_major",
-           "slim_update_major", "Canon2D", "canon2d", "canon_apply",
-           "canon_restore", "default_interpret", "ref"]
+           "slim_precond_batched", "slim_update_major", "slim_update_batched",
+           "CanonND", "Canon2D", "canon_nd", "canon2d", "LeafPlan",
+           "leaf_plan", "canon_apply", "canon_restore", "default_interpret",
+           "ref"]

@@ -71,10 +71,8 @@ def fused_adam(p, g, m, v, *, lr: float, b1: float = 0.9, b2: float = 0.95,
                                 wd=wd, count=count, block=block, interpret=interpret)
         return po[:r, :c], mo[:r, :c], vo[:r, :c]
 
-    bc1 = 1.0 - b1 ** count
-    bc2 = 1.0 - b2 ** count
-    scal = jnp.array([lr, bc1, bc2], jnp.float32)
-
+    scal = jnp.concatenate([jnp.full((1,), lr, jnp.float32),
+                            bias_corrections(b1, b2, count)])
     spec = pl.BlockSpec((tr, tc), lambda i, j: (i, j))
     grid = (r // tr, c // tc)
     kernel = functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps, wd=wd)

@@ -5,44 +5,60 @@ moment is reduced over the compression dims K, so one optimizer step streams
 p, g, m (read) + p', m' (write) + O(kept) for V — 5 tensor passes vs dense
 Adam's 7, and the squared gradient / E_K[g^2] reduction never touches HBM.
 
-Two orientations, so either reduction layout runs without a boundary
-transpose (a pallas_call is an optimization barrier — XLA can't fuse a
-re-layout into the kernel, so a transpose would materialize extra HBM
-passes):
+All kernels operate on the batched canonical form ``(B, R, C)`` planned by
+``repro.kernels.ops.canon_nd`` (B = 1 for plain 2-D leaves; B = layers for
+scan-stacked leaves whose reduction sits between kept axes), in one of two
+orientations so every reshape-reachable reduction layout runs without a
+boundary transpose (a pallas_call is an optimization barrier — XLA can't
+fuse a re-layout into the kernel, so a transpose would materialize extra
+HBM passes):
 
-  * minor (``slim_update`` / ``slim_precond``): V is (R, 1); grid over row
-    strips, each instance holds a full (TR, C) strip in VMEM (fan_in up to
-    22k fits at TR<=32 in fp32) and reduces along lanes;
-  * major (``slim_update_major`` / ``slim_precond_major``): V is (1, C);
-    grid over column strips, each instance holds a full (R, TC) strip and
-    reduces along sublanes — the transpose-free path for leaves whose
-    reduced dims are *leading* (fan_out of a standard weight, conv fan_in).
+  * minor (``axis=1``): V is (B, R, 1); grid over (batch, row strips), each
+    instance holds a full (1, TR, C) strip in VMEM and reduces along lanes;
+  * major (``axis=0``): V is (B, 1, C); grid over (batch, column strips),
+    each instance holds a full (1, R, TC) strip and reduces along sublanes
+    — the transpose-free path for leading *or* batch-interleaved reduced
+    dims (fan_out, conv fan_in, scan-stacked fan_in).
 
-Both compute the strip's E_K[g^2] on the VPU, update the reduced moment,
-and apply the preconditioned update in the same pass.
+Both orientations share one kernel body per form (update / precond),
+parameterized by the in-block reduction axis, and one grid/BlockSpec
+builder (``repro.kernels.tiling.strip_grid``). Each instance computes the
+strip's E_K[g^2] on the VPU, updates the reduced moment, and applies the
+preconditioned update in the same pass. The 2-D entry points
+(``slim_update`` / ``slim_update_major`` / ``slim_precond`` /
+``slim_precond_major``) are B=1 wrappers kept for callers that speak 2-D.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .fused_adam import bias_corrections
-from .tiling import fit_col_block, fit_row_block
+from .tiling import pad_kept, strip_grid, trim_kept
+
+# Live full-size fp32 buffers per kernel instance (inputs + outputs + cast
+# headroom) — the n_bufs VMEM-fitting argument for each form. Dispatchers
+# gate un-servable leaves with ``tiling.strip_fits(red_size, *_BUFS)``.
+UPDATE_BUFS = 6    # p, g, m in + p', m' out + cast headroom
+PRECOND_BUFS = 5   # g, m in + u, m' out + cast headroom
+
+_DEFAULT_BLOCK = {1: 32, 0: 256}  # kept-axis strip width per orientation
 
 
-def _slim_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
-                 p_out, m_out, v_out, *, b1: float, b2: float, eps: float,
-                 wd: float, n_cols: int):
+def _slim_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref, p_out, m_out, v_out,
+                 *, b1: float, b2: float, eps: float, wd: float,
+                 red_axis: int, n_red: int):
     lr = scal_ref[0]
     bc1 = scal_ref[1]
     bc2 = scal_ref[2]
-    g = g_ref[...].astype(jnp.float32)                   # (TR, C)
+    g = g_ref[...].astype(jnp.float32)                   # (1, TR, C) | (1, R, TC)
     m_new = b1 * m_ref[...] + (1.0 - b1) * g
-    ek = jnp.sum(g * g, axis=1, keepdims=True) * (1.0 / n_cols)
-    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # (TR, 1)
+    ek = jnp.sum(g * g, axis=red_axis, keepdims=True) * (1.0 / n_red)
+    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # reduced line
     update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
     if wd:
         update = update + wd * p_ref[...].astype(jnp.float32)
@@ -51,55 +67,134 @@ def _slim_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
     v_out[...] = v_new
 
 
-def slim_update(p, g, m, v_row, *, lr: float, b1: float = 0.9, b2: float = 0.95,
-                eps: float = 1e-8, wd: float = 0.0, count: int = 1,
-                row_block: int = 32, interpret: bool = True):
-    """p, g, m: (R, C); v_row: (R, 1) fp32 reduced moment. Returns (p', m', v')."""
-    r, c = p.shape
-    # 6 full-width fp32 buffers live per instance (p, g, m in + p', m' out,
-    # plus cast headroom); shrink the strip for wide reduced dims.
-    tr = fit_row_block(c, row_block, r, 6)
-    if r % tr:
-        rp = -(-r // tr) * tr
-        pad2 = lambda x: jnp.pad(x, ((0, rp - r), (0, 0)))
-        po, mo, vo = slim_update(pad2(p), pad2(g), pad2(m), pad2(v_row), lr=lr, b1=b1,
-                                 b2=b2, eps=eps, wd=wd, count=count,
-                                 row_block=row_block, interpret=interpret)
-        return po[:r], mo[:r], vo[:r]
+def slim_update_batched(p, g, m, v_line, *, axis: int, lr: float, b1: float = 0.9,
+                        b2: float = 0.95, eps: float = 1e-8, wd: float = 0.0,
+                        count=1, block: Optional[int] = None,
+                        interpret: bool = True):
+    """Batched SlimAdam step on the (B, R, C) canonical form.
 
-    bc1 = 1.0 - b1 ** count
-    bc2 = 1.0 - b2 ** count
-    scal = jnp.array([lr, bc1, bc2], jnp.float32)
+    p, g, m: (B, R, C); v_line: (B, R, 1) fp32 (axis=1, reduce over C) or
+    (B, 1, C) fp32 (axis=0, reduce over R). Returns (p', m', v'). ``count``
+    may be a traced int array (the corrections ride in via the scalar
+    operand — see :func:`repro.kernels.fused_adam.bias_corrections`, the one
+    definition of the bias-correction semantics for every kernel entry).
+    """
+    assert p.ndim == 3 and axis in (0, 1)
+    b, r, c = p.shape
+    block = _DEFAULT_BLOCK[axis] if block is None else block
+    sg = strip_grid(b, r, c, axis=axis, n_bufs=UPDATE_BUFS, block=block)
+    if sg.kept % sg.tile:
+        po, mo, vo = slim_update_batched(pad_kept(p, sg), pad_kept(g, sg),
+                                         pad_kept(m, sg), pad_kept(v_line, sg),
+                                         axis=axis, lr=lr, b1=b1, b2=b2, eps=eps,
+                                         wd=wd, count=count, block=block,
+                                         interpret=interpret)
+        return trim_kept(po, sg), trim_kept(mo, sg), trim_kept(vo, sg)
 
-    strip = pl.BlockSpec((tr, c), lambda i: (i, 0))
-    vspec = pl.BlockSpec((tr, 1), lambda i: (i, 0))
-    kernel = functools.partial(_slim_kernel, b1=b1, b2=b2, eps=eps, wd=wd, n_cols=c)
+    scal = jnp.concatenate([jnp.full((1,), lr, jnp.float32),
+                            bias_corrections(b1, b2, count)])
+    kernel = functools.partial(_slim_kernel, b1=b1, b2=b2, eps=eps, wd=wd,
+                               red_axis=sg.red_axis, n_red=sg.n_red)
+    v_shape = (b, r, 1) if axis == 1 else (b, 1, c)
     return pl.pallas_call(
         kernel,
-        grid=(r // tr,),
-        in_specs=[strip, strip, strip, vspec, pl.BlockSpec((3,), lambda i: (0,))],
-        out_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0)),
-                   pl.BlockSpec((tr, c), lambda i: (i, 0)), vspec],
+        grid=sg.grid,
+        in_specs=[sg.full, sg.full, sg.full, sg.line,
+                  pl.BlockSpec((3,), lambda bi, i: (0,))],
+        out_specs=[sg.full, sg.full, sg.line],
         out_shape=[
-            jax.ShapeDtypeStruct((r, c), p.dtype),
-            jax.ShapeDtypeStruct((r, c), jnp.float32),
-            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, r, c), p.dtype),
+            jax.ShapeDtypeStruct((b, r, c), jnp.float32),
+            jax.ShapeDtypeStruct(v_shape, jnp.float32),
         ],
         interpret=interpret,
-    )(p, g, m, v_row, scal)
+    )(p, g, m, v_line, scal)
 
 
 def _slim_precond_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
-                         *, b1: float, b2: float, eps: float, n_cols: int):
+                         *, b1: float, b2: float, eps: float,
+                         red_axis: int, n_red: int):
     bc1 = scal_ref[0]
     bc2 = scal_ref[1]
-    g = g_ref[...].astype(jnp.float32)                   # (TR, C)
+    g = g_ref[...].astype(jnp.float32)                   # (1, TR, C) | (1, R, TC)
     m_new = b1 * m_ref[...] + (1.0 - b1) * g
-    ek = jnp.sum(g * g, axis=1, keepdims=True) * (1.0 / n_cols)
-    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # (TR, 1)
+    ek = jnp.sum(g * g, axis=red_axis, keepdims=True) * (1.0 / n_red)
+    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # reduced line
     u_out[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
     m_out[...] = m_new
     v_out[...] = v_new
+
+
+def slim_precond_batched(g, m, v_line, *, axis: int, b1: float = 0.9,
+                         b2: float = 0.95, eps: float = 1e-8, count=1,
+                         block: Optional[int] = None, interpret: bool = True):
+    """Preconditioned batched SlimAdam update: (g, m, v_line) -> (u, m', v').
+
+    The GradientTransformation form of :func:`slim_update_batched` — no
+    parameter read/write, lr / weight decay applied downstream, traced
+    ``count`` fine. Streams 4 full passes (g, m read + u, m' write) plus
+    O(B * kept) for the reduced moment.
+    """
+    assert g.ndim == 3 and axis in (0, 1)
+    b, r, c = g.shape
+    block = _DEFAULT_BLOCK[axis] if block is None else block
+    sg = strip_grid(b, r, c, axis=axis, n_bufs=PRECOND_BUFS, block=block)
+    if sg.kept % sg.tile:
+        uo, mo, vo = slim_precond_batched(pad_kept(g, sg), pad_kept(m, sg),
+                                          pad_kept(v_line, sg), axis=axis,
+                                          b1=b1, b2=b2, eps=eps, count=count,
+                                          block=block, interpret=interpret)
+        return trim_kept(uo, sg), trim_kept(mo, sg), trim_kept(vo, sg)
+
+    scal = bias_corrections(b1, b2, count)
+    kernel = functools.partial(_slim_precond_kernel, b1=b1, b2=b2, eps=eps,
+                               red_axis=sg.red_axis, n_red=sg.n_red)
+    v_shape = (b, r, 1) if axis == 1 else (b, 1, c)
+    return pl.pallas_call(
+        kernel,
+        grid=sg.grid,
+        in_specs=[sg.full, sg.full, sg.line,
+                  pl.BlockSpec((2,), lambda bi, i: (0,))],
+        out_specs=[sg.full, sg.full, sg.line],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r, c), jnp.float32),
+            jax.ShapeDtypeStruct((b, r, c), jnp.float32),
+            jax.ShapeDtypeStruct(v_shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, m, v_line, scal)
+
+
+# ---------------------------------------------------------------------------
+# 2-D entry points: B=1 wrappers over the batched canonical form.
+# ---------------------------------------------------------------------------
+
+
+def _b1(*xs):
+    return tuple(x[None] for x in xs)
+
+
+def _unb1(outs):
+    return tuple(o[0] for o in outs)
+
+
+def slim_update(p, g, m, v_row, *, lr: float, b1: float = 0.9, b2: float = 0.95,
+                eps: float = 1e-8, wd: float = 0.0, count=1,
+                row_block: int = 32, interpret: bool = True):
+    """p, g, m: (R, C); v_row: (R, 1) fp32 reduced moment. Returns (p', m', v')."""
+    return _unb1(slim_update_batched(*_b1(p, g, m, v_row), axis=1, lr=lr, b1=b1,
+                                     b2=b2, eps=eps, wd=wd, count=count,
+                                     block=row_block, interpret=interpret))
+
+
+def slim_update_major(p, g, m, v_col, *, lr: float, b1: float = 0.9, b2: float = 0.95,
+                      eps: float = 1e-8, wd: float = 0.0, count=1,
+                      col_block: int = 256, interpret: bool = True):
+    """p, g, m: (R, C); v_col: (1, C) fp32 moment reduced over rows.
+    Returns (p', m', v')."""
+    return _unb1(slim_update_batched(*_b1(p, g, m, v_col), axis=0, lr=lr, b1=b1,
+                                     b2=b2, eps=eps, wd=wd, count=count,
+                                     block=col_block, interpret=interpret))
 
 
 def slim_precond(g, m, v_row, *, b1: float = 0.9, b2: float = 0.95,
@@ -108,117 +203,10 @@ def slim_precond(g, m, v_row, *, b1: float = 0.9, b2: float = 0.95,
     """Preconditioned SlimAdam update only: (g, m, v_row) -> (u, m', v_row').
 
     g, m: (R, C); v_row: (R, 1) fp32 reduced moment; u is fp32 full-shape.
-    Like :func:`repro.kernels.fused_adam.adam_precond` this is the
-    GradientTransformation form — no parameter read/write, and ``count`` may
-    be traced. Streams 4 full passes (g, m read + u, m' write) plus O(R).
     """
-    r, c = g.shape
-    # 5 full-width fp32 buffers per instance (g, m in + u, m' out + cast
-    # headroom); shrink the strip for wide reduced dims.
-    tr = fit_row_block(c, row_block, r, 5)
-    if r % tr:
-        rp = -(-r // tr) * tr
-        pad2 = lambda x: jnp.pad(x, ((0, rp - r), (0, 0)))
-        uo, mo, vo = slim_precond(pad2(g), pad2(m), pad2(v_row), b1=b1, b2=b2,
-                                  eps=eps, count=count, row_block=row_block,
-                                  interpret=interpret)
-        return uo[:r], mo[:r], vo[:r]
-
-    scal = bias_corrections(b1, b2, count)
-    strip = pl.BlockSpec((tr, c), lambda i: (i, 0))
-    vspec = pl.BlockSpec((tr, 1), lambda i: (i, 0))
-    kernel = functools.partial(_slim_precond_kernel, b1=b1, b2=b2, eps=eps, n_cols=c)
-    return pl.pallas_call(
-        kernel,
-        grid=(r // tr,),
-        in_specs=[strip, strip, vspec, pl.BlockSpec((2,), lambda i: (0,))],
-        out_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0)),
-                   pl.BlockSpec((tr, c), lambda i: (i, 0)), vspec],
-        out_shape=[
-            jax.ShapeDtypeStruct((r, c), jnp.float32),
-            jax.ShapeDtypeStruct((r, c), jnp.float32),
-            jax.ShapeDtypeStruct((r, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(g, m, v_row, scal)
-
-
-# ---------------------------------------------------------------------------
-# Major-axis (sublane-reduction) variants: V reduced over the *leading* dim.
-# ---------------------------------------------------------------------------
-
-
-def _slim_major_kernel(p_ref, g_ref, m_ref, v_ref, scal_ref,
-                       p_out, m_out, v_out, *, b1: float, b2: float, eps: float,
-                       wd: float, n_rows: int):
-    lr = scal_ref[0]
-    bc1 = scal_ref[1]
-    bc2 = scal_ref[2]
-    g = g_ref[...].astype(jnp.float32)                   # (R, TC)
-    m_new = b1 * m_ref[...] + (1.0 - b1) * g
-    ek = jnp.sum(g * g, axis=0, keepdims=True) * (1.0 / n_rows)
-    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # (1, TC)
-    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
-    if wd:
-        update = update + wd * p_ref[...].astype(jnp.float32)
-    p_out[...] = (p_ref[...].astype(jnp.float32) - lr * update).astype(p_out.dtype)
-    m_out[...] = m_new
-    v_out[...] = v_new
-
-
-def slim_update_major(p, g, m, v_col, *, lr: float, b1: float = 0.9, b2: float = 0.95,
-                      eps: float = 1e-8, wd: float = 0.0, count: int = 1,
-                      col_block: int = 256, interpret: bool = True):
-    """p, g, m: (R, C); v_col: (1, C) fp32 moment reduced over rows.
-    Returns (p', m', v'). Mirrors :func:`slim_update` with the grid over
-    column strips and the reduction over sublanes — transpose-free for
-    leading reduced dims."""
-    r, c = p.shape
-    # 6 full-height fp32 buffers live per instance (p, g, m in + p', m' out,
-    # plus cast headroom); shrink the strip for tall reduced dims.
-    tc = fit_col_block(r, col_block, c, 6)
-    if c % tc:
-        cp = -(-c // tc) * tc
-        pad2 = lambda x: jnp.pad(x, ((0, 0), (0, cp - c)))
-        po, mo, vo = slim_update_major(pad2(p), pad2(g), pad2(m), pad2(v_col),
-                                       lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
-                                       count=count, col_block=col_block,
-                                       interpret=interpret)
-        return po[:, :c], mo[:, :c], vo[:, :c]
-
-    bc1 = 1.0 - b1 ** count
-    bc2 = 1.0 - b2 ** count
-    scal = jnp.array([lr, bc1, bc2], jnp.float32)
-
-    strip = pl.BlockSpec((r, tc), lambda j: (0, j))
-    vspec = pl.BlockSpec((1, tc), lambda j: (0, j))
-    kernel = functools.partial(_slim_major_kernel, b1=b1, b2=b2, eps=eps, wd=wd,
-                               n_rows=r)
-    return pl.pallas_call(
-        kernel,
-        grid=(c // tc,),
-        in_specs=[strip, strip, strip, vspec, pl.BlockSpec((3,), lambda j: (0,))],
-        out_specs=[strip, strip, vspec],
-        out_shape=[
-            jax.ShapeDtypeStruct((r, c), p.dtype),
-            jax.ShapeDtypeStruct((r, c), jnp.float32),
-            jax.ShapeDtypeStruct((1, c), jnp.float32),
-        ],
-        interpret=interpret,
-    )(p, g, m, v_col, scal)
-
-
-def _slim_precond_major_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
-                               *, b1: float, b2: float, eps: float, n_rows: int):
-    bc1 = scal_ref[0]
-    bc2 = scal_ref[1]
-    g = g_ref[...].astype(jnp.float32)                   # (R, TC)
-    m_new = b1 * m_ref[...] + (1.0 - b1) * g
-    ek = jnp.sum(g * g, axis=0, keepdims=True) * (1.0 / n_rows)
-    v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # (1, TC)
-    u_out[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
-    m_out[...] = m_new
-    v_out[...] = v_new
+    return _unb1(slim_precond_batched(*_b1(g, m, v_row), axis=1, b1=b1, b2=b2,
+                                      eps=eps, count=count, block=row_block,
+                                      interpret=interpret))
 
 
 def slim_precond_major(g, m, v_col, *, b1: float = 0.9, b2: float = 0.95,
@@ -227,35 +215,8 @@ def slim_precond_major(g, m, v_col, *, b1: float = 0.9, b2: float = 0.95,
     """Preconditioned major-axis SlimAdam update: (g, m, v_col) -> (u, m', v').
 
     g, m: (R, C); v_col: (1, C) fp32 moment reduced over rows; u is fp32
-    full-shape. The GradientTransformation form of :func:`slim_update_major`
-    — no parameter read/write, traced ``count`` fine. Streams 4 full passes
-    (g, m read + u, m' write) plus O(C)."""
-    r, c = g.shape
-    # 5 full-height fp32 buffers per instance (g, m in + u, m' out + cast
-    # headroom); shrink the strip for tall reduced dims.
-    tc = fit_col_block(r, col_block, c, 5)
-    if c % tc:
-        cp = -(-c // tc) * tc
-        pad2 = lambda x: jnp.pad(x, ((0, 0), (0, cp - c)))
-        uo, mo, vo = slim_precond_major(pad2(g), pad2(m), pad2(v_col), b1=b1,
-                                        b2=b2, eps=eps, count=count,
-                                        col_block=col_block, interpret=interpret)
-        return uo[:, :c], mo[:, :c], vo[:, :c]
-
-    scal = bias_corrections(b1, b2, count)
-    strip = pl.BlockSpec((r, tc), lambda j: (0, j))
-    vspec = pl.BlockSpec((1, tc), lambda j: (0, j))
-    kernel = functools.partial(_slim_precond_major_kernel, b1=b1, b2=b2, eps=eps,
-                               n_rows=r)
-    return pl.pallas_call(
-        kernel,
-        grid=(c // tc,),
-        in_specs=[strip, strip, vspec, pl.BlockSpec((2,), lambda j: (0,))],
-        out_specs=[strip, strip, vspec],
-        out_shape=[
-            jax.ShapeDtypeStruct((r, c), jnp.float32),
-            jax.ShapeDtypeStruct((r, c), jnp.float32),
-            jax.ShapeDtypeStruct((1, c), jnp.float32),
-        ],
-        interpret=interpret,
-    )(g, m, v_col, scal)
+    full-shape.
+    """
+    return _unb1(slim_precond_batched(*_b1(g, m, v_col), axis=0, b1=b1, b2=b2,
+                                      eps=eps, count=count, block=col_block,
+                                      interpret=interpret))

@@ -1,112 +1,132 @@
-"""Per-row (sum, sum-sq) reduction for the SNR analysis — Pallas TPU kernel.
+"""Fused per-line reductions for the SNR analysis — Pallas TPU kernels.
 
-SNR_K(V) needs mean and variance along K; a single fused pass computes both
-first moments of V per row, so the measurement adds one read of V (and O(R)
-writes) to a training step instead of XLA's separate mean/var reductions.
+SNR_K(V) needs mean and variance along K; a single fused pass computes the
+moments of V per reduction line, so the measurement adds one read of V (and
+O(kept) writes) to a training step instead of XLA's separate mean/var
+reductions.
+
+Like the slim-update kernels, everything runs on the batched canonical form
+``(B, R, C)`` (see ``repro.kernels.ops.canon_nd``) through the shared
+grid/BlockSpec builder (``repro.kernels.tiling.strip_grid``), with one
+kernel body per stats flavor parameterized by the in-block reduction axis:
+minor (``axis=1``, stats per row) or major (``axis=0``, stats per column —
+the transpose-free pass for moments whose compression dims are leading or
+batch-interleaved). The 2-D entries (``snr_stats`` /
+``snr_stats_centered`` / ``snr_stats_centered_major``) are B=1 wrappers.
 """
 from __future__ import annotations
+
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tiling import fit_col_block, fit_row_block
+from .tiling import pad_kept, strip_grid
+
+# Live full-size fp32 buffers per instance (the n_bufs VMEM-fitting
+# argument): input + cast copy (+ shifted copy for the centered form).
+STATS_BUFS = 2
+CENTERED_BUFS = 3
+
+_DEFAULT_BLOCK = {1: 64, 0: 256}
 
 
-def _snr_kernel(v_ref, s1_out, s2_out):
-    v = v_ref[...].astype(jnp.float32)        # (TR, C)
-    s1_out[...] = jnp.sum(v, axis=1)
-    s2_out[...] = jnp.sum(v * v, axis=1)
+def _first_along(v: jnp.ndarray, red_axis: int) -> jnp.ndarray:
+    """The reduction line's first entry, kept broadcastable (the centered
+    kernels' shift)."""
+    return jax.lax.slice_in_dim(v, 0, 1, axis=red_axis)
+
+
+def _snr_kernel(v_ref, s1_out, s2_out, *, red_axis: int):
+    v = v_ref[...].astype(jnp.float32)        # (1, TR, C) | (1, R, TC)
+    s1_out[...] = jnp.sum(v, axis=red_axis)
+    s2_out[...] = jnp.sum(v * v, axis=red_axis)
+
+
+def _snr_centered_kernel(v_ref, s1_out, s1c_out, s2c_out, *, red_axis: int):
+    v = v_ref[...].astype(jnp.float32)        # (1, TR, C) | (1, R, TC)
+    d = v - _first_along(v, red_axis)         # shift by the line's first entry
+    s1_out[...] = jnp.sum(v, axis=red_axis)
+    s1c_out[...] = jnp.sum(d, axis=red_axis)
+    s2c_out[...] = jnp.sum(d * d, axis=red_axis)
+
+
+def _stats_call(v, *, axis: int, n_bufs: int, n_outs: int, kernel_body,
+                block: Optional[int], interpret: bool):
+    """Shared pad-fit-launch path for both stats flavors. Returns ``n_outs``
+    arrays of shape (B, kept)."""
+    assert v.ndim == 3 and axis in (0, 1)
+    b, r, c = v.shape
+    block = _DEFAULT_BLOCK[axis] if block is None else block
+    sg = strip_grid(b, r, c, axis=axis, n_bufs=n_bufs, block=block)
+    if sg.kept % sg.tile:
+        outs = _stats_call(pad_kept(v, sg), axis=axis, n_bufs=n_bufs,
+                           n_outs=n_outs, kernel_body=kernel_body,
+                           block=block, interpret=interpret)
+        return tuple(o[:, :sg.kept] for o in outs)  # stats are (B, kept)
+    kernel = functools.partial(kernel_body, red_axis=sg.red_axis)
+    return pl.pallas_call(
+        kernel,
+        grid=sg.grid,
+        in_specs=[sg.full],
+        out_specs=[sg.stat] * n_outs,
+        out_shape=[jax.ShapeDtypeStruct((b, sg.kept), jnp.float32)] * n_outs,
+        interpret=interpret,
+    )(v)
+
+
+def snr_stats_batched(v, *, axis: int, block: Optional[int] = None,
+                      interpret: bool = True):
+    """v: (B, R, C) -> (line_sum, line_sumsq), each (B, kept)."""
+    return _stats_call(v, axis=axis, n_bufs=STATS_BUFS, n_outs=2,
+                       kernel_body=_snr_kernel, block=block, interpret=interpret)
+
+
+def snr_stats_centered_batched(v, *, axis: int, block: Optional[int] = None,
+                               interpret: bool = True):
+    """v: (B, R, C) -> (line_sum, shifted_line_sum, shifted_line_sumsq),
+    each (B, kept).
+
+    The naive one-pass E[v^2] - E[v]^2 variance cancels catastrophically in
+    fp32 for near-constant lines (the high-SNR regime the analysis exists to
+    detect): abs error ~ eps * mean^2 swamps a true variance orders of
+    magnitude smaller. Shifting each line by its first entry makes both sums
+    O(spread) instead of O(magnitude) — variance is shift-invariant, so
+    ``var = s2c/n - (s1c/n)^2`` is accurate to the spread's own precision,
+    still in a single pass over V. The unshifted line sum rides along for
+    the mean (V >= 0, so its summation is stable).
+    """
+    return _stats_call(v, axis=axis, n_bufs=CENTERED_BUFS, n_outs=3,
+                       kernel_body=_snr_centered_kernel, block=block,
+                       interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# 2-D entry points: B=1 wrappers over the batched canonical form.
+# ---------------------------------------------------------------------------
 
 
 def snr_stats(v, *, row_block: int = 64, interpret: bool = True):
     """v: (R, C) -> (row_sum (R,), row_sumsq (R,))."""
-    r, c = v.shape
-    tr = fit_row_block(c, row_block, r, 2)  # one full-width input + cast copy
-    if r % tr:
-        rp = -(-r // tr) * tr
-        s1, s2 = snr_stats(jnp.pad(v, ((0, rp - r), (0, 0))), row_block=row_block,
-                           interpret=interpret)
-        return s1[:r], s2[:r]
-    return pl.pallas_call(
-        _snr_kernel,
-        grid=(r // tr,),
-        in_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((tr,), lambda i: (i,)),
-                   pl.BlockSpec((tr,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((r,), jnp.float32),
-                   jax.ShapeDtypeStruct((r,), jnp.float32)],
-        interpret=interpret,
-    )(v)
-
-
-def _snr_centered_kernel(v_ref, s1_out, s1c_out, s2c_out):
-    v = v_ref[...].astype(jnp.float32)        # (TR, C)
-    d = v - v[:, 0:1]                         # shift by the row's first entry
-    s1_out[...] = jnp.sum(v, axis=1)
-    s1c_out[...] = jnp.sum(d, axis=1)
-    s2c_out[...] = jnp.sum(d * d, axis=1)
+    s1, s2 = snr_stats_batched(v[None], axis=1, block=row_block, interpret=interpret)
+    return s1[0], s2[0]
 
 
 def snr_stats_centered(v, *, row_block: int = 64, interpret: bool = True):
     """v: (R, C) -> (row_sum, shifted_row_sum, shifted_row_sumsq), all (R,).
-
-    The naive one-pass E[v^2] - E[v]^2 variance cancels catastrophically in
-    fp32 for near-constant rows (the high-SNR regime the analysis exists to
-    detect): abs error ~ eps * mean^2 swamps a true variance orders of
-    magnitude smaller. Shifting each row by its first entry makes both sums
-    O(spread) instead of O(magnitude) — variance is shift-invariant, so
-    ``var = s2c/n - (s1c/n)^2`` is accurate to the spread's own precision,
-    still in a single pass over V. The unshifted row sum rides along for the
-    mean (V >= 0, so its summation is stable).
-    """
-    r, c = v.shape
-    tr = fit_row_block(c, row_block, r, 3)  # input + shifted copy + cast
-    if r % tr:
-        rp = -(-r // tr) * tr
-        s1, s1c, s2c = snr_stats_centered(jnp.pad(v, ((0, rp - r), (0, 0))),
-                                          row_block=row_block, interpret=interpret)
-        return s1[:r], s1c[:r], s2c[:r]
-    return pl.pallas_call(
-        _snr_centered_kernel,
-        grid=(r // tr,),
-        in_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((tr,), lambda i: (i,))] * 3,
-        out_shape=[jax.ShapeDtypeStruct((r,), jnp.float32)] * 3,
-        interpret=interpret,
-    )(v)
-
-
-def _snr_centered_major_kernel(v_ref, s1_out, s1c_out, s2c_out):
-    v = v_ref[...].astype(jnp.float32)        # (R, TC)
-    d = v - v[0:1, :]                         # shift by the column's first entry
-    s1_out[...] = jnp.sum(v, axis=0)
-    s1c_out[...] = jnp.sum(d, axis=0)
-    s2c_out[...] = jnp.sum(d * d, axis=0)
+    See :func:`snr_stats_centered_batched` for the shift-centering argument."""
+    s1, s1c, s2c = snr_stats_centered_batched(v[None], axis=1, block=row_block,
+                                              interpret=interpret)
+    return s1[0], s1c[0], s2c[0]
 
 
 def snr_stats_centered_major(v, *, col_block: int = 256, interpret: bool = True):
     """v: (R, C) -> (col_sum, shifted_col_sum, shifted_col_sumsq), all (C,).
-
-    Major-axis twin of :func:`snr_stats_centered`: the reduction runs over
-    sublanes (axis 0), so a moment tensor whose compression dims are leading
-    gets its one-pass centered stats without a boundary transpose. Same
-    shift-centering argument — variance is shift-invariant, so subtracting
-    each column's first entry keeps the sums O(spread) in the near-constant
-    high-SNR regime."""
-    r, c = v.shape
-    tc = fit_col_block(r, col_block, c, 3)  # input + shifted copy + cast
-    if c % tc:
-        cp = -(-c // tc) * tc
-        s1, s1c, s2c = snr_stats_centered_major(jnp.pad(v, ((0, 0), (0, cp - c))),
-                                                col_block=col_block,
-                                                interpret=interpret)
-        return s1[:c], s1c[:c], s2c[:c]
-    return pl.pallas_call(
-        _snr_centered_major_kernel,
-        grid=(c // tc,),
-        in_specs=[pl.BlockSpec((r, tc), lambda j: (0, j))],
-        out_specs=[pl.BlockSpec((tc,), lambda j: (j,))] * 3,
-        out_shape=[jax.ShapeDtypeStruct((c,), jnp.float32)] * 3,
-        interpret=interpret,
-    )(v)
+    Major-axis twin of :func:`snr_stats_centered` — the reduction runs over
+    sublanes, so a moment whose compression dims are leading gets its
+    one-pass centered stats without a boundary transpose."""
+    s1, s1c, s2c = snr_stats_centered_batched(v[None], axis=0, block=col_block,
+                                              interpret=interpret)
+    return s1[0], s1c[0], s2c[0]

@@ -1,45 +1,117 @@
-"""Shared tiling policy for kernels whose blocks span a full reduction axis.
+"""Shared tiling policy + grid/BlockSpec builder for strip kernels.
 
-Full-row strips are the right layout for minor-axis reductions
-(slim_update / slim_precond / snr_stats*) and full-column strips for the
-major-axis (sublane-reduction) twins, but a vocab-width reduction extent
-(50k+) at the default block would blow VMEM on TPU — never seen in interpret
-mode, so the bound lives here rather than in CI.
+The slim-update and snr-stats kernels all share one canonical layout: a
+``(B, R, C)`` tensor whose reduction axis is held *whole* inside each kernel
+instance while a grid walks the batch dim and strips of the kept axis. Two
+orientations cover every reshape-reachable reduction:
+
+  * **minor** (reduce lanes, per-batch 2-D axis 1): blocks are
+    ``(1, tile, C)``, the grid is ``(B, R / tile)``;
+  * **major** (reduce sublanes, per-batch 2-D axis 0): blocks are
+    ``(1, R, tile)``, the grid is ``(B, C / tile)``.
+
+:func:`strip_grid` builds the grid and every BlockSpec a kernel in that
+layout needs (full-tensor strips, the reduced O(kept) line, and per-line
+stat outputs), so the kernel modules declare *what* they stream, not how it
+tiles.
+
+VMEM fitting is batch-aware in the sense that matters: the batch dim rides
+on the *grid* (one batch slice per instance), so the per-instance working
+set depends only on the reduction extent — a vocab-width reduction line
+(50k+) at the default block would blow VMEM on TPU regardless of B. Never
+seen in interpret mode, so the bound lives here rather than in CI.
 """
 from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 # Per-call VMEM working-set budget: conservative slice of the ~16 MiB/core,
 # leaving room for double buffering.
 VMEM_BUDGET = 8 << 20
 
 
-def fit_row_block(n_cols: int, row_block: int, n_rows: int, n_full_width_bufs: int) -> int:
-    """Shrink a row-strip tile so ``n_full_width_bufs`` fp32 (tr, n_cols)
-    buffers fit in :data:`VMEM_BUDGET`. Callers must gate on
-    :func:`row_fits` first — when a single row already exceeds the budget
-    (full-reduction K on a large tensor), no row count can enforce it."""
-    cap = max(1, VMEM_BUDGET // (n_cols * 4 * n_full_width_bufs))
-    return max(1, min(row_block, cap, n_rows))
+def fit_strip_block(red_size: int, block: int, kept_size: int, n_bufs: int) -> int:
+    """Shrink a strip tile so ``n_bufs`` fp32 (tile, red_size) buffers fit in
+    :data:`VMEM_BUDGET`. Callers must gate on :func:`strip_fits` first — when
+    a single reduction line already exceeds the budget (full-reduction K on a
+    big tensor), no tile count can enforce it."""
+    cap = max(1, VMEM_BUDGET // (red_size * 4 * n_bufs))
+    return max(1, min(block, cap, kept_size))
 
 
-def row_fits(n_cols: int, n_full_width_bufs: int) -> bool:
-    """Whether even a single (1, n_cols) strip's working set fits the budget.
-    When it doesn't, the row-strip kernels can't serve the tensor on a real
-    TPU (interpret mode wouldn't notice) — dispatchers fall back to jnp."""
-    return n_cols * 4 * n_full_width_bufs <= VMEM_BUDGET
+def strip_fits(red_size: int, n_bufs: int) -> bool:
+    """Whether a single reduction line's working set (``n_bufs`` fp32 copies)
+    fits the budget. When it doesn't, the strip kernels can't serve the
+    tensor on a real TPU (interpret mode wouldn't notice) — dispatchers fall
+    back to jnp. Independent of the batch extent: batch rides on the grid,
+    not in VMEM."""
+    return red_size * 4 * n_bufs <= VMEM_BUDGET
 
 
-def fit_col_block(n_rows: int, col_block: int, n_cols: int, n_full_height_bufs: int) -> int:
-    """:func:`fit_row_block` twin for the major-axis kernels: shrink a
-    column-strip tile so ``n_full_height_bufs`` fp32 (n_rows, tc) buffers fit
-    in :data:`VMEM_BUDGET`. Callers must gate on :func:`col_fits` first —
-    when a single column already exceeds the budget, no column count can
-    enforce it."""
-    cap = max(1, VMEM_BUDGET // (n_rows * 4 * n_full_height_bufs))
-    return max(1, min(col_block, cap, n_cols))
+class StripGrid(NamedTuple):
+    """Grid + BlockSpecs for one batched strip kernel launch over (B, R, C).
+
+    ``axis`` is the per-batch 2-D reduction axis (1 = minor/lanes,
+    0 = major/sublanes); ``red_axis`` is the same axis inside a 3-D block
+    (2 or 1), which is what kernel bodies reduce over.
+    """
+
+    grid: Tuple[int, int]   # (B, kept / tile)
+    axis: int               # per-batch 2-D reduction axis: 1 | 0
+    red_axis: int           # reduction axis of a (1, ., .) block: 2 | 1
+    kept_axis: int          # grid-tiled kept axis of the (B, R, C) view: 1 | 2
+    n_red: int              # reduction extent (held whole per instance)
+    kept: int               # kept extent per batch (must divide by tile)
+    tile: int               # strip width along the kept axis
+    full: Any               # BlockSpec for full (B, R, C) operands
+    line: Any               # BlockSpec for the reduced O(kept) operand
+    stat: Any               # BlockSpec for (B, kept) per-line stat outputs
 
 
-def col_fits(n_rows: int, n_full_height_bufs: int) -> bool:
-    """Whether a single (n_rows, 1) strip's working set fits the budget —
-    the major-axis analogue of :func:`row_fits`."""
-    return n_rows * 4 * n_full_height_bufs <= VMEM_BUDGET
+def strip_grid(b: int, r: int, c: int, *, axis: int, n_bufs: int, block: int) -> StripGrid:
+    """Plan the grid and BlockSpecs for a (B, R, C) strip kernel.
+
+    ``axis=1`` reduces the trailing axis (minor): grid over row strips, each
+    instance holds a (1, tile, C) block. ``axis=0`` reduces the middle axis
+    (major): grid over column strips, each instance holds a (1, R, tile)
+    block. ``n_bufs`` is the caller's live full-size fp32 buffer count per
+    instance; the tile shrinks until they fit :data:`VMEM_BUDGET`. The kept
+    extent must already be a multiple of the returned tile — callers pad
+    first (see the kernel modules' pad-and-recurse entries).
+    """
+    assert axis in (0, 1)
+    if axis == 1:
+        n_red, kept = c, r
+        tile = fit_strip_block(n_red, block, kept, n_bufs)
+        full = pl.BlockSpec((1, tile, c), lambda bi, i: (bi, i, 0))
+        line = pl.BlockSpec((1, tile, 1), lambda bi, i: (bi, i, 0))
+        red_axis, kept_axis = 2, 1
+    else:
+        n_red, kept = r, c
+        tile = fit_strip_block(n_red, block, kept, n_bufs)
+        full = pl.BlockSpec((1, r, tile), lambda bi, j: (bi, 0, j))
+        line = pl.BlockSpec((1, 1, tile), lambda bi, j: (bi, 0, j))
+        red_axis, kept_axis = 1, 2
+    stat = pl.BlockSpec((1, tile), lambda bi, i: (bi, i))
+    return StripGrid(grid=(b, kept // tile), axis=axis, red_axis=red_axis,
+                     kept_axis=kept_axis, n_red=n_red, kept=kept, tile=tile,
+                     full=full, line=line, stat=stat)
+
+
+def pad_kept(x: jnp.ndarray, sg: StripGrid) -> jnp.ndarray:
+    """Pad ``x``'s kept axis up to the plan's tile multiple (the reduction
+    axis is never padded, so padded lines cannot contaminate real ones;
+    callers slice the padding back off with :func:`trim_kept`)."""
+    cfg = [(0, 0)] * x.ndim
+    cfg[sg.kept_axis] = (0, -(-sg.kept // sg.tile) * sg.tile - sg.kept)
+    return jnp.pad(x, cfg)
+
+
+def trim_kept(x: jnp.ndarray, sg: StripGrid) -> jnp.ndarray:
+    """Inverse of :func:`pad_kept` on a kernel output."""
+    idx = [slice(None)] * x.ndim
+    idx[sg.kept_axis] = slice(sg.kept)
+    return x[tuple(idx)]

@@ -13,24 +13,36 @@ layer via ``TrainerConfig.backend`` / ``make_optimizer(backend=...)``:
 ``backend="fused"``
     Per-leaf routing through the Pallas kernels (``repro.optim.fused``):
 
+    Every leaf's route is one precomputed ``repro.kernels.leaf_plan`` lookup
+    (canonicalization plan -> VMEM fits-gate -> kernel pick):
+
     * dense leaves (Adam, or SlimAdam K = ()) are canonicalized to 2-D and
       dispatched to the fused dense kernel; leaves smaller than
       ``bucket_min_size`` (default 16k elements) are *bucketed* — flattened,
       concatenated, updated in one kernel call, and scattered back — to
       amortize per-call launch and tile-padding overhead;
     * compressed leaves (SlimAdam K != ()) are planned by
-      ``repro.kernels.canon2d`` into whichever 2-D *orientation* a pure
-      reshape reaches, and dispatched to the matching slim kernel variant:
-      reduced dims trailing -> minor orientation (lane reduction,
-      ``slim_precond``; fan_in of a standard fan_in-minor weight), reduced
-      dims leading -> major orientation (sublane reduction,
-      ``slim_precond_major``; fan_out, conv fan_in). Size-1 axes never force
-      a transpose. Only a genuinely *interleaved* K — kept dims on both
-      sides of the reduced subset, e.g. a scan-stacked (layers, embed,
-      heads, head_dim) tensor reducing embed — still materializes a
-      boundary transpose (a pallas_call is an optimization barrier, so XLA
-      cannot fuse the re-layout into the kernel; the opt_speed roofline
-      charges those leaves the extra passes);
+      ``repro.kernels.canon_nd`` onto the batched canonical form
+      ``(B, R, C)`` — whichever layout a *pure reshape* reaches — and
+      dispatched to the matching slim kernel: reduced dims trailing ->
+      minor orientation (lane reduction, ``slim_precond``; fan_in of a
+      standard fan_in-minor weight); reduced dims leading -> major
+      orientation (sublane reduction, ``slim_precond_major``; fan_out,
+      conv fan_in); reduced dims *between* kept axes -> batched major
+      (``slim_precond_batched``: the kept prefix splits off as a batch
+      axis walked by the kernel grid, so a scan-stacked (layers, embed,
+      heads, head_dim) tensor reducing embed runs as ``layers``
+      independent transpose-free 2-D problems — exactly the paper's / Adam-
+      mini's treatment of stacked layers as independent slices). Size-1
+      axes never force a transpose. Only a genuinely *interleaved* K —
+      the reduced dims not forming one contiguous block with kept dims
+      only outside it (a kept dim inside the reduced span, or reduced
+      blocks on both ends of a kept dim) — still materializes a boundary
+      transpose (a pallas_call is an optimization barrier, so
+      XLA cannot fuse the re-layout into the kernel; the opt_speed
+      roofline charges those leaves the extra passes, and `make
+      bench-roofline` fails if any GPT-small leaf regresses into that
+      class);
     * leaves the kernels can't serve fall back to the jnp path per leaf:
       scalar (0-d) leaves, non-float dtypes, empty tensors, leaves whose
       canonical reduction line outruns VMEM in either orientation, and the
@@ -54,14 +66,16 @@ kept rows, one fused step streams:
     SlimAdam (K)   5n * 4 B + O(r)   (V is (r, 1); E_K[g^2] never hits HBM)
 
 i.e. compressed leaves stream 5/7 ≈ 0.71 of dense-Adam bytes — the paper's
-memory saving is also a step-time saving. With both kernel orientations,
-fan_in- *and* fan_out-compressed leaves hit that floor transpose-free; only
-interleaved-K leaves pay re-layout traffic. ``benchmarks/opt_speed.py``
-reports measured interpret-mode times next to the roofline projection
+memory saving is also a step-time saving. With the batched (B, R, C)
+canonical form, fan_in-, fan_out-, *and* scan-stacked-middle-K leaves all
+hit that floor transpose-free; only genuinely interleaved-K leaves (none in
+GPT-small) pay re-layout traffic. ``benchmarks/opt_speed.py`` reports
+measured interpret-mode times next to the roofline projection
 (bytes / 819 GB/s, TPU v5e): ~25.6 us vs ~35.8 us per 1024x1024 fp32 tensor,
-and a tree-level column for the whole GPT-small parameter tree (where
-re-layout traffic for the remaining transposed-K leaves is charged
-explicitly). The GradientTransformation form used here (update emitted,
+and a tree-level column for the whole GPT-small parameter tree, whose
+compressed-tree bytes now sit at ~0.72x of dense Adam (the 5/7 floor plus
+O(kept) moments — down from 0.88x when the stacked wq/wk leaves still
+transposed). The GradientTransformation form used here (update emitted,
 params untouched) streams 6n (dense) / 4n + O(kept) (slim) instead.
 """
 from .base import (

@@ -6,28 +6,30 @@ in HBM; the fused kernels stream each tensor exactly once. Per optimizer step
 and leaf the bandwidth model is
 
     dense Adam       7 passes   (p, g, m, v read + p', m', v' write)
-    SlimAdam (K)     5 passes + O(rows)   (V reduced over K never leaves VMEM)
+    SlimAdam (K)     5 passes + O(kept)   (V reduced over K never leaves VMEM)
 
 and in GradientTransformation form (this module: update emitted, p untouched)
 
     dense precond    6 passes   (g, m, v read + u, m', v' write)
-    slim precond     4 passes + O(rows)
+    slim precond     4 passes + O(kept)
 
 This module implements the per-leaf routing used by
 ``repro.optim.adam.scale_by_adam`` and ``repro.core.slim_adam.scale_by_slim_adam``
-when constructed with ``backend="fused"`` (or ``"auto"`` on TPU):
+when constructed with ``backend="fused"`` (or ``"auto"`` on TPU). Every
+dispatch decision is one precomputed :func:`repro.kernels.leaf_plan` lookup —
+canonicalization plan, VMEM fits-gate, and route in a single place:
 
-  * canonicalization — any leaf shape goes to 2-D: dense leaves via
-    reshape(-1, minor); compressed leaves via :func:`repro.kernels.canon2d`,
-    which plans whichever 2-D orientation (reduction minor = lanes, or
-    reduction major = sublanes) is reachable by pure reshape, transposing
-    only when the (arbitrary, possibly multi-dim) reduction subset is
-    genuinely interleaved with the kept dims;
-  * dispatch — dense leaves -> ``adam_precond``, compressed leaves ->
-    ``slim_precond`` / ``slim_precond_major`` per the plan's orientation,
-    with a per-leaf jnp fallback for anything the kernels can't serve
-    (scalar leaves, non-float dtypes, empty tensors, the moment-less
-    ``use_first_moment=False`` variant);
+  * canonicalization — compressed leaves go to the batched (B, R, C)
+    canonical form via :func:`repro.kernels.canon_nd`: trailing K -> minor,
+    leading K -> major, kept-prefix/K/kept-suffix (scan-stacked leaves) ->
+    batched major, each reachable by pure reshape; only a genuinely
+    interleaved K transposes. Dense leaves reshape to (rows, minor);
+  * dispatch — dense leaves -> ``adam_precond``; compressed leaves ->
+    ``slim_precond`` / ``slim_precond_major`` / ``slim_precond_batched``
+    per the plan, with a per-leaf jnp fallback for anything the kernels
+    can't serve (scalar leaves, non-float dtypes, empty tensors, reduction
+    lines that outrun VMEM, the moment-less ``use_first_moment=False``
+    variant);
   * bucketing — small dense-treated leaves (elementwise treatment, so
     flattening is exact) are concatenated into one flat super-tensor per
     bucket, updated in a single kernel call to amortize launch + padding
@@ -46,15 +48,17 @@ import jax.numpy as jnp
 
 from ..kernels.fused_adam import LANES, bias_corrections
 from ..kernels.ops import (
+    CanonND,
     adam_precond,
-    canon2d,
     canon_apply,
     canon_restore,
     default_interpret,
+    leaf_plan,
     slim_precond,
+    slim_precond_batched,
     slim_precond_major,
 )
-from ..kernels.tiling import col_fits, row_fits
+from ..kernels.slim_update import PRECOND_BUFS
 
 Dims = Tuple[int, ...]
 
@@ -62,11 +66,6 @@ Dims = Tuple[int, ...]
 # instead of per leaf). 16k elements ~ 64 KiB fp32: far below the per-call
 # tile, so launch/pad overhead dominates any per-leaf call at this size.
 DEFAULT_BUCKET_MIN = 1 << 14
-
-
-def _kernel_eligible(g: jnp.ndarray) -> bool:
-    """Leaves the 2-D kernels can serve; the rest take the jnp fallback."""
-    return g.ndim >= 1 and g.size > 0 and jnp.issubdtype(g.dtype, jnp.floating)
 
 
 # ---------------------------------------------------------------------------
@@ -132,21 +131,20 @@ def _dense_kernel_leaf(g, m, v, *, b1, b2, eps, count, interpret):
     return un2d(u2), un2d(m2), un2d(v2)
 
 
-def _slim_kernel_leaf(g, m, v_red, dims: Dims, *, b1, b2, eps, count, interpret):
-    cn = canon2d(g.shape, dims)
-    fn = slim_precond if cn.axis == 1 else slim_precond_major
-    u2, m2o, v2o = fn(canon_apply(g, cn), canon_apply(m, cn),
-                      canon_apply(v_red, cn, reduced_cols=True),
-                      b1=b1, b2=b2, eps=eps, count=count, interpret=interpret)
+def _slim_kernel_leaf(g, m, v_red, cn: CanonND, *, b1, b2, eps, count, interpret):
+    """Run one compressed leaf through the kernel its plan names: minor /
+    major for 2-D-canonical plans, the batched kernel for batch > 1."""
+    g2 = canon_apply(g, cn)
+    m2 = canon_apply(m, cn)
+    v2 = canon_apply(v_red, cn, reduced_cols=True)
+    kw = dict(b1=b1, b2=b2, eps=eps, count=count, interpret=interpret)
+    if cn.batch > 1:
+        u2, m2o, v2o = slim_precond_batched(g2, m2, v2, axis=cn.axis, **kw)
+    else:
+        fn = slim_precond if cn.axis == 1 else slim_precond_major
+        u2, m2o, v2o = fn(g2, m2, v2, **kw)
     return (canon_restore(u2, cn, g.shape), canon_restore(m2o, cn, g.shape),
             canon_restore(v2o, cn, v_red.shape))
-
-
-def _strip_fits(cn) -> bool:
-    """Whether the orientation's strip kernel can hold one full reduction
-    line (plus working copies) in VMEM — 5 full-size fp32 buffers per
-    instance for the precond forms."""
-    return row_fits(cn.cols, 5) if cn.axis == 1 else col_fits(cn.rows, 5)
 
 
 # ---------------------------------------------------------------------------
@@ -213,7 +211,7 @@ def adam_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Sequence[jnp.nd
     out_v: List[Any] = [None] * n
     bucket: List[int] = []
     for i, (g, m, v) in enumerate(zip(g_leaves, mu_leaves, nu_leaves)):
-        if not _kernel_eligible(g):
+        if leaf_plan(g.shape, g.dtype, ()).route == "jnp":
             out_u[i], out_m[i], out_v[i] = jnp_adam_leaf(g, m, v, **kw)
         elif bucket_min_size and g.size < bucket_min_size:
             bucket.append(i)
@@ -232,12 +230,13 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
                      bucket_min_size: int = DEFAULT_BUCKET_MIN):
     """SlimAdam over a leaf list with per-leaf reduction-dim tuples.
 
-    K = () leaves take the dense route (and join the dense bucket when
-    small); K != () leaves dispatch to the slim kernel via canonicalization.
-    ``use_first_moment=False`` runs entirely on the jnp path — the kernels
-    read/write a first moment, so serving the moment-less variant would
-    stream a discarded full-size m and forfeit the bandwidth win.
-    Returns (updates, new_mu_or_None, new_nu)."""
+    Each leaf's route comes from one :func:`leaf_plan` lookup: K = () leaves
+    take the dense route (and join the dense bucket when small); K != ()
+    leaves dispatch to the slim kernel named by their canonical plan; leaves
+    no kernel can serve fall back to jnp. ``use_first_moment=False`` runs
+    entirely on the jnp path — the kernels read/write a first moment, so
+    serving the moment-less variant would stream a discarded full-size m and
+    forfeit the bandwidth win. Returns (updates, new_mu_or_None, new_nu)."""
     interpret = default_interpret() if interpret is None else interpret
     kw = dict(b1=b1, b2=b2, eps=eps, count=count)
     n = len(g_leaves)
@@ -251,24 +250,19 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
     bucket: List[int] = []
     for i, (g, v, dims) in enumerate(zip(g_leaves, nu_leaves, dims_leaves)):
         dims = tuple(dims)
-        if not _kernel_eligible(g):
+        plan = leaf_plan(g.shape, g.dtype, dims, n_bufs=PRECOND_BUFS)
+        if plan.route == "jnp":
             out_u[i], out_m[i], out_v[i] = jnp_slim_leaf(
                 g, mu_leaves[i], v, dims, use_first_moment=True, **kw)
-        elif not dims:
+        elif plan.route == "dense":
             if bucket_min_size and g.size < bucket_min_size:
                 bucket.append(i)
             else:
                 out_u[i], out_m[i], out_v[i] = _dense_kernel_leaf(
                     g, mu_leaves[i], v, interpret=interpret, **kw)
-        elif not _strip_fits(canon2d(g.shape, dims)):
-            # A single canonical reduction line outruns VMEM (full-reduction
-            # K on a big tensor) — neither strip kernel can serve it on a
-            # real TPU.
-            out_u[i], out_m[i], out_v[i] = jnp_slim_leaf(
-                g, mu_leaves[i], v, dims, use_first_moment=True, **kw)
         else:
             out_u[i], out_m[i], out_v[i] = _slim_kernel_leaf(
-                g, mu_leaves[i], v, dims, interpret=interpret, **kw)
+                g, mu_leaves[i], v, plan.cn, interpret=interpret, **kw)
     _flush_bucket(bucket, g_leaves, mu_leaves, nu_leaves, out_u, out_m, out_v,
                   interpret=interpret, **kw)
     return out_u, out_m, out_v

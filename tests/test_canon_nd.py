@@ -1,0 +1,254 @@
+"""Batched 3-D canonicalization: planner properties, exact round-trips, and
+batched-kernel parity vs the jnp oracle on scan-stacked specs.
+
+The planner contract under test:
+  * on batch-free shapes (a 2-D orientation is reshape-reachable, or the
+    plan must transpose) ``canon_nd`` degrades to the 2-D plans the old
+    ``canon2d`` emitted — batch == 1, same orientation, same rows/cols;
+  * a kept-prefix / reduced-block / kept-suffix pattern (every scan-stacked
+    leaf) plans batched major, reachable by pure reshape;
+  * ``canon_apply``/``canon_restore`` round-trip *exactly* (bit-equal, incl.
+    size-1 axes and bf16) for batched plans.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.core.slim_adam import scale_by_slim_adam
+from repro.kernels import canon_nd, canon_apply, canon_restore, leaf_plan
+from repro.kernels.slim_update import (
+    PRECOND_BUFS,
+    slim_precond_batched,
+    slim_update_batched,
+)
+from repro.optim.fused import jnp_slim_leaf
+
+TOL = dict(rtol=1e-5, atol=1e-6)
+
+# Pool of (shape, dims) specs with every reachability class represented.
+BATCH_FREE_SPECS = [
+    ((12, 8), (1,)),            # trailing K -> minor
+    ((12, 8), (0,)),            # leading K -> major
+    ((3, 3, 8, 16), (0, 1, 2)),  # leading multi-dim K -> major
+    ((2, 3, 4), (1, 2)),        # trailing multi-dim K -> minor
+    ((37,), (0,)),              # fully reduced 1-D -> minor
+    ((12, 8), (0, 1)),          # kept empty -> minor
+    ((1, 6, 10), (0, 2)),       # size-1 reduced axis ignored
+    ((6, 1, 10), (0, 1)),       # size-1 kept axis ignored
+    ((4, 6, 10), (0, 2)),       # interleaved -> transpose fallback
+    ((2, 3, 4, 5), (1, 3)),     # interleaved -> transpose fallback
+]
+
+BATCHED_SPECS = [
+    ((2, 3, 4), (1,)),          # minimal kept/K/kept sandwich
+    ((3, 96, 3, 32), (1,)),     # gpt_small reduced: stacked wq/wk, K=embed
+    ((3, 96, 384), (1,)),       # stacked mlp w_up, K=embed (fan_in of up-proj)
+    ((2, 1, 5, 7), (2,)),       # size-1 kept axis inside the batch prefix
+    ((2, 5, 1, 7), (1, 2)),     # size-1 reduced axis rides in the middle block
+    ((4, 3, 2, 6), (1, 2)),     # multi-dim contiguous middle K
+]
+
+
+def _old_canon2d_expectation(shape, dims):
+    """The pre-batched 2-D planner's decision procedure, restated: the
+    degradation oracle for batch-free shapes."""
+    dset = {d % len(shape) for d in dims}
+    nt_red = [i for i in dset if shape[i] > 1]
+    nt_kept = [i for i in range(len(shape)) if i not in dset and shape[i] > 1]
+    minor_ok = not nt_red or not nt_kept or max(nt_kept) < min(nt_red)
+    major_ok = not nt_red or not nt_kept or max(nt_red) < min(nt_kept)
+    red = kept = 1
+    for i, s in enumerate(shape):
+        if i in dset:
+            red *= s
+        else:
+            kept *= s
+    if minor_ok:
+        return ("minor", kept, red, False)
+    if major_ok:
+        return ("major", red, kept, False)
+    return ("minor", kept, red, True)
+
+
+class TestPlannerDegradation:
+    @settings(max_examples=len(BATCH_FREE_SPECS), deadline=None)
+    @given(i=st.integers(min_value=0, max_value=len(BATCH_FREE_SPECS) - 1))
+    def test_batch_free_plans_match_canon2d(self, i):
+        shape, dims = BATCH_FREE_SPECS[i]
+        cn = canon_nd(shape, dims)
+        orientation, rows, cols, transposes = _old_canon2d_expectation(shape, dims)
+        assert cn.batch == 1
+        assert (cn.orientation, cn.rows, cn.cols, cn.is_transpose) == (
+            orientation, rows, cols, transposes)
+        assert cn.view == (rows, cols)
+
+    @pytest.mark.parametrize("shape,dims", BATCHED_SPECS)
+    def test_batched_plans_are_pure_reshape_major(self, shape, dims):
+        cn = canon_nd(shape, dims)
+        assert cn.batch > 1 and cn.axis == 0 and cn.reshape_only
+        assert cn.batch * cn.rows * cn.cols == int(np.prod(shape))
+        red = int(np.prod([shape[d] for d in dims]))
+        assert cn.red_size == red == cn.rows
+        assert cn.kept_size * red == int(np.prod(shape))
+
+    def test_acceptance_scan_stacked_embeds(self):
+        """Acceptance criterion: (layers, embed, heads, hd) reducing embed —
+        the full gpt_small wq/wk shape — plans transpose-free."""
+        cn = canon_nd((12, 768, 12, 64), (1,))
+        assert not cn.is_transpose
+        assert (cn.batch, cn.rows, cn.cols) == (12, 768, 768)
+
+    def test_four_block_interleaving_still_transposes(self):
+        # K R K R: no contiguous reduced block -> no batch split helps
+        cn = canon_nd((2, 3, 4, 5), (1, 3))
+        assert cn.is_transpose and cn.batch == 1
+
+
+class TestBatchedRoundTrip:
+    @pytest.mark.parametrize("shape,dims", BATCHED_SPECS)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_roundtrip_bit_exact(self, shape, dims, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+        cn = canon_nd(shape, dims)
+        x2 = canon_apply(x, cn)
+        assert x2.shape == cn.view == (cn.batch, cn.rows, cn.cols)
+        back = canon_restore(x2, cn, shape)
+        assert back.dtype == dtype
+        np.testing.assert_array_equal(np.asarray(back, np.float32),
+                                      np.asarray(x, np.float32))
+
+    @pytest.mark.parametrize("shape,dims", BATCHED_SPECS)
+    def test_reduced_moment_roundtrip(self, shape, dims):
+        v_shape = tuple(1 if i in set(dims) else s for i, s in enumerate(shape))
+        v = jax.random.normal(jax.random.PRNGKey(1), v_shape)
+        cn = canon_nd(shape, dims)
+        v2 = canon_apply(v, cn, reduced_cols=True)
+        assert v2.shape == (cn.batch, 1, cn.cols)
+        np.testing.assert_array_equal(canon_restore(v2, cn, v_shape), v)
+
+    @pytest.mark.parametrize("shape,dims", BATCHED_SPECS)
+    def test_canonical_mean_matches_jnp(self, shape, dims):
+        x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
+        cn = canon_nd(shape, dims)
+        np.testing.assert_allclose(
+            jnp.mean(canon_apply(x, cn), axis=cn.red_axis).ravel(),
+            jnp.mean(x, axis=dims).ravel(), rtol=1e-6)
+
+
+class TestBatchedKernelParity:
+    """slim_*_batched vs the jnp_slim_leaf oracle on scan-stacked specs."""
+
+    @pytest.mark.parametrize("shape,dims", BATCHED_SPECS)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_precond_batched_vs_jnp_leaf(self, shape, dims, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(shape[0]), 3)
+        v_shape = tuple(1 if i in set(dims) else s for i, s in enumerate(shape))
+        g = (jax.random.normal(ks[0], shape) * 0.1).astype(dtype)
+        m = jax.random.normal(ks[1], shape) * 0.01
+        v = jnp.abs(jax.random.normal(ks[2], v_shape)) * 1e-3
+        kw = dict(b1=0.9, b2=0.95, eps=1e-8, count=3)
+        u_ref, m_ref, v_ref = jnp_slim_leaf(g, m, v, dims, use_first_moment=True, **kw)
+        cn = canon_nd(shape, dims)
+        u2, m2, v2 = slim_precond_batched(
+            canon_apply(g, cn), canon_apply(m, cn),
+            canon_apply(v, cn, reduced_cols=True), axis=cn.axis, **kw)
+        tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else TOL
+        np.testing.assert_allclose(canon_restore(u2, cn, shape), u_ref, **tol)
+        np.testing.assert_allclose(canon_restore(m2, cn, shape),
+                                   np.asarray(m_ref), **tol)
+        np.testing.assert_allclose(canon_restore(v2, cn, v_shape), v_ref, **tol)
+
+    def test_update_batched_matches_unrolled_2d(self):
+        """The batched update kernel == the per-batch-slice 2-D major kernel."""
+        from repro.kernels.slim_update import slim_update_major
+
+        b, r, c = 3, 37, 130  # non-tile-multiple kept extent (padding path)
+        ks = jax.random.split(jax.random.PRNGKey(9), 4)
+        p = jax.random.normal(ks[0], (b, r, c))
+        g = jax.random.normal(ks[1], (b, r, c)) * 0.1
+        m = jax.random.normal(ks[2], (b, r, c)) * 0.01
+        v = jnp.abs(jax.random.normal(ks[3], (b, 1, c))) * 1e-3
+        kw = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, count=5)
+        po, mo, vo = slim_update_batched(p, g, m, v, axis=0, **kw)
+        for i in range(b):
+            pi, mi, vi = slim_update_major(p[i], g[i], m[i], v[i], **kw)
+            np.testing.assert_allclose(po[i], pi, **TOL)
+            np.testing.assert_allclose(mo[i], mi, **TOL)
+            np.testing.assert_allclose(vo[i], vi, **TOL)
+
+    @pytest.mark.slow
+    def test_gpt_small_stacked_specs_backend_parity(self):
+        """Fused backend == jnp over a tree of the real scan-stacked specs
+        (wq/wk reducing embed, stacked mlp fan_in), multi-step."""
+        key = jax.random.PRNGKey(0)
+        params = {
+            "wq": jax.random.normal(key, (3, 96, 3, 32)),
+            "wk": jax.random.normal(key, (3, 96, 3, 32)),
+            "w_up": jax.random.normal(key, (3, 96, 384)),
+        }
+        dims = {"wq": (1,), "wk": (1,), "w_up": (1,)}
+        for name, d in dims.items():
+            plan = leaf_plan(params[name].shape, jnp.float32, d, n_bufs=PRECOND_BUFS)
+            assert plan.route == "slim" and plan.cn.batch > 1, name
+        tx_j = scale_by_slim_adam(dims)
+        tx_f = scale_by_slim_adam(dims, backend="fused")
+        sj, sf = tx_j.init(params), tx_f.init(params)
+        for i in range(3):
+            k = jax.random.PRNGKey(i)
+            g = jax.tree.map(lambda x: jax.random.normal(k, x.shape) * 0.1, params)
+            uj, sj = jax.jit(tx_j.update)(g, sj)
+            uf, sf = jax.jit(tx_f.update)(g, sf)
+        for a, b in zip(jax.tree.leaves(uj), jax.tree.leaves(uf)):
+            np.testing.assert_allclose(a, b, **TOL)
+        for a, b in zip(jax.tree.leaves(sj.nu), jax.tree.leaves(sf.nu)):
+            np.testing.assert_allclose(a, b, **TOL)
+
+
+class TestBatchedSNR:
+    @pytest.mark.parametrize("shape,dims", [
+        ((3, 96, 3, 32), (1,)),   # stacked wq/wk candidate K
+        ((2, 3, 4), (1,)),
+        ((4, 3, 2, 6), (1, 2)),
+    ])
+    def test_snr_backend_parity_batched(self, shape, dims):
+        from repro.core.snr import snr_along_dims
+        assert canon_nd(shape, dims).batch > 1
+        v = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), shape)) + 0.1
+        a = float(snr_along_dims(v, dims))
+        b = float(snr_along_dims(v, dims, backend="fused"))
+        np.testing.assert_allclose(a, b, rtol=1e-4)
+
+    def test_high_snr_near_constant_batched(self):
+        """Centered stats must survive the high-SNR regime through the
+        batched kernel too."""
+        from repro.core.snr import snr_along_dims
+        noise = jax.random.normal(jax.random.PRNGKey(8), (4, 64, 16)) * 1e-5
+        v = 1.0 + noise
+        a = float(snr_along_dims(v, (1,)))
+        b = float(snr_along_dims(v, (1,), backend="fused"))
+        assert a > 1e8
+        np.testing.assert_allclose(a, b, rtol=1e-2)
+
+
+class TestLeafPlanRouting:
+    def test_routes(self):
+        assert leaf_plan((), jnp.float32, ()).route == "jnp"          # scalar
+        assert leaf_plan((4, 4), jnp.int32, (1,)).route == "jnp"      # non-float
+        assert leaf_plan((4, 0), jnp.float32, (1,)).route == "jnp"    # empty
+        assert leaf_plan((8, 8), jnp.float32, ()).route == "dense"
+        assert leaf_plan((8, 8), jnp.float32, (1,)).route == "slim"
+        plan = leaf_plan((3, 96, 3, 32), jnp.float32, (1,))
+        assert plan.route == "slim" and plan.cn.batch == 3
+
+    def test_vmem_gate(self):
+        # a 16M-wide reduction line can't be strip-tiled: 5 fp32 buffers of
+        # one line alone exceed the 8 MiB budget
+        assert leaf_plan((2, 1 << 24), jnp.float32, (1,)).route == "jnp"
+
+    def test_transpose_opt_out(self):
+        shape, dims = (4, 6, 10), (0, 2)  # genuinely interleaved
+        assert leaf_plan(shape, jnp.float32, dims).route == "slim"
+        assert leaf_plan(shape, jnp.float32, dims,
+                         allow_transpose=False).route == "jnp"

@@ -87,6 +87,7 @@ class TestSlimParity:
         ((3, 3, 8, 16), (0, 1, 2)),  # conv fan_in (leading multi-dim K, major)
         ((4, 6, 10), (0, 2)),  # interleaved multi-dim K (transpose fallback)
         ((12, 8), (0, 1)),     # AdaLayer: everything reduced
+        ((3, 24, 2, 8), (1,)),  # scan-stacked middle K (batched major kernel)
     ]
 
     @pytest.mark.parametrize("shape,dims", SPECS)
@@ -179,11 +180,12 @@ class TestCanonicalization:
         x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
         cn = canon2d(shape, dims)
         x2 = canon_apply(x, cn)
-        assert x2.shape == (cn.rows, cn.cols)
+        assert x2.shape == cn.view
         np.testing.assert_array_equal(canon_restore(x2, cn, shape), x)
-        # the 2-D mean over the planned reduction axis equals the jnp mean
+        # the canonical mean over the planned reduction axis equals the jnp mean
         np.testing.assert_allclose(
-            jnp.mean(x2, axis=cn.axis), jnp.mean(x, axis=dims).ravel(), rtol=1e-6)
+            jnp.mean(x2, axis=cn.red_axis).ravel(), jnp.mean(x, axis=dims).ravel(),
+            rtol=1e-6)
 
     def test_out_of_range_dims_rejected(self):
         """Parity with the jnp path's error behavior — no silent d % ndim wrap."""

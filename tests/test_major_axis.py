@@ -48,14 +48,25 @@ class TestCanon2DOrientation:
         assert cn.orientation == orientation
 
     @pytest.mark.parametrize("shape,dims", [
-        ((4, 6, 10), (0, 2)),   # interleaved multi-dim K
+        ((4, 6, 10), (0, 2)),   # interleaved multi-dim K (kept dim inside the red span)
         ((2, 3, 4, 5), (1, 3)),
-        ((2, 3, 4), (1,)),      # middle dim reduced
     ])
     def test_interleaved_k_still_transposes(self, shape, dims):
         cn = canon2d(shape, dims)
         assert cn.is_transpose
         assert cn.orientation == "minor"   # canonical fallback
+
+    @pytest.mark.parametrize("shape,dims,batch", [
+        ((2, 3, 4), (1,), 2),            # middle dim reduced -> batched major
+        ((3, 96, 3, 32), (1,), 3),       # scan-stacked wq/wk reducing embed
+        ((2, 1, 5, 7), (2,), 2),         # size-1 kept axis inside the prefix
+    ])
+    def test_middle_k_plans_batched_major(self, shape, dims, batch):
+        """A kept-prefix / reduced-block / kept-suffix pattern splits the
+        prefix off as a batch axis instead of transposing."""
+        cn = canon2d(shape, dims)
+        assert not cn.is_transpose
+        assert cn.orientation == "major" and cn.batch == batch
 
     @pytest.mark.parametrize("shape,dims", [
         ((12, 8), (0,)), ((3, 3, 8, 16), (0, 1, 2)), ((6, 1, 10), (0, 1)),
@@ -65,10 +76,11 @@ class TestCanon2DOrientation:
         x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
         cn = canon2d(shape, dims)
         x2 = canon_apply(x, cn)
-        assert x2.shape == (cn.rows, cn.cols)
+        assert x2.shape == cn.view
         np.testing.assert_array_equal(canon_restore(x2, cn, shape), x)
         np.testing.assert_allclose(
-            jnp.mean(x2, axis=cn.axis), jnp.mean(x, axis=dims).ravel(), rtol=1e-6)
+            jnp.mean(x2, axis=cn.red_axis).ravel(), jnp.mean(x, axis=dims).ravel(),
+            rtol=1e-6)
         assert cn.red_size * cn.kept_size == int(np.prod(shape))
 
 
@@ -109,12 +121,12 @@ class TestMajorKernelParity:
 
     def test_col_strip_tiling_vmem_bound(self):
         """A tall reduced dim must shrink the column strip, not overflow."""
-        from repro.kernels.tiling import VMEM_BUDGET, fit_col_block
+        from repro.kernels.tiling import VMEM_BUDGET, fit_strip_block
         tall = 300_000  # a (300k, tc) strip: tc must shrink to fit
-        tc = fit_col_block(tall, 256, 512, 5)
+        tc = fit_strip_block(tall, 256, 512, 5)
         assert 1 <= tc < 256
         assert tall * 4 * 5 * tc <= VMEM_BUDGET   # strip working set fits
-        assert fit_col_block(16, 256, 512, 5) == 256  # small stays at block
+        assert fit_strip_block(16, 256, 512, 5) == 256  # small stays at block
 
 
 class TestMajorBackendParity:
@@ -209,10 +221,10 @@ class TestSNRMajorParity:
 
 class TestGPTSmallTreeMajorRoofline:
     def test_full_tree_fused_matches_jnp_and_planner_optimal(self):
-        """Acceptance: over the GPT-small tree the planner transposes *only*
-        genuinely interleaved-K leaves (a trailing or leading reduction —
-        fan_in of a standard weight or fan_out/conv-style — always plans
-        reshape-only), and fused == jnp to 1e-5."""
+        """Acceptance: over the GPT-small tree *no* compressed leaf
+        transposes — trailing K plans minor, leading K plans major, and the
+        scan-stacked kept/K/kept leaves (wq/wk reducing embed) plan batched
+        major — and fused == jnp to 1e-5."""
         from repro.configs import gpt_small
         from repro.core import rules_as_tree, table3_rules
 
@@ -221,17 +233,14 @@ class TestGPTSmallTreeMajorRoofline:
         dims = rules_as_tree(table3_rules(meta), params, meta)
         p_leaves, treedef = jax.tree_util.tree_flatten(params)
         d_leaves = [tuple(d) for d in treedef.flatten_up_to(dims)]
+        saw_batched = False
         for p, d in zip(p_leaves, d_leaves):
             if not d:
                 continue
             cn = canon2d(p.shape, d)
-            nt = [i for i in range(p.ndim) if p.shape[i] > 1]
-            nt_red = [i for i in nt if i in d]
-            nt_kept = [i for i in nt if i not in d]
-            reachable = (not nt_red or not nt_kept
-                         or max(nt_kept) < min(nt_red)      # trailing K
-                         or max(nt_red) < min(nt_kept))     # leading K
-            assert cn.is_transpose == (not reachable), (p.shape, d)
+            assert not cn.is_transpose, (p.shape, d)
+            saw_batched |= cn.batch > 1
+        assert saw_batched  # the stacked wq/wk leaves exercise the batched path
 
         tx_j = scale_by_slim_adam(dims)
         tx_f = scale_by_slim_adam(dims, backend="fused")
