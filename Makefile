@@ -1,28 +1,33 @@
-PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+# Every target delegates to scripts/ci.sh — the single source of truth the
+# GitHub workflow calls too, so `make ci` and hosted CI cannot drift.
 
-# Parallelize across cores when pytest-xdist is installed (requirements-dev);
-# empty (serial) otherwise so the targets degrade gracefully.
-XDIST := $(shell python -c "import xdist" 2>/dev/null && printf -- "-n auto")
+.PHONY: lint test test-fast bench-quick bench bench-roofline ci
 
-.PHONY: test test-fast bench-quick bench-roofline ci
+lint:
+	bash scripts/ci.sh lint
 
 test:
-	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q $(XDIST)
+	bash scripts/ci.sh test-full
 
 # Quick iteration loop: skip the slow-marked cases (multi-device subprocess
 # tests, long trainer loops). CI (`make ci`) always runs the full suite.
 test-fast:
-	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q $(XDIST) -m "not slow"
+	bash scripts/ci.sh test-fast
 
 bench-quick:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --preset quick --only opt_speed
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --preset quick --only opt_speed_tree
+	bash scripts/ci.sh bench-quick
 
-# Planner gate: the opt_speed_tree byte model over the full GPT-small leaf
-# set must stay transpose-free (fails if any leaf regresses to a
-# materialized-transpose plan). Analytic — safe and fast in interpret mode.
+# Full quick-preset sweep (what the GitHub `bench` job runs + uploads).
+bench:
+	bash scripts/ci.sh bench
+
+# Analytic planner gates: (1) the opt_speed_tree byte model over the full
+# GPT-small leaf set must stay transpose-free; (2) under shard_map on the
+# production (data=16, model=16) mesh, every transpose-free leaf must stream
+# per-shard bytes <= single-device bytes / min(shard counts). Fast and safe
+# in interpret mode — nothing executes, only the planners run.
 bench-roofline:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.opt_speed --check-roofline
+	bash scripts/ci.sh bench-roofline
 
 ci:
 	bash scripts/ci.sh

@@ -9,13 +9,9 @@ GPT-small recipe and is what one would run on real hardware.
 from __future__ import annotations
 
 import csv
-import dataclasses
-import json
-import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.data import DataConfig, ZipfLM

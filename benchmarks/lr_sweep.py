@@ -3,7 +3,7 @@ SlimAdam and the low-memory baselines. SlimAdam must track Adam's curve;
 Lion/SM3/Adafactor shift or degrade."""
 import time
 
-from .common import emit, gpt_nano, nano_data, train_once, write_csv
+from .common import emit, gpt_nano, train_once, write_csv
 
 OPTS = ("adam", "slim", "adalayer", "adalayer_ln_tl", "adam_mini_v2",
         "lion", "sm3", "adafactor")

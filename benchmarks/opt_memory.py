@@ -6,10 +6,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core import rules_as_tree, table3_rules
-from repro.core.baselines import adalayer_rules, adam_mini_v2_rules
-from repro.core.slim_adam import slim_adam
-from repro.optim import adamw
 from repro.train.trainer import make_optimizer
 
 from .common import emit, write_csv

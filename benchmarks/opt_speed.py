@@ -121,13 +121,14 @@ def _tree_bytes(params, dims_leaves, *, dense_passes=7, slim_passes=5):
 
 
 def _gpt_small_full_leaves():
-    """Named shape-leaves + per-leaf dims for the real 124M GPT-small.
+    """Named shape-leaves + per-leaf dims/meta for the real 124M GPT-small.
 
     Shapes via eval_shape (no 124M-param materialization); meta from the
     reduced config, whose tree structure and axis names are identical. One
     derivation shared by the ``tree_main`` headline roofline and the
-    ``roofline_check`` CI gate, so the gate validates exactly the leaf set
-    the benchmark projects. Returns (full_cfg, params_full, named, dims)."""
+    ``roofline_check`` CI gates, so the gates validate exactly the leaf set
+    the benchmark projects. Returns (full_cfg, params_full, named, dims,
+    metas) with ``metas`` aligned leaf-for-leaf with ``named``."""
     from repro.configs import gpt_small
     from repro.core import rules_as_tree, table3_rules
     from repro.core.labels import flatten_with_names
@@ -139,7 +140,8 @@ def _gpt_small_full_leaves():
     named, _ = flatten_with_names(params_full)
     dfl = [tuple(d) for d in
            jax.tree_util.tree_flatten(params_full)[1].flatten_up_to(dims_full)]
-    return full, params_full, named, dfl
+    metas = [m for _, m in flatten_with_names(meta)[0]]
+    return full, params_full, named, dfl, metas
 
 
 def tree_main(preset: str = "quick"):
@@ -186,7 +188,7 @@ def tree_main(preset: str = "quick"):
     # Headline roofline for the full AdamW *apply* form (7 passes dense,
     # 5 + O(kept) slim — the paper's 5-vs-7 claim) on the real GPT-small
     # regardless of preset.
-    full, params_full, _, dfl = _gpt_small_full_leaves()
+    full, params_full, _, dfl, _ = _gpt_small_full_leaves()
     fdense_b, fcomp_b, _, ftf_b, ftf_dense = _tree_bytes(params_full, dfl)
     f_adam = 7 * sum(int(p.size) for p in jax.tree.leaves(params_full)) * 4
     f_slim = fdense_b + fcomp_b
@@ -215,7 +217,7 @@ def roofline_check() -> int:
     planner); no kernels run, so it is interpret-mode safe and fast."""
     from repro.kernels import canon_nd
 
-    full, params_full, named, dfl = _gpt_small_full_leaves()
+    full, params_full, named, dfl, _ = _gpt_small_full_leaves()
     regressed = []
     for (name, p), dims in zip(named, dfl):
         if not dims:
@@ -240,6 +242,131 @@ def roofline_check() -> int:
     return 0
 
 
+# ---------------------------------------------------------------------------
+# Sharded roofline: per-shard HBM bytes + ICI bytes on the production mesh
+# ---------------------------------------------------------------------------
+
+# Sharded per-leaf full-size pass counts (the full-apply 7/5 model of
+# `_tree_bytes`, regime-adjusted):
+#   local  — the unchanged slim kernel on the local shard: 5 passes + O(kept)
+#   psum   — still 5: the lax.psum splits the leaf into two passes, but the
+#            first-moment update rides in the partial-sums pass (read g, m;
+#            write m') and the finalize reads m' instead of g — see
+#            repro.optim.fused._psum_slim_leaf. The collective itself is
+#            ICI traffic, charged separately.
+#   jnp    — reference math per shard; XLA materializes the g^2 round-trip
+#            (+2 local passes), the analogue of the transpose surcharge
+_SHARDED_PASSES = {"local": 5, "psum": 5, "jnp": 7}
+
+
+def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16))) -> int:
+    """Per-shard byte model for the fused SlimAdam step under shard_map on
+    the production (data=16, model=16) mesh.
+
+    Analytic like :func:`roofline_check` — specs come from the production
+    rule table over a device-free :class:`repro.sharding.shardspec.SpecMesh`,
+    regimes from the same ``plan_sharded_leaf`` the dispatcher runs, HBM
+    bytes from local shard shapes, and ICI bytes from the psum lines
+    (ring all-reduce: ``2 * (A-1)/A`` of the O(kept_local) stats per hop
+    direction, ``ICI_BW_PER_LINK`` in ``repro.launch.mesh``).
+
+    With ``check=True`` this is the CI gate: every leaf whose single-device
+    plan is transpose-free must stream per-shard bytes <= single-device
+    bytes / min(per-dim shard counts) — i.e. sharding the tree must never
+    *inflate* a shard's traffic past an even split of the unsharded leaf."""
+    import math
+
+    from repro.kernels import canon_nd
+    from repro.kernels.slim_update import PRECOND_BUFS
+    from repro.launch.mesh import ICI_BW_PER_LINK
+    from repro.sharding.logical import ShardingContext
+    from repro.sharding.shardspec import SpecMesh, dim_shards, plan_sharded_leaf
+
+    mesh = SpecMesh(dict(mesh_shape))
+    ctx = ShardingContext(mesh)
+    full, params_full, named, dfl, metas = _gpt_small_full_leaves()
+
+    rows = []
+    failures = []
+    tot_hbm = tot_ici = tot_dense_local = 0
+    counts = {"local": 0, "psum": 0, "jnp": 0}
+    for (name, p), dims, m in zip(named, dfl, metas):
+        shape = tuple(p.shape)
+        n_single = math.prod(shape) * 4
+        spec = ctx.spec_for(m.axes, shape)
+        factors = dim_shards(shape, spec, mesh)
+        local_n = math.prod(s // f for s, f in zip(shape, factors)) * 4
+        if not dims:
+            single = 7 * n_single
+            hbm, ici, regime, tf = 7 * local_n, 0.0, "dense", True
+        else:
+            plan = plan_sharded_leaf(shape, jnp.float32, dims, spec, mesh,
+                                     n_bufs=PRECOND_BUFS)
+            counts[plan.regime] += 1
+            regime = plan.regime
+            dset = {d % len(shape) for d in dims}
+            kept_local = math.prod(
+                s // f for i, (s, f) in enumerate(zip(shape, factors)) if i not in dset) * 4
+            cn = canon_nd(shape, dims)
+            tf = not cn.is_transpose
+            single = 5 * n_single + 2 * (cn.kept_size * 4)
+            if not tf:
+                single += 2 * 5 * n_single
+            hbm = _SHARDED_PASSES[plan.regime] * local_n + 2 * kept_local
+            ici = 0.0
+            if plan.regime == "psum":
+                a = math.prod(mesh.shape[ax] for ax in plan.psum_axes)
+                ici = 2.0 * (a - 1) / a * kept_local
+        tot_hbm += hbm
+        tot_ici += ici
+        tot_dense_local += 7 * local_n
+        # min over the per-dim shard counts (unsharded dims count 1, so any
+        # partially-replicated leaf is bounded by its full single-device
+        # bytes — sharding must never inflate a shard's traffic).
+        min_shards = min(factors)
+        bound = single / min_shards
+        ok = (hbm + ici) <= bound
+        if tf and not ok:
+            failures.append((name, shape, dims, hbm + ici, bound))
+        rows.append({
+            "name": name, "shape": str(shape), "K": str(dims), "spec": str(spec),
+            "regime": regime, "shards": int(math.prod(factors)),
+            "hbm_bytes_per_shard": int(hbm), "ici_bytes_per_shard": int(ici),
+            "single_device_bytes": int(single),
+            "bound_bytes": int(bound), "within_bound": ok,
+        })
+    write_csv("opt_speed_sharded.csv", rows)
+    n_chips = math.prod(dict(mesh_shape).values())
+    ratio = tot_hbm / tot_dense_local
+    print(f"{full.name} on {dict(mesh_shape)} ({n_chips} chips): compressed "
+          f"regimes {counts}; per-shard HBM {tot_hbm/2**20:.2f} MiB "
+          f"({ratio:.3f}x of per-shard dense Adam), ICI {tot_ici/2**10:.1f} KiB "
+          f"(psum lines only)")
+    proj_us = (tot_hbm / HBM_BW + tot_ici / ICI_BW_PER_LINK) * 1e6
+    emit("opt_speed_sharded", proj_us,
+         f"per-shard fused slim step streams {ratio:.3f}x of per-shard dense-"
+         f"Adam bytes on the ({'x'.join(str(v) for v in dict(mesh_shape).values())}) mesh; "
+         f"psum ICI traffic {tot_ici/2**10:.1f} KiB/step -> projected v5e "
+         f"{proj_us:.1f}us/step/chip")
+    if check:
+        if failures:
+            print(f"SHARDED ROOFLINE REGRESSION: {len(failures)} transpose-free "
+                  f"leaf/leaves exceed single-device bytes / min(shard counts):")
+            for name, shape, dims, got, bound in failures:
+                print(f"  {name} {shape} K={dims}: {got:.0f} > {bound:.0f}")
+            return 1
+        print("sharded roofline OK: every transpose-free leaf streams <= "
+              "single-device bytes / min(shard counts) per shard")
+    return 0
+
+
+def sharded_main(preset: str = "quick"):
+    """benchmarks.run entry: table + CSV, no gating (preset-independent —
+    the model is analytic over the full GPT-small)."""
+    del preset
+    sharded_roofline(check=False)
+
+
 if __name__ == "__main__":
     import argparse
     import sys
@@ -247,9 +374,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", choices=("quick", "full"), default="quick")
     ap.add_argument("--check-roofline", action="store_true",
-                    help="planner gate only: fail if any gpt_small leaf transposes")
+                    help="planner gate only: fail if any gpt_small leaf transposes "
+                         "(with --sharded: per-shard byte bound on the production mesh)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="per-shard HBM + ICI byte model under shard_map on the "
+                         "production (data=16, model=16) mesh")
     args = ap.parse_args()
     if args.check_roofline:
-        sys.exit(roofline_check())
+        sys.exit(sharded_roofline(check=True) if args.sharded else roofline_check())
+    if args.sharded:
+        sys.exit(sharded_roofline(check=False))
     main(args.preset)
     tree_main(args.preset)

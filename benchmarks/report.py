@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import csv
 import json
-import math
 from pathlib import Path
 
 HERE = Path(__file__).resolve().parent
@@ -101,7 +100,8 @@ def section_dryrun(recs):
            "",
            "| arch | shape | mesh | status | accum | temp GiB | args GiB | fits 16GiB | compile |",
            "|---|---|---|---|---|---|---|---|---|"]
-    for (arch, shape, mesh), r in sorted(recs.items(), key=lambda kv: (kv[0][0], SHAPE_ORDER.index(kv[0][1]), kv[0][2])):
+    for (arch, shape, mesh), r in sorted(
+            recs.items(), key=lambda kv: (kv[0][0], SHAPE_ORDER.index(kv[0][1]), kv[0][2])):
         if r.get("status") == "skipped":
             out.append(f"| {arch} | {shape} | {mesh} | SKIP: {r.get('reason','')} | - | - | - | - | - |")
             continue
@@ -146,7 +146,8 @@ def section_roofline(rows):
            "work + sharding-replication waste). `roofline frac` = useful-FLOPs time /",
            "dominant term (train/prefill) or bandwidth-floor / memory term (decode).",
            "",
-           "| arch | shape | compute | memory | collective | dominant | useful | roofline frac | what moves the dominant term |",
+           "| arch | shape | compute | memory | collective | dominant | useful "
+           "| roofline frac | what moves the dominant term |",
            "|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         frac = f"{r['fraction']:.3f}" if r["fraction"] else "-"

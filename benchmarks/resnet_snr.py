@@ -4,7 +4,6 @@ classifier sits near SNR ~ 1."""
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import SNRTracker, derive_rules, measure_tree_snr, second_moment_savings
 from repro.models.resnet import ResNetConfig, forward, synthetic_cifar

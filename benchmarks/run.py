@@ -24,6 +24,7 @@ ALL = {
     "opt_memory": opt_memory.main,                # memory table (full-scale archs)
     "opt_speed": opt_speed.main,                  # kernel micro-bench
     "opt_speed_tree": opt_speed.tree_main,        # whole-tree fused step, jnp vs fused
+    "opt_speed_sharded": opt_speed.sharded_main,  # per-shard bytes on the production mesh
     "stability": stability.main,                  # Fig 11
     "resnet_snr": resnet_snr.main,                # Fig 5, §3.1.3
 }

@@ -2,7 +2,6 @@
 plus the exact table-3 savings for every assigned full-scale architecture."""
 import time
 
-import jax
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import derive_rules, second_moment_savings, table3_rules

@@ -11,9 +11,10 @@ def main(preset: str = "quick"):
     t0 = time.time()
     rows, spikes = [], {}
     for opt in ("adam", "slim", "adalayer", "adam_mini_v2"):
-        tr = train_once(cfg=gpt_nano(), optimizer=opt, lr=big_lr, steps=steps)                 if False else train_once(gpt_nano(), opt, big_lr, steps=steps)
+        tr = train_once(gpt_nano(), opt, big_lr, steps=steps)
         losses = [m["loss"] for m in tr.metrics_log]
-        spikes[opt] = max(losses[i + 1] - losses[i] for i in range(len(losses) - 1))                 if len(losses) > 1 else 0.0
+        spikes[opt] = (max(losses[i + 1] - losses[i] for i in range(len(losses) - 1))
+                       if len(losses) > 1 else 0.0)
         for m in tr.metrics_log:
             rows.append({"optimizer": opt, "step": m["step"], "loss": round(m["loss"], 4)})
     write_csv("stability.csv", rows)

@@ -10,7 +10,7 @@ from repro.core import (SNRTracker, measure_tree_snr, rules_as_tree)
 from repro.core.slim_adam import slim_adam
 from repro.data import linear_model_batches
 from repro.models import linear_lm
-from repro.optim import adamw, apply_updates
+from repro.optim import adamw
 from repro.train.step import make_train_step
 from repro.train.trainer import find_adam_nu
 

@@ -11,7 +11,6 @@ from repro.configs import get_reduced
 from repro.core import rules_as_tree, second_moment_savings, table3_rules
 from repro.core.slim_adam import slim_adam
 from repro.data import DataConfig, ZipfLM
-from repro.optim import apply_updates
 from repro.train.step import make_train_step
 
 

@@ -6,7 +6,6 @@ architecture families (dense GQA, pure-SSM, hybrid MoE).
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_reduced
 from repro.serve import Engine, ServeConfig

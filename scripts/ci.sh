@@ -1,23 +1,100 @@
 #!/usr/bin/env bash
-# Tier-1 gate: full test suite + the quick optimizer benchmarks in Pallas
-# interpret mode (correctness harness; the roofline columns are analytic).
+# Tiered CI pipeline — the single source of truth both `make ci` and
+# .github/workflows/ci.yml call, so local and hosted CI cannot drift.
+#
+#   scripts/ci.sh lint            ruff check (skipped with a notice if ruff
+#                                 is not installed — the container image does
+#                                 not ship it; the GitHub lint job does)
+#   scripts/ci.sh test-fast       pytest -m "not slow" (quick tier)
+#   scripts/ci.sh test-full       full pytest suite
+#   scripts/ci.sh bench-roofline  analytic roofline gates: transpose-free
+#                                 planner + per-shard sharded byte bound
+#   scripts/ci.sh bench-quick     just the optimizer benches (opt_speed,
+#                                 opt_speed_tree, opt_speed_sharded)
+#   scripts/ci.sh bench           full quick-preset benchmark sweep
+#                                 (writes benchmarks/results/*.csv)
+#   scripts/ci.sh all  (default)  lint + test-full + bench-roofline + the
+#                                 quick optimizer benches (the tier-1 gate)
 #
 # The suite is embarrassingly parallel, so when pytest-xdist is available
 # (requirements-dev.txt) the run fans out across cores (-n auto), cutting
 # ~300 s serial to well under the ~150 s budget. The slowest cases carry a
-# `slow` marker so quick local loops (`make test-fast`) can skip them; this
+# `slow` marker so quick local loops (test-fast) can skip them; the tier-1
 # gate always runs the *full* suite — parallelism, never deselection, is
 # what keeps it under budget.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-XDIST_FLAGS=""
-if python -c "import xdist" >/dev/null 2>&1; then
-  XDIST_FLAGS="-n auto"
-fi
+stage="${1:-all}"
 
-python -m pytest -x -q ${XDIST_FLAGS}
-python -m benchmarks.opt_speed --check-roofline
-python -m benchmarks.run --preset quick --only opt_speed
-python -m benchmarks.run --preset quick --only opt_speed_tree
+require_jax() {
+  # Fail fast with a diagnosis instead of a bare ImportError traceback from
+  # deep inside the first collected test module.
+  if ! python -c "import jax" >/dev/null 2>&1; then
+    echo "error: python cannot import jax — the test suite, benchmarks and" >&2
+    echo "kernels all require it. Install a CPU jax (pip install 'jax[cpu]')" >&2
+    echo "or run inside the project container image, then retry." >&2
+    exit 1
+  fi
+}
+
+xdist_flags() {
+  # Print the parallel/serial decision so CI logs show which mode ran.
+  if python -c "import xdist" >/dev/null 2>&1; then
+    echo "pytest-xdist available: running parallel (-n auto)" >&2
+    echo "-n auto"
+  else
+    echo "pytest-xdist not installed: running serial (pip install -r requirements-dev.txt to parallelize)" >&2
+    echo ""
+  fi
+}
+
+run_lint() {
+  if python -c "import ruff" >/dev/null 2>&1 || command -v ruff >/dev/null 2>&1; then
+    ruff check .
+  else
+    echo "ruff not installed: skipping lint (the GitHub 'lint' job installs it; pip install ruff to run locally)"
+  fi
+}
+
+run_test_fast() {
+  require_jax
+  python -m pytest -x -q $(xdist_flags) -m "not slow"
+}
+
+run_test_full() {
+  require_jax
+  python -m pytest -x -q $(xdist_flags)
+}
+
+run_bench_roofline() {
+  require_jax
+  python -m benchmarks.opt_speed --check-roofline
+  python -m benchmarks.opt_speed --check-roofline --sharded
+}
+
+run_bench_quick() {
+  require_jax
+  python -m benchmarks.run --preset quick --only opt_speed
+  python -m benchmarks.run --preset quick --only opt_speed_tree
+  python -m benchmarks.run --preset quick --only opt_speed_sharded
+}
+
+run_bench() {
+  require_jax
+  python -m benchmarks.run --preset quick
+}
+
+case "$stage" in
+  lint)           run_lint ;;
+  test-fast)      run_test_fast ;;
+  test-full)      run_test_full ;;
+  bench-roofline) run_bench_roofline ;;
+  bench-quick)    run_bench_quick ;;
+  bench)          run_bench ;;
+  all)            run_lint; run_test_full; run_bench_roofline; run_bench_quick ;;
+  *)
+    echo "usage: scripts/ci.sh [lint|test-fast|test-full|bench-roofline|bench-quick|bench|all]" >&2
+    exit 2 ;;
+esac

@@ -7,15 +7,8 @@ Public API:
         rules_as_tree, slim_adam, scale_by_slim_adam, second_moment_savings,
     )
 """
+from . import baselines
 from .labels import ParamMeta, STRUCTURAL_AXES, flatten_with_names, path_str, validate_meta
-from .snr import (
-    SNRTracker,
-    compression_ratio,
-    measure_leaf_snr,
-    measure_leaf_snr_per_layer,
-    measure_tree_snr,
-    snr_along_dims,
-)
 from .rules import (
     DEFAULT_CUTOFF,
     Rule,
@@ -25,8 +18,15 @@ from .rules import (
     second_moment_savings,
     table3_rules,
 )
-from .slim_adam import ScaleBySlimAdamState, scale_by_slim_adam, slim_adam, second_moment_elements
-from . import baselines
+from .slim_adam import ScaleBySlimAdamState, scale_by_slim_adam, second_moment_elements, slim_adam
+from .snr import (
+    SNRTracker,
+    compression_ratio,
+    measure_leaf_snr,
+    measure_leaf_snr_per_layer,
+    measure_tree_snr,
+    snr_along_dims,
+)
 
 __all__ = [
     "ParamMeta",

@@ -24,7 +24,7 @@ Axis-name conventions (logical axes):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Optional, Sequence, Tuple
+from typing import Any, Mapping, Sequence, Tuple
 
 import jax
 

@@ -18,7 +18,7 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 import jax
 import numpy as np
 
-from .labels import ParamMeta, flatten_with_names
+from .labels import flatten_with_names
 
 Rule = Optional[Tuple[str, ...]]
 

@@ -62,6 +62,8 @@ def scale_by_slim_adam(
     use_first_moment: bool = True,
     backend: str = "jnp",
     bucket_min_size: int = fused.DEFAULT_BUCKET_MIN,
+    mesh=None,
+    param_specs=None,
 ) -> GradientTransformation:
     """Adam preconditioner with mean-shared second moments along per-leaf dims.
 
@@ -74,8 +76,22 @@ def scale_by_slim_adam(
     dims-subset, canonicalized to a minor-axis reduction) and K = () leaves
     through the dense kernel with small-leaf bucketing; the jnp path remains
     the per-leaf fallback. State layout is backend-independent.
+
+    ``mesh`` + ``param_specs`` (PartitionSpec pytree mirroring params) make
+    the fused backend shard-aware: the tree update runs under ``shard_map``
+    with per-leaf regime plans — local kernels where the reduced dims are
+    whole per shard, ``lax.psum``-completed reductions where they are split,
+    per-shard jnp for interleaved-K-after-sharding leaves (see
+    ``repro.sharding.shardspec``). Ignored by the jnp backend, which
+    partitions natively under pjit.
     """
     backend_r = resolve_backend(backend)
+    if backend_r == "fused" and (mesh is not None or param_specs is not None):
+        from ..sharding.shardspec import normalize_spec_leaves, sharded_pair
+
+        mesh, param_specs = sharded_pair(mesh, param_specs, "scale_by_slim_adam")
+    else:
+        mesh = None
     # Tuples inside a pytree would be traversed; treat them as leaves by
     # flattening once against params at init/update time.
 
@@ -99,10 +115,12 @@ def scale_by_slim_adam(
 
         if backend_r == "fused":
             mu_leaves = treedef.flatten_up_to(state.mu) if use_first_moment else None
+            spec_leaves = (None if mesh is None else normalize_spec_leaves(
+                param_specs, treedef, "scale_by_slim_adam"))
             u, mu_l, nu_l = fused.slim_tree_update(
                 g_leaves, mu_leaves, nu_leaves, d_leaves, b1=b1, b2=b2,
                 eps=eps, count=count, use_first_moment=use_first_moment,
-                bucket_min_size=bucket_min_size)
+                bucket_min_size=bucket_min_size, mesh=mesh, spec_leaves=spec_leaves)
             unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
             return unflat(u), ScaleBySlimAdamState(
                 count=count, mu=unflat(mu_l) if use_first_moment else None,
@@ -134,16 +152,20 @@ def slim_adam(
     weight_decay: float = 0.1,
     grad_clip: Optional[float] = 1.0,
     backend: str = "jnp",
+    mesh=None,
+    param_specs=None,
 ) -> GradientTransformation:
     """Drop-in AdamW recipe with SlimAdam's compressed preconditioner.
 
     Uses the *same* hyperparameters as Adam — the paper's requirement that
-    users can swap optimizers without re-tuning.
+    users can swap optimizers without re-tuning. ``mesh``/``param_specs``
+    thread to :func:`scale_by_slim_adam` for the shard-aware fused backend.
     """
     parts = []
     if grad_clip is not None:
         parts.append(clip_by_global_norm(grad_clip))
-    parts.append(scale_by_slim_adam(dims_tree, b1=b1, b2=b2, eps=eps, backend=backend))
+    parts.append(scale_by_slim_adam(dims_tree, b1=b1, b2=b2, eps=eps, backend=backend,
+                                    mesh=mesh, param_specs=param_specs))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
     parts.append(scale_by_learning_rate(learning_rate))

@@ -15,7 +15,7 @@ resume mid-stream without data loss or repetition (fault tolerance).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 

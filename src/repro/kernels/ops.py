@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from .fused_adam import adam_precond, bias_corrections, fused_adam
+from .ref import snr_from_centered_stats
 from .slim_update import (
     PRECOND_BUFS,
     UPDATE_BUFS,
@@ -51,23 +52,24 @@ from .slim_update import (
     slim_update_major,
 )
 from .snr_stats import (
-    CENTERED_BUFS,
     snr_stats,
     snr_stats_centered,
     snr_stats_centered_batched,
     snr_stats_centered_major,
+    snr_stats_centered_partial,
+    snr_stats_centered_partial_batched,
 )
-from .ref import snr_from_centered_stats
 from .tiling import strip_fits
 
 __all__ = ["fused_adam_op", "slim_update_op", "slim_update_nd", "snr_op",
-           "fused_adam", "slim_update", "slim_update_major",
+           "snr_partial_op", "fused_adam", "slim_update", "slim_update_major",
            "slim_update_batched", "adam_precond", "slim_precond",
            "slim_precond_major", "slim_precond_batched", "snr_stats",
            "snr_stats_centered", "snr_stats_centered_major",
-           "snr_stats_centered_batched", "CanonND", "Canon2D", "canon_nd",
-           "canon2d", "canon_apply", "canon_restore", "LeafPlan", "leaf_plan",
-           "default_interpret"]
+           "snr_stats_centered_batched", "snr_stats_centered_partial",
+           "snr_stats_centered_partial_batched", "CanonND", "Canon2D",
+           "canon_nd", "canon2d", "canon_apply", "canon_restore", "LeafPlan",
+           "leaf_plan", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -325,6 +327,23 @@ def slim_update_nd(p, g, m, v_red, *, dims: Tuple[int, ...], lr, b1=0.9, b2=0.95
         po, mo, vo = fn(p2, g2, m2, v2, **kw)
     return (canon_restore(po, cn, p.shape), canon_restore(mo, cn, m.shape),
             canon_restore(vo, cn, v_red.shape))
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "interpret"))
+def snr_partial_op(v, *, axis: int = 1, interpret=True):
+    """Per-line partial centered stats of a canonical moment view, flattened
+    to 1-D: (line_sum, shifted_line_sum, shifted_line_sumsq, line_first).
+
+    The sharded-SNR building block: each device runs this on its local shard
+    of the canonical (rows, cols) / (batch, rows, cols) view, rebases the
+    shifted sums to a mesh-common shift
+    (:func:`repro.kernels.ref.rebase_centered_stats`), and ``lax.psum``-s
+    them over the mesh axes owning the reduction dim before the
+    :func:`repro.kernels.ref.snr_from_centered_stats` finalization."""
+    if v.ndim == 2:
+        v = v[None]
+    s1, s1c, s2c, f = snr_stats_centered_partial_batched(v, axis=axis, interpret=interpret)
+    return s1.ravel(), s1c.ravel(), s2c.ravel(), f.ravel()
 
 
 @functools.partial(jax.jit, static_argnames=("axis", "interpret"))

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 
@@ -69,3 +68,37 @@ def snr_from_centered_stats(s1: jnp.ndarray, s1c: jnp.ndarray, s2c: jnp.ndarray,
     mean_c = s1c / n
     var = s2c / n - jnp.square(mean_c)
     return jnp.mean(jnp.square(mean) / (jnp.maximum(var, 0.0) + eps))
+
+
+def snr_stats_centered_partial_ref(v: jnp.ndarray, dims: Tuple[int, ...]):
+    """Oracle for ``snr_stats_centered_partial*``: per-line (sum, shifted
+    sum, shifted sumsq, first entry) over arbitrary reduction ``dims``,
+    keepdims layout (the jnp fallback the sharded SNR path uses when no
+    kernel serves the local shard)."""
+    v32 = v.astype(jnp.float32)
+    idx = tuple(slice(0, 1) if d in {x % v.ndim for x in dims} else slice(None)
+                for d in range(v.ndim))
+    first = v32[idx]
+    d = v32 - first
+    s1 = jnp.sum(v32, axis=dims, keepdims=True)
+    s1c = jnp.sum(d, axis=dims, keepdims=True)
+    s2c = jnp.sum(d * d, axis=dims, keepdims=True)
+    return s1, s1c, s2c, first
+
+
+def rebase_centered_stats(s1c: jnp.ndarray, s2c: jnp.ndarray, first: jnp.ndarray,
+                          shift: jnp.ndarray, n: int):
+    """Re-express per-shard centered sums (local shift ``first``) under a
+    common ``shift``:
+
+        s1c' = s1c + n * (first - shift)
+        s2c' = s2c + 2 * (first - shift) * s1c + n * (first - shift)^2
+
+    Exact algebra, and — unlike recomputing from the raw sums — every term
+    stays O(spread): ``first - shift`` is a difference of near-equal line
+    entries (Sterbenz-exact in the near-constant high-SNR regime the
+    centered kernels exist for), so the cross-shard composition keeps the
+    one-pass variance's precision. After rebasing, the sums from different
+    shards of one line simply add (``lax.psum``)."""
+    d = first - shift
+    return s1c + n * d, s2c + 2.0 * d * s1c + n * d * d

@@ -53,6 +53,20 @@ def _snr_centered_kernel(v_ref, s1_out, s1c_out, s2c_out, *, red_axis: int):
     s2c_out[...] = jnp.sum(d * d, axis=red_axis)
 
 
+def _snr_centered_partial_kernel(v_ref, s1_out, s1c_out, s2c_out, f_out, *, red_axis: int):
+    """Centered stats + the shift itself (the line's local first entry), the
+    partial-sums form a cross-shard reduction composes: shards rebase their
+    sums to a common shift (exact O(spread) algebra, see
+    ``repro.kernels.ref.rebase_centered_stats``) and ``lax.psum`` them."""
+    v = v_ref[...].astype(jnp.float32)        # (1, TR, C) | (1, R, TC)
+    f = _first_along(v, red_axis)
+    d = v - f
+    s1_out[...] = jnp.sum(v, axis=red_axis)
+    s1c_out[...] = jnp.sum(d, axis=red_axis)
+    s2c_out[...] = jnp.sum(d * d, axis=red_axis)
+    f_out[...] = jnp.squeeze(f, axis=red_axis)
+
+
 def _stats_call(v, *, axis: int, n_bufs: int, n_outs: int, kernel_body,
                 block: Optional[int], interpret: bool):
     """Shared pad-fit-launch path for both stats flavors. Returns ``n_outs``
@@ -103,6 +117,27 @@ def snr_stats_centered_batched(v, *, axis: int, block: Optional[int] = None,
                        interpret=interpret)
 
 
+def snr_stats_centered_partial_batched(v, *, axis: int, block: Optional[int] = None,
+                                       interpret: bool = True):
+    """v: (B, R, C) -> (line_sum, shifted_line_sum, shifted_line_sumsq,
+    line_first), each (B, kept) — the partial-sums entry point for sharded
+    reduction lines.
+
+    Same one-pass centered trick as :func:`snr_stats_centered_batched`, but
+    when the reduction dim is split across devices each shard shifts by its
+    *own* first entry, so the sums cannot be added directly. Emitting the
+    shift alongside lets callers rebase every shard to a mesh-common shift
+    (``shift = lax.pmean(first, axes)``; the rebase is exact algebra whose
+    terms are all O(spread), see ``repro.kernels.ref.rebase_centered_stats``)
+    and *then* ``lax.psum`` the three sums — preserving the catastrophic-
+    cancellation protection across the shard boundary. The working set is
+    identical to the centered kernel (the shift is a reused register line),
+    hence the shared ``CENTERED_BUFS``."""
+    return _stats_call(v, axis=axis, n_bufs=CENTERED_BUFS, n_outs=4,
+                       kernel_body=_snr_centered_partial_kernel, block=block,
+                       interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # 2-D entry points: B=1 wrappers over the batched canonical form.
 # ---------------------------------------------------------------------------
@@ -120,6 +155,14 @@ def snr_stats_centered(v, *, row_block: int = 64, interpret: bool = True):
     s1, s1c, s2c = snr_stats_centered_batched(v[None], axis=1, block=row_block,
                                               interpret=interpret)
     return s1[0], s1c[0], s2c[0]
+
+
+def snr_stats_centered_partial(v, *, row_block: int = 64, interpret: bool = True):
+    """v: (R, C) -> (row_sum, shifted_row_sum, shifted_row_sumsq, row_first),
+    all (R,). B=1 wrapper over the partial-sums entry point."""
+    s1, s1c, s2c, f = snr_stats_centered_partial_batched(
+        v[None], axis=1, block=row_block, interpret=interpret)
+    return s1[0], s1c[0], s2c[0], f[0]
 
 
 def snr_stats_centered_major(v, *, col_block: int = 256, interpret: bool = True):

@@ -132,8 +132,12 @@ def pick_grad_accum(cfg, shape_name: str, mesh) -> int:
 
 
 def build_cell(arch: str, shape: str, mesh, *, optimizer: str = "slim", grad_accum: Optional[int] = None,
-               variant: str = "default"):
-    """Returns (jitted, abstract_args, ctx, info)."""
+               variant: str = "default", backend: str = "jnp"):
+    """Returns (jitted, abstract_args, ctx, info, cfg). ``backend`` selects the
+    Adam/SlimAdam execution path; 'fused' lowers the optimizer step as
+    shard_map'd Pallas kernels on the production mesh (mesh + param specs
+    are threaded into the transformation), so the dry-run proves the
+    shard-aware kernels partition/compile alongside the model."""
     seq, gb, kind = SHAPES[shape]
     if variant == "optimized":
         import importlib
@@ -166,11 +170,13 @@ def build_cell(arch: str, shape: str, mesh, *, optimizer: str = "slim", grad_acc
                 if optimizer == "slim":
                     rules = table3_rules(meta)
                     dims_tree = rules_as_tree(rules, params_abs, meta)
-                    tx = slim_adam(3e-4, dims_tree)
+                    tx = slim_adam(3e-4, dims_tree, backend=backend,
+                                   mesh=mesh, param_specs=p_specs)
                     info["optimizer"] = "slim_adam(table3)"
                 else:
-                    tx = adamw(3e-4)
+                    tx = adamw(3e-4, backend=backend, mesh=mesh, param_specs=p_specs)
                     info["optimizer"] = "adamw"
+                info["opt_backend"] = backend
                 accum = grad_accum or pick_grad_accum(cfg, shape, mesh)
                 info["grad_accum"] = accum
                 opt_abs = jax.eval_shape(tx.init, params_abs)
@@ -236,7 +242,7 @@ def model_flops_estimate(cfg, info) -> float:
 
 def run_cell(arch: str, shape: str, mesh_kind: str, *, optimizer: str = "slim",
              grad_accum: Optional[int] = None, out_dir: Path = RESULTS_DIR,
-             variant: str = "default") -> Dict[str, Any]:
+             variant: str = "default", backend: str = "jnp") -> Dict[str, Any]:
     ok, reason = cell_supported(arch, shape)
     record: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_kind}
     if not ok:
@@ -248,7 +254,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, optimizer: str = "slim",
     n_chips = math.prod(mesh.devices.shape)
     t0 = time.time()
     jitted, args, ctx, info, cfg = build_cell(arch, shape, mesh, optimizer=optimizer,
-                                              grad_accum=grad_accum, variant=variant)
+                                              grad_accum=grad_accum, variant=variant,
+                                              backend=backend)
     with use_sharding(ctx):
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
@@ -274,6 +281,10 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, optimizer: str = "slim",
         record["fits_hbm"] = bool(args_b + temp_b <= HBM_PER_CHIP)
 
     cost = compiled.cost_analysis()
+    # Multi-module executables (e.g. shard_map'd pallas_call bodies under the
+    # fused backend) report a list of per-module dicts; take the main module.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
     if cost:
         record["xla_cost_flops_raw"] = float(cost.get("flops", -1.0))
         record["xla_cost_bytes_raw"] = float(cost.get("bytes accessed", -1.0))
@@ -310,6 +321,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, optimizer: str = "slim",
     suffix = "" if optimizer == "slim" else f"_{optimizer}"
     if variant != "default":
         suffix += f"_{variant}"
+    if backend != "jnp":
+        suffix += f"_{backend}"
     out_path = out_dir / f"{arch}__{shape}__{mesh_kind}{suffix}.json"
     out_path.write_text(json.dumps(record, indent=2, default=str))
     record["out_path"] = str(out_path)
@@ -322,6 +335,9 @@ def main(argv=None):
     ap.add_argument("--shape", choices=list(SHAPES), required=False)
     ap.add_argument("--mesh", choices=("single", "multi"), default="single")
     ap.add_argument("--optimizer", choices=("slim", "adam"), default="slim")
+    ap.add_argument("--backend", choices=("jnp", "fused"), default="jnp",
+                    help="optimizer execution path; 'fused' lowers shard_map'd "
+                         "Pallas optimizer kernels into the cell")
     ap.add_argument("--grad-accum", type=int, default=None)
     ap.add_argument("--variant", default="default")
     ap.add_argument("--list", action="store_true", help="list all runnable cells")
@@ -335,7 +351,8 @@ def main(argv=None):
         return 0
 
     rec = run_cell(args.arch, args.shape, args.mesh, optimizer=args.optimizer,
-                   grad_accum=args.grad_accum, variant=args.variant)
+                   grad_accum=args.grad_accum, variant=args.variant,
+                   backend=args.backend)
     print(json.dumps(rec, indent=2, default=str))
     return 0 if rec["status"] in ("ok", "skipped") else 1
 

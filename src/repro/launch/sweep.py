@@ -13,7 +13,6 @@ import json
 import subprocess
 import sys
 import time
-from pathlib import Path
 
 from ..configs import ARCH_IDS, SHAPES, cell_supported
 from .dryrun import RESULTS_DIR

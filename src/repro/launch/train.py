@@ -17,12 +17,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..checkpoint import store
 from ..configs import ARCH_IDS, get_config, get_reduced
-from ..core import rules_as_tree, table3_rules
 from ..data import DataConfig, ZipfLM
 from ..sharding.logical import ShardingContext, param_specs, use_sharding
 from ..sharding.state_shardings import opt_state_specs
@@ -37,6 +35,9 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true", help="CPU-scale config")
     ap.add_argument("--mesh", choices=("none", "single", "multi"), default="none")
     ap.add_argument("--optimizer", default="slim")
+    ap.add_argument("--backend", choices=("jnp", "fused", "auto"), default="auto",
+                    help="Adam/SlimAdam execution path; 'fused' + a mesh runs "
+                         "the Pallas kernels per-shard under shard_map")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq", type=int, default=128)
@@ -52,11 +53,14 @@ def main(argv=None):
 
     with use_sharding(ctx):
         params, meta = cfg.init(jax.random.PRNGKey(0))
-        tx = make_optimizer(args.optimizer, args.lr, params, meta)
+        # Specs first: the fused backend wants mesh + param specs at
+        # construction so its tree update runs under shard_map on the shards.
+        p_specs = param_specs(meta, params) if ctx is not None else None
+        tx = make_optimizer(args.optimizer, args.lr, params, meta,
+                            backend=args.backend, mesh=mesh, param_specs=p_specs)
         opt_state = tx.init(params)
 
         if ctx is not None:
-            p_specs = param_specs(meta, params)
             p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
                                 is_leaf=lambda x: isinstance(x, P))
             o_specs = opt_state_specs(jax.eval_shape(lambda: opt_state), params, p_specs)

@@ -1,3 +1,4 @@
+from . import attention, linear_lm, mlp_moe, ssm, transformer
 from .common import (
     ParamSpec,
     abstract_params,
@@ -8,6 +9,7 @@ from .common import (
     stack_specs,
     torch_default_init,
 )
+from .linear_lm import LinearLMConfig
 from .transformer import (
     DecodeCache,
     LayerSlot,
@@ -17,8 +19,6 @@ from .transformer import (
     forward,
     init_decode_cache,
 )
-from .linear_lm import LinearLMConfig
-from . import attention, linear_lm, mlp_moe, ssm, transformer
 
 __all__ = [
     "ParamSpec",

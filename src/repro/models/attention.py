@@ -12,13 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..sharding.logical import constrain, shard_map
-from .common import ParamSpec, apply_rotary, normal_init, rotary_embedding, zeros_init
+from .common import ParamSpec, apply_rotary, rotary_embedding, zeros_init
 
 NEG_INF = -1e30
 

@@ -11,7 +11,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from .common import ParamSpec, abstract_params, init_params, meta_tree
+from .common import ParamSpec, init_params, meta_tree
 
 
 @dataclasses.dataclass(frozen=True)

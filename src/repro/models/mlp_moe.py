@@ -12,13 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..sharding.logical import constrain, shard_map
-from .common import ParamSpec, normal_init, zeros_init
+from .common import ParamSpec
 
 
 def gelu(x):

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,6 @@ import jax.numpy as jnp
 from ..sharding.logical import constrain
 from .attention import (
     AttnConfig,
-    KVCache,
     attention_decode,
     attention_forward,
     attention_specs,
@@ -41,10 +40,9 @@ from .common import (
     rms_norm,
     stack_specs,
     torch_default_init,
-    zeros_init,
 )
 from .mlp_moe import MoEConfig, mlp_forward, mlp_specs, moe_forward, moe_specs
-from .ssm import SSMCache, SSMConfig, init_ssm_cache, ssm_decode, ssm_forward, ssm_specs, _ssm_inner
+from .ssm import SSMConfig, init_ssm_cache, ssm_decode, ssm_forward, ssm_specs
 
 
 @dataclasses.dataclass(frozen=True)

@@ -34,12 +34,25 @@ class ScaleByAdamState(NamedTuple):
 
 def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
                   backend: str = "jnp",
-                  bucket_min_size: int = fused.DEFAULT_BUCKET_MIN) -> GradientTransformation:
+                  bucket_min_size: int = fused.DEFAULT_BUCKET_MIN,
+                  mesh=None, param_specs=None) -> GradientTransformation:
     """Adam preconditioner. ``backend`` selects the execution path
     (see ``repro.optim.base.BACKENDS``): 'fused' streams each eligible leaf
     through the Pallas kernels with small-leaf bucketing; state layout and
-    results are identical to 'jnp' up to fp32 rounding."""
+    results are identical to 'jnp' up to fp32 rounding.
+
+    ``mesh`` + ``param_specs`` (a PartitionSpec pytree mirroring params)
+    make the fused backend shard-aware: the tree update runs under
+    ``shard_map`` on each device's local shards instead of letting GSPMD
+    gather full leaves around the pallas_call optimization barrier. Ignored
+    by the jnp backend — plain jax.numpy partitions natively under pjit."""
     backend = resolve_backend(backend)
+    if backend == "fused" and (mesh is not None or param_specs is not None):
+        from ..sharding.shardspec import normalize_spec_leaves, sharded_pair
+
+        mesh, param_specs = sharded_pair(mesh, param_specs, "scale_by_adam")
+    else:
+        mesh = None
 
     def init_fn(params):
         mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -53,9 +66,12 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
         mu_leaves = treedef.flatten_up_to(state.mu)
         nu_leaves = treedef.flatten_up_to(state.nu)
         if backend == "fused":
+            spec_leaves = (None if mesh is None else normalize_spec_leaves(
+                param_specs, treedef, "scale_by_adam"))
             u, mu_l, nu_l = fused.adam_tree_update(
                 g_leaves, mu_leaves, nu_leaves, b1=b1, b2=b2, eps=eps,
-                count=count, bucket_min_size=bucket_min_size)
+                count=count, bucket_min_size=bucket_min_size,
+                mesh=mesh, spec_leaves=spec_leaves)
         else:
             # Per-leaf reference math shared with the fused backend's
             # fallback leaves — one definition of the semantics oracle.
@@ -78,12 +94,18 @@ def adamw(
     weight_decay: float = 0.1,
     grad_clip: Optional[float] = 1.0,
     backend: str = "jnp",
+    mesh=None,
+    param_specs=None,
 ) -> GradientTransformation:
-    """The paper's training recipe: clip(1.0) -> Adam -> decoupled wd -> -lr."""
+    """The paper's training recipe: clip(1.0) -> Adam -> decoupled wd -> -lr.
+
+    ``mesh``/``param_specs`` thread to :func:`scale_by_adam` so the fused
+    backend runs shard-aware under a production mesh."""
     parts = []
     if grad_clip is not None:
         parts.append(clip_by_global_norm(grad_clip))
-    parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps, backend=backend))
+    parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps, backend=backend,
+                               mesh=mesh, param_specs=param_specs))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
     parts.append(scale_by_learning_rate(learning_rate))

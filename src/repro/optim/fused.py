@@ -192,6 +192,155 @@ def _flush_bucket(bucket, gs, ms, vs, out_u, out_m, out_v, *, interpret, **kw):
 
 
 # ---------------------------------------------------------------------------
+# Sharded execution: shard_map wrapping with per-leaf regime plans
+# ---------------------------------------------------------------------------
+
+
+def _use_sharded(mesh, spec_leaves) -> bool:
+    """The sharded path engages only when both a mesh and specs are supplied
+    and the mesh actually shards something — a trivial mesh runs the plain
+    per-leaf path so single-device traces stay byte-identical."""
+    if mesh is None or spec_leaves is None:
+        return False
+    from ..sharding.shardspec import mesh_is_trivial
+
+    return not mesh_is_trivial(mesh)
+
+
+def sharded_tree_plans(g_leaves: Sequence[Any], dims_leaves: Sequence[Dims],
+                       spec_leaves: Sequence[Any], mesh, *, n_bufs: int = PRECOND_BUFS):
+    """Per-leaf :class:`repro.sharding.shardspec.ShardLeafPlan` list for a
+    tree update — the single planning step the sharded dispatchers below
+    run, exposed so callers (tests, the sharded roofline) can inspect and
+    count the regimes (`repro.sharding.shardspec.regime_counts`)."""
+    from ..sharding.shardspec import plan_sharded_tree, spec_dtype
+
+    return plan_sharded_tree([tuple(g.shape) for g in g_leaves],
+                             [spec_dtype(g) for g in g_leaves],
+                             [tuple(d) for d in dims_leaves],
+                             list(spec_leaves), mesh, n_bufs=n_bufs)
+
+
+def _psum_slim_leaf(g, m, v_red, dims: Dims, *, axes: Tuple[str, ...], red_total: int,
+                    b1, b2, eps, count, use_first_moment: bool):
+    """SlimAdam leaf whose reduced dims are split across ``axes``: local
+    partial sums of g^2 per reduction line, ``lax.psum`` to complete them,
+    then the elementwise preconditioner on the local shard. The psum carries
+    O(kept_local) bytes over ICI — the compressed moment's tininess is
+    exactly what keeps the cross-shard completion cheap.
+
+    Scheduling note: the first-moment update is computed *before* the psum
+    on purpose. The collective splits the leaf into two passes, but m_new
+    shares pass one with the partial sums (read g, m; write m_new) and the
+    post-psum finalize reads m_new instead of g — so the leaf still streams
+    the slim path's 5 full-size passes, not 6 (the sharded roofline charges
+    exactly that)."""
+    g32 = g.astype(jnp.float32)
+    part = jnp.sum(g32 * g32, axis=dims, keepdims=True)
+    bc1, bc2 = bias_corrections(b1, b2, count)
+    if use_first_moment:
+        m_new = b1 * m + (1 - b1) * g32
+    else:
+        m_new = None
+    ek = jax.lax.psum(part, axes) / red_total
+    v_new = b2 * v_red + (1 - b2) * ek
+    num = m_new / bc1 if use_first_moment else g32
+    u = num / (jnp.sqrt(v_new / bc2) + eps)
+    return u, m_new, v_new
+
+
+def _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh, *,
+                       b1, b2, eps, count, interpret, bucket_min_size):
+    """Dense Adam under shard_map: elementwise math never crosses shards, so
+    every device just runs the plain per-leaf path on its local shards (the
+    leaf plans and bucketing decisions re-derive from local shapes)."""
+    from ..sharding.logical import shard_map
+    from ..sharding.shardspec import even_spec
+    from jax.sharding import PartitionSpec as P
+
+    specs = [even_spec(g.shape, s, mesh) for g, s in zip(g_leaves, spec_leaves)]
+
+    def local_fn(count, gs, ms, vs):
+        return adam_tree_update(gs, ms, vs, b1=b1, b2=b2, eps=eps, count=count,
+                                interpret=interpret, bucket_min_size=bucket_min_size)
+
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(P(), specs, specs, specs),
+                   out_specs=(specs, specs, specs), check_rep=False)
+    return fn(count, list(g_leaves), list(mu_leaves), list(nu_leaves))
+
+
+def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves, mesh, *,
+                       b1, b2, eps, count, use_first_moment, interpret, bucket_min_size):
+    """SlimAdam under shard_map, three regimes per leaf (see
+    ``repro.sharding.shardspec``): 'local' leaves run the unchanged kernel
+    dispatch on their shard (kernels, bucketing, jnp fits-gate fallback all
+    re-derived from local shapes); 'psum' leaves complete their reduction
+    lines with a cross-shard ``lax.psum``; 'jnp' leaves (interleaved K after
+    sharding) run the reference math on their shard."""
+    from ..sharding.logical import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    plans = sharded_tree_plans(g_leaves, dims_leaves, spec_leaves, mesh,
+                               n_bufs=PRECOND_BUFS)
+    g_specs = [pl.spec for pl in plans]
+    v_specs = [pl.red_spec for pl in plans]
+    n = len(g_leaves)
+    kw = dict(b1=b1, b2=b2, eps=eps)
+
+    def dispatch(count, gs, ms, vs):
+        out_u: List[Any] = [None] * n
+        out_m: List[Any] = [None] * n
+        out_v: List[Any] = [None] * n
+        local_idx = [i for i, pl in enumerate(plans) if pl.regime == "local"]
+        if local_idx:
+            u, mo, vo = slim_tree_update(
+                [gs[i] for i in local_idx],
+                [ms[i] for i in local_idx] if use_first_moment else None,
+                [vs[i] for i in local_idx],
+                [tuple(dims_leaves[i]) for i in local_idx],
+                count=count, use_first_moment=use_first_moment,
+                interpret=interpret, bucket_min_size=bucket_min_size, **kw)
+            for j, i in enumerate(local_idx):
+                out_u[i] = u[j]
+                out_m[i] = mo[j] if use_first_moment else None
+                out_v[i] = vo[j]
+        for i, pl in enumerate(plans):
+            if pl.regime == "local":
+                continue
+            dims = tuple(dims_leaves[i])
+            m_i = ms[i] if use_first_moment else None
+            if pl.regime == "psum":
+                out = _psum_slim_leaf(gs[i], m_i, vs[i], dims, axes=pl.psum_axes,
+                                      red_total=pl.red_total, count=count,
+                                      use_first_moment=use_first_moment, **kw)
+            else:  # 'jnp': reduced dims whole on the shard, reference math
+                out = jnp_slim_leaf(gs[i], m_i, vs[i], dims, count=count,
+                                    use_first_moment=use_first_moment, **kw)
+            out_u[i], out_m[i], out_v[i] = out
+        return out_u, out_m, out_v
+
+    if use_first_moment:
+        def local_fn(count, gs, ms, vs):
+            return dispatch(count, gs, ms, vs)
+
+        fn = shard_map(local_fn, mesh=mesh,
+                       in_specs=(P(), g_specs, g_specs, v_specs),
+                       out_specs=(g_specs, g_specs, v_specs), check_rep=False)
+        return fn(count, list(g_leaves), list(mu_leaves), list(nu_leaves))
+
+    def local_fn_no_mu(count, gs, vs):
+        u, _, v = dispatch(count, gs, None, vs)
+        return u, v
+
+    fn = shard_map(local_fn_no_mu, mesh=mesh,
+                   in_specs=(P(), g_specs, v_specs),
+                   out_specs=(g_specs, v_specs), check_rep=False)
+    u, v = fn(count, list(g_leaves), list(nu_leaves))
+    return u, None, v
+
+
+# ---------------------------------------------------------------------------
 # Tree-level entry points (operate on flat leaf lists; the transformations
 # own flatten/unflatten so pytree structure stays their concern)
 # ---------------------------------------------------------------------------
@@ -200,10 +349,20 @@ def _flush_bucket(bucket, gs, ms, vs, out_u, out_m, out_v, *, interpret, **kw):
 def adam_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Sequence[jnp.ndarray],
                      nu_leaves: Sequence[jnp.ndarray], *, b1: float, b2: float,
                      eps: float, count, interpret: Optional[bool] = None,
-                     bucket_min_size: int = DEFAULT_BUCKET_MIN):
+                     bucket_min_size: int = DEFAULT_BUCKET_MIN,
+                     mesh=None, spec_leaves=None):
     """Dense Adam over a leaf list: kernels for eligible leaves (small ones
-    bucketed), jnp fallback otherwise. Returns (updates, new_mu, new_nu)."""
+    bucketed), jnp fallback otherwise. Returns (updates, new_mu, new_nu).
+
+    With ``mesh`` + ``spec_leaves`` (one PartitionSpec per leaf) the whole
+    update runs under ``shard_map`` — each device updates its local shards —
+    instead of letting GSPMD gather full leaves around the pallas_call
+    optimization barrier."""
     interpret = default_interpret() if interpret is None else interpret
+    if _use_sharded(mesh, spec_leaves) and len(g_leaves):
+        return _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh,
+                                  b1=b1, b2=b2, eps=eps, count=count,
+                                  interpret=interpret, bucket_min_size=bucket_min_size)
     kw = dict(b1=b1, b2=b2, eps=eps, count=count)
     n = len(g_leaves)
     out_u: List[Any] = [None] * n
@@ -227,7 +386,8 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
                      nu_leaves: Sequence[jnp.ndarray], dims_leaves: Sequence[Dims], *,
                      b1: float, b2: float, eps: float, count,
                      use_first_moment: bool = True, interpret: Optional[bool] = None,
-                     bucket_min_size: int = DEFAULT_BUCKET_MIN):
+                     bucket_min_size: int = DEFAULT_BUCKET_MIN,
+                     mesh=None, spec_leaves=None):
     """SlimAdam over a leaf list with per-leaf reduction-dim tuples.
 
     Each leaf's route comes from one :func:`leaf_plan` lookup: K = () leaves
@@ -236,8 +396,20 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
     no kernel can serve fall back to jnp. ``use_first_moment=False`` runs
     entirely on the jnp path — the kernels read/write a first moment, so
     serving the moment-less variant would stream a discarded full-size m and
-    forfeit the bandwidth win. Returns (updates, new_mu_or_None, new_nu)."""
+    forfeit the bandwidth win. Returns (updates, new_mu_or_None, new_nu).
+
+    With ``mesh`` + ``spec_leaves`` the update runs under ``shard_map`` with
+    per-leaf regime plans (``repro.sharding.shardspec``): leaves whose
+    reduced dims are whole per shard run the kernels locally on the shard,
+    leaves whose reduced dims are split complete their reduction lines with
+    a ``lax.psum`` over the owning mesh axes, and interleaved-K-after-
+    sharding leaves run the reference jnp math per shard."""
     interpret = default_interpret() if interpret is None else interpret
+    if _use_sharded(mesh, spec_leaves) and len(g_leaves):
+        return _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves,
+                                  spec_leaves, mesh, b1=b1, b2=b2, eps=eps,
+                                  count=count, use_first_moment=use_first_moment,
+                                  interpret=interpret, bucket_min_size=bucket_min_size)
     kw = dict(b1=b1, b2=b2, eps=eps, count=count)
     n = len(g_leaves)
     if not use_first_moment:

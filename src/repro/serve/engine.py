@@ -7,13 +7,12 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..models import transformer
-from ..train.step import make_serve_step
 
 
 @dataclasses.dataclass

@@ -1,3 +1,4 @@
+from . import shardspec
 from .logical import (
     ShardingContext,
     constrain,
@@ -10,6 +11,7 @@ from .logical import (
 from .state_shardings import opt_state_specs, shardings_from_specs
 
 __all__ = [
+    "shardspec",
     "ShardingContext",
     "constrain",
     "current",

@@ -15,7 +15,6 @@ serve all 10 assigned architectures.
 from __future__ import annotations
 
 import contextlib
-import math
 import threading
 from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 
@@ -28,9 +27,21 @@ MeshAxes = Union[None, str, Tuple[str, ...]]
 # jax.shard_map graduated from jax.experimental in 0.4.38; import from
 # whichever home this jax has so call sites stay version-agnostic.
 try:
-    shard_map = jax.shard_map
+    _shard_map_impl = jax.shard_map
 except AttributeError:  # jax < 0.4.38
-    from jax.experimental.shard_map import shard_map
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = True):
+    """Version-agnostic shard_map: the stabilized ``jax.shard_map`` renamed
+    ``check_rep`` to ``check_vma``; translate so call sites (the sharded
+    fused optimizer / SNR paths pass ``check_rep=False``) work on both."""
+    try:
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=check_rep)
+    except TypeError:
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_vma=check_rep)
 
 _ctx = threading.local()
 
@@ -122,7 +133,8 @@ class ShardingContext:
         # trim trailing Nones (cosmetic)
         return P(*entries)
 
-    def sharding_for(self, logical_axes: Sequence[Optional[str]], shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    def sharding_for(self, logical_axes: Sequence[Optional[str]],
+                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
         return NamedSharding(self.mesh, self.spec_for(logical_axes, shape))
 
 

@@ -1,0 +1,255 @@
+"""Local-shard geometry: (PartitionSpec, mesh) -> per-leaf shard facts.
+
+The fused optimizer backend and the SNR measurement run Pallas kernels,
+and a ``pallas_call`` is a GSPMD optimization barrier: under plain pjit the
+partitioner either replicates the call or gathers full operands around it.
+``shard_map`` fixes that — each device runs the kernel on its *local shard*
+— but then every per-leaf decision (canonicalization plan, VMEM fits-gate,
+kernel pick) must be made from the local shard shape, and any reduction
+whose dims are split across devices needs a cross-shard ``lax.psum``.
+
+This module derives those facts from a leaf's PartitionSpec plus the mesh
+axis sizes, classifying each leaf into one of three regimes (plus the
+trivially replicated case):
+
+  * ``'local'``  — no reduced dim is sharded: the reduction line is whole on
+    every shard, so the existing kernels run unchanged on the shard
+    (``repro.kernels.leaf_plan`` / ``canon_nd`` applied to the local shape);
+  * ``'psum'``   — at least one reduced dim is sharded: each shard computes
+    partial sums over its local slice of the reduction line, then a
+    ``lax.psum`` over the owning mesh axes completes the mean / SNR stats
+    before the O(kept) finalization;
+  * ``'jnp'``    — the *local* plan cannot be served transpose-free by a
+    kernel (genuinely interleaved K after sharding, VMEM-exceeding lines,
+    odd dtypes): the leaf runs the reference jnp math on its shard.
+    Dispatchers count these so regressions are visible
+    (:func:`regime_counts`).
+
+Only geometry lives here — the actual ``shard_map`` wrapping is in
+``repro.optim.fused`` (tree updates) and ``repro.core.snr`` (SNR stats).
+Everything is pure Python over static shapes; :class:`SpecMesh` is a
+device-free mesh stand-in so specs and plans can be derived for meshes far
+bigger than the current process (the analytic sharded roofline in
+``benchmarks/opt_speed.py`` plans for the production (data=16, model=16)
+mesh from a single CPU).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Dims = Tuple[int, ...]
+
+
+class SpecMesh:
+    """Device-free mesh stand-in: just ``shape`` + ``axis_names``, which is
+    all spec/plan derivation reads. Not usable with ``shard_map`` — pass a
+    real ``jax.sharding.Mesh`` for execution."""
+
+    def __init__(self, shape: Mapping[str, int]):
+        self.shape: Dict[str, int] = dict(shape)
+        self.axis_names: Tuple[str, ...] = tuple(self.shape)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"SpecMesh({self.shape})"
+
+
+def mesh_is_trivial(mesh: Any) -> bool:
+    """A mesh whose every axis has size 1 shards nothing."""
+    return all(int(s) == 1 for s in dict(mesh.shape).values())
+
+
+def spec_entries(spec: Optional[P], ndim: int) -> Tuple[Tuple[str, ...], ...]:
+    """Normalize a PartitionSpec to one tuple of mesh-axis names per dim
+    (``None`` -> ``()``, ``'x'`` -> ``('x',)``), padded/truncated to ndim."""
+    entries = list(spec) if spec is not None else []
+    entries = entries[:ndim] + [None] * (ndim - len(entries))
+    out: List[Tuple[str, ...]] = []
+    for e in entries:
+        if e is None:
+            out.append(())
+        elif isinstance(e, str):
+            out.append((e,))
+        else:
+            out.append(tuple(e))
+    return tuple(out)
+
+
+def dim_shards(shape: Sequence[int], spec: Optional[P], mesh: Any) -> Tuple[int, ...]:
+    """Per-dim shard counts, defensively replicating any dim the spec cannot
+    split evenly (pjit argument shardings must divide exactly; a non-dividing
+    entry here means the spec came from a different shape, so replication is
+    the safe reading)."""
+    sizes = dict(mesh.shape)
+    out = []
+    for s, axes in zip(shape, spec_entries(spec, len(shape))):
+        f = math.prod(int(sizes.get(a, 1)) for a in axes)
+        out.append(f if f > 1 and s % f == 0 else 1)
+    return tuple(out)
+
+
+def even_spec(shape: Sequence[int], spec: Optional[P], mesh: Any) -> P:
+    """``spec`` with entries that do not divide ``shape`` evenly dropped —
+    the spec :func:`dim_shards` actually assumed, safe to hand to
+    ``shard_map`` (which rejects uneven splits)."""
+    factors = dim_shards(shape, spec, mesh)
+    entries = spec_entries(spec, len(shape))
+    out = []
+    for f, axes in zip(factors, entries):
+        if f == 1 or not axes:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def masked_spec(shape: Sequence[int], spec: Optional[P], mesh: Any, dims: Dims) -> P:
+    """Spec for a reduced moment stored with size-1 ``dims``: the evened
+    param spec with reduced-dim entries dropped (matches
+    ``repro.sharding.state_shardings._masked_like_params``). This is how a
+    fan_in-compressed moment of a TP-sharded matrix loses its TP axis."""
+    dset = {d % len(shape) for d in dims}
+    entries = list(even_spec(shape, spec, mesh))
+    entries += [None] * (len(shape) - len(entries))
+    return P(*[None if i in dset else e for i, e in enumerate(entries)])
+
+
+def local_shape(shape: Sequence[int], spec: Optional[P], mesh: Any) -> Tuple[int, ...]:
+    """Per-device shard shape under the evened spec."""
+    return tuple(s // f for s, f in zip(shape, dim_shards(shape, spec, mesh)))
+
+
+def owning_axes(shape: Sequence[int], spec: Optional[P], mesh: Any, dims: Dims) -> Tuple[str, ...]:
+    """Mesh axes that actually shard any of ``dims`` (the ``lax.psum`` axes
+    for a reduction over those dims). Empty when the dims are whole on every
+    shard."""
+    factors = dim_shards(shape, spec, mesh)
+    entries = spec_entries(spec, len(shape))
+    dset = {d % len(shape) for d in dims}
+    out: List[str] = []
+    for i in sorted(dset):
+        if factors[i] > 1:
+            out.extend(a for a in entries[i] if a not in out)
+    return tuple(out)
+
+
+class ShardLeafPlan(NamedTuple):
+    """Per-leaf sharding regime + the shard_map specs to run it under.
+
+    ``regime`` is 'local' | 'psum' | 'jnp' (see module docstring; dense
+    K = () leaves are always 'local' — elementwise math never crosses
+    shards). ``spec`` / ``red_spec`` are the evened full-leaf and reduced-
+    moment specs; ``psum_axes`` the mesh axes owning sharded reduced dims
+    ('psum' only); ``red_total`` the *global* reduction extent (the mean's
+    divisor after the psum)."""
+
+    regime: str
+    spec: P
+    red_spec: P
+    psum_axes: Tuple[str, ...]
+    local_shape: Tuple[int, ...]
+    red_total: int
+
+
+def plan_sharded_leaf(shape: Sequence[int], dtype: Any, dims: Dims, spec: Optional[P],
+                      mesh: Any, *, n_bufs: int) -> ShardLeafPlan:
+    """Classify one leaf's sharding regime and derive its shard_map specs.
+
+    ``n_bufs`` is the consuming kernel's VMEM buffer count, forwarded to the
+    local-shape :func:`repro.kernels.leaf_plan` fits-gate — a reduction line
+    that outruns VMEM globally can still fit once the *kept* dims are
+    sharded, and vice versa never (sharding only shrinks shards).
+    """
+    from ..kernels.ops import leaf_plan  # local import: kernels is heavy
+
+    shape = tuple(int(s) for s in shape)
+    dims = tuple(dims)
+    spec_e = even_spec(shape, spec, mesh)
+    lshape = local_shape(shape, spec, mesh)
+    if not dims:
+        # Dense Adam: elementwise, every shard independent.
+        return ShardLeafPlan("local", spec_e, spec_e, (), lshape, 1)
+    dset = {d % len(shape) for d in dims}
+    red_spec = masked_spec(shape, spec, mesh, dims)
+    red_total = math.prod(shape[i] for i in sorted(dset))
+    psum_axes = owning_axes(shape, spec, mesh, dims)
+    if psum_axes:
+        return ShardLeafPlan("psum", spec_e, red_spec, psum_axes, lshape, red_total)
+    plan = leaf_plan(lshape, dtype, dims, n_bufs=n_bufs, allow_transpose=False)
+    regime = "local" if plan.route in ("dense", "slim") else "jnp"
+    return ShardLeafPlan(regime, spec_e, red_spec, (), lshape, red_total)
+
+
+def plan_sharded_tree(shapes: Sequence[Tuple[int, ...]], dtypes: Sequence[Any],
+                      dims_leaves: Sequence[Dims], spec_leaves: Sequence[Optional[P]],
+                      mesh: Any, *, n_bufs: int) -> List[ShardLeafPlan]:
+    """:func:`plan_sharded_leaf` over aligned leaf lists."""
+    return [plan_sharded_leaf(s, dt, tuple(d), sp, mesh, n_bufs=n_bufs)
+            for s, dt, d, sp in zip(shapes, dtypes, dims_leaves, spec_leaves)]
+
+
+def regime_counts(plans: Sequence[ShardLeafPlan]) -> Dict[str, int]:
+    """{'local': n, 'psum': n, 'jnp': n} over a planned tree — the report the
+    dispatchers and the sharded roofline print, so a planner regression that
+    silently demotes kernel leaves to the jnp fallback is visible."""
+    out = {"local": 0, "psum": 0, "jnp": 0}
+    for pl in plans:
+        out[pl.regime] += 1
+    return out
+
+
+def sharded_pair(mesh: Any, param_specs: Any, what: str):
+    """Validate the (mesh, param_specs) pair the shard-aware fused backend
+    needs: both -> sharded path, neither -> plain path, exactly one -> warn
+    loudly and run unsharded. A silently half-specified pair would quietly
+    re-create the GSPMD-gathers-around-pallas_call perf cliff the sharded
+    path exists to remove, with no signal."""
+    import warnings
+
+    if (mesh is None) != (param_specs is None):
+        missing = "param_specs" if param_specs is None else "mesh"
+        warnings.warn(
+            f"{what}: got only one of mesh/param_specs ({missing} is None); "
+            f"the fused backend will run UNSHARDED, letting GSPMD gather "
+            f"full leaves around the Pallas kernels. Pass both to enable "
+            f"the shard_map path.", stacklevel=3)
+        return None, None
+    return mesh, param_specs
+
+
+def normalize_spec_leaves(param_specs: Any, treedef: Any, what: str) -> List[Optional[P]]:
+    """Flatten a PartitionSpec pytree (or a pre-flattened leaf-aligned
+    sequence) to a per-leaf list, validating its *structure* against
+    ``treedef`` (the flattened tree it must mirror) — a same-count but
+    differently-structured spec tree would otherwise silently pair wrong
+    specs with leaves and compute wrong sharded math."""
+    import jax
+
+    n_leaves = treedef.num_leaves
+    if param_specs is None:
+        return [None] * n_leaves
+    # None is the standard pjit idiom for 'replicated' — treat such entries
+    # as leaves (tree flattening would silently drop them as empty subtrees,
+    # turning a valid mirror into a spurious mismatch).
+    is_leaf = lambda x: x is None or isinstance(x, P)
+    leaves = jax.tree_util.tree_leaves(param_specs, is_leaf=is_leaf)
+    spec_def = jax.tree_util.tree_structure(
+        jax.tree.map(lambda _: 0, param_specs, is_leaf=is_leaf))
+    if spec_def == treedef:
+        return list(leaves)
+    # A flat leaf-aligned list/tuple is accepted as already normalized.
+    if isinstance(param_specs, (list, tuple)) and len(param_specs) == n_leaves \
+            and all(is_leaf(s) for s in param_specs):
+        return list(param_specs)
+    raise ValueError(
+        f"{what}: param_specs structure {spec_def} does not mirror the "
+        f"tree being updated ({treedef}) — build the specs with "
+        f"repro.sharding.logical.param_specs from the same parameter tree")
+
+
+def spec_dtype(x: Any) -> Any:
+    """dtype of an array or ShapeDtypeStruct leaf (fp32 fallback)."""
+    return getattr(x, "dtype", jnp.float32)

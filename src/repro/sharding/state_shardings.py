@@ -20,15 +20,34 @@ from typing import Any
 import jax
 from jax.sharding import PartitionSpec as P
 
+from ..core.baselines import AdafactorState, LionState, SM3State
 from ..core.slim_adam import ScaleBySlimAdamState
 from ..optim.adam import ScaleByAdamState
 from ..optim.base import ChainState, MultiStepsState, ScaleByScheduleState, TraceState
-from ..core.baselines import AdafactorState, LionState, SM3State
 from .logical import current
 
 
 def _like_params(spec_tree: Any) -> Any:
     return spec_tree
+
+
+def _check_mirrors(state_tree: Any, params_abstract: Any, what: str) -> None:
+    """Optimizer states derive their specs by walking the param tree in
+    lock-step; a structure mismatch (state built from a different param
+    tree, a stale checkpoint layout, a hand-rolled state) would otherwise
+    surface as a cryptic tree_map arity error deep inside jax. Raise the
+    diagnosis instead."""
+    s_def = jax.tree_util.tree_structure(state_tree)
+    p_def = jax.tree_util.tree_structure(params_abstract)
+    if s_def != p_def:
+        hint = ("the spec tree must be derived from the same parameter tree "
+                "(e.g. via repro.sharding.logical.param_specs)"
+                if what == "param_spec_tree" else
+                "the optimizer state must come from tx.init on the same "
+                "parameter tree the specs were derived for")
+        raise ValueError(
+            f"opt_state_specs: {what} does not mirror the parameter tree "
+            f"({s_def} vs params {p_def}) — {hint}.")
 
 
 def _masked_like_params(spec_tree: Any, abstract_tree: Any, params_abstract: Any) -> Any:
@@ -50,26 +69,45 @@ def _replicated(tree: Any) -> Any:
 
 
 def opt_state_specs(abstract_state: Any, params_abstract: Any, param_spec_tree: Any) -> Any:
-    """PartitionSpec pytree matching ``abstract_state``."""
+    """PartitionSpec pytree matching ``abstract_state``.
+
+    Raises ``ValueError`` (not a cryptic tree_map arity failure) when a
+    state subtree that must mirror the parameter tree does not — e.g. the
+    state was initialized from different params than the specs describe."""
+    # None is the standard pjit 'replicated' idiom — count such entries as
+    # spec leaves, not empty subtrees, when comparing structures.
+    _check_mirrors(jax.tree.map(lambda _: 0, param_spec_tree,
+                                is_leaf=lambda x: x is None or isinstance(x, P)),
+                   jax.tree.map(lambda _: 0, params_abstract),
+                   "param_spec_tree")
 
     def walk(node: Any) -> Any:
         if isinstance(node, ChainState):
             return ChainState(tuple(walk(s) for s in node.inner_states))
         if isinstance(node, ScaleBySlimAdamState):
+            if node.mu is not None:
+                _check_mirrors(node.mu, params_abstract, "ScaleBySlimAdamState.mu")
+            _check_mirrors(node.nu, params_abstract, "ScaleBySlimAdamState.nu")
             return ScaleBySlimAdamState(
                 count=P(),
                 mu=_like_params(param_spec_tree) if node.mu is not None else None,
                 nu=_masked_like_params(param_spec_tree, node.nu, params_abstract),
             )
         if isinstance(node, ScaleByAdamState):
+            _check_mirrors(node.mu, params_abstract, "ScaleByAdamState.mu")
+            _check_mirrors(node.nu, params_abstract, "ScaleByAdamState.nu")
             return ScaleByAdamState(count=P(), mu=_like_params(param_spec_tree), nu=_like_params(param_spec_tree))
         if isinstance(node, TraceState):
+            _check_mirrors(node.trace, params_abstract, "TraceState.trace")
             return TraceState(trace=_like_params(param_spec_tree))
         if isinstance(node, MultiStepsState):
+            _check_mirrors(node.acc_grads, params_abstract, "MultiStepsState.acc_grads")
             return MultiStepsState(
                 mini_step=P(), inner_state=walk(node.inner_state), acc_grads=_like_params(param_spec_tree)
             )
         if isinstance(node, AdafactorState):
+            _check_mirrors(node.vr, params_abstract, "AdafactorState.vr")
+            _check_mirrors(node.vc, params_abstract, "AdafactorState.vc")
             return AdafactorState(
                 count=P(),
                 vr=_masked_like_params_partial(param_spec_tree, node.vr, params_abstract),
@@ -82,6 +120,7 @@ def opt_state_specs(abstract_state: Any, params_abstract: Any, param_spec_tree: 
                 mom=_like_params(param_spec_tree),
             )
         if isinstance(node, LionState):
+            _check_mirrors(node.mu, params_abstract, "LionState.mu")
             return LionState(mu=_like_params(param_spec_tree))
         if isinstance(node, ScaleByScheduleState):
             return ScaleByScheduleState(count=P())

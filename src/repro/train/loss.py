@@ -1,7 +1,7 @@
 """Losses: causal-LM cross entropy (fp32 logsumexp) + encoder CE."""
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

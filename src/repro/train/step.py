@@ -7,7 +7,7 @@ pure function lowered by both the real trainer and the dry-run:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,14 @@ def make_train_step(cfg, tx: GradientTransformation, *, forward_fn=None,
     ``grad_shardings``: optional NamedSharding pytree (like params) pinned
     onto the gradient tree — without it GSPMD may propagate gradients
     replicated over the TP axis (measured: 12 GiB/device vs 0.5 GiB for a
-    67B model on a 256-chip mesh)."""
+    67B model on a 256-chip mesh).
+
+    Sharded fused backend: when ``tx`` was built with ``backend='fused'``
+    plus ``mesh``/``param_specs`` (see ``repro.train.trainer.make_optimizer``
+    and the launchers), the ``tx.update`` inside this step runs under
+    ``shard_map`` — pin ``grad_shardings`` to the same specs so the gradient
+    tree arrives already laid out for the per-shard kernels and the
+    shard_map boundary inserts no resharding collectives."""
     fwd = forward_fn or transformer.forward
 
     def pin(tree):

@@ -7,16 +7,12 @@ the same code path (the launcher supplies shardings).
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
-from pathlib import Path
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .. import optim
 from ..checkpoint import store
 from ..core import (
     SNRTracker,
@@ -35,8 +31,7 @@ from ..core.baselines import (
     sm3,
 )
 from ..core.slim_adam import slim_adam
-from ..data.pipeline import DataConfig, ZipfLM
-from ..models import transformer
+from ..data.pipeline import ZipfLM
 from ..optim.adam import adamw, sgdm
 from .step import make_eval_step, make_train_step
 
@@ -47,14 +42,18 @@ OPTIMIZERS = ("adam", "slim", "slim_snr", "adalayer", "adalayer_ln_tl",
 
 def make_optimizer(name: str, lr, params, meta, *, weight_decay: float = 0.1,
                    b1: float = 0.9, b2: float = 0.95, grad_clip: float = 1.0,
-                   rules: Optional[Dict[str, Any]] = None, backend: str = "jnp"):
+                   rules: Optional[Dict[str, Any]] = None, backend: str = "jnp",
+                   mesh=None, param_specs=None):
     """Build any of the paper's optimizers. ``rules`` overrides the rule set
     for 'slim_snr' (derived from a measured SNR pass). ``backend`` selects
     the execution path for the Adam/SlimAdam family ('jnp' | 'fused' |
-    'auto', see repro.optim.base.BACKENDS); other optimizers ignore it."""
+    'auto', see repro.optim.base.BACKENDS); other optimizers ignore it.
+    ``mesh``/``param_specs`` make the fused backend shard-aware (the tree
+    update runs under shard_map on the local shards); only the Adam/SlimAdam
+    family consumes them."""
     if name == "adam":
         return adamw(lr, b1=b1, b2=b2, weight_decay=weight_decay, grad_clip=grad_clip,
-                     backend=backend)
+                     backend=backend, mesh=mesh, param_specs=param_specs)
     if name in ("slim", "slim_snr", "adalayer", "adalayer_ln_tl", "adam_mini_v1", "adam_mini_v2"):
         if name == "slim":
             r = table3_rules(meta)
@@ -72,7 +71,8 @@ def make_optimizer(name: str, lr, params, meta, *, weight_decay: float = 0.1,
             r = adam_mini_v2_rules(meta)
         dims = rules_as_tree(r, params, meta)
         return slim_adam(lr, dims, b1=b1, b2=b2, weight_decay=weight_decay,
-                         grad_clip=grad_clip, backend=backend)
+                         grad_clip=grad_clip, backend=backend, mesh=mesh,
+                         param_specs=param_specs)
     if name == "adafactor":
         return adafactor(lr, weight_decay=weight_decay, grad_clip=grad_clip)
     if name == "adafactor_v2":
@@ -137,6 +137,17 @@ class Trainer:
         okw = dict(optimizer_kw or {})
         okw.setdefault("backend", tc.backend)
         self.backend = okw["backend"]  # one backend for update + SNR pass
+        # Under an active ShardingContext the optimizer and the SNR pass get
+        # the mesh + param specs, so the fused backend and the SNR
+        # measurement run shard-aware (shard_map) instead of letting GSPMD
+        # gather leaves around the Pallas optimization barriers.
+        from ..sharding.logical import current as current_sharding, param_specs
+
+        ctx = current_sharding()
+        self.mesh = ctx.mesh if ctx is not None else None
+        self.param_specs = param_specs(self.meta, self.params) if ctx is not None else None
+        okw.setdefault("mesh", self.mesh)
+        okw.setdefault("param_specs", self.param_specs)
         self.tx = make_optimizer(optimizer_name, lr, self.params, self.meta,
                                  rules=rules, **okw)
         self.opt_state = self.tx.init(self.params)
@@ -174,7 +185,8 @@ class Trainer:
         nu = find_adam_nu(self.opt_state)
         if nu is None:
             return
-        snapshot = measure_tree_snr(nu, self.meta, backend=self.backend)
+        snapshot = measure_tree_snr(nu, self.meta, backend=self.backend,
+                                    mesh=self.mesh, param_specs=self.param_specs)
         self.snr.update(snapshot, self.step)
 
     # -- main loop -----------------------------------------------------------

@@ -10,6 +10,9 @@ but the property still executes on boundary and interior points.
 import functools
 import inspect
 
+# Re-exports: test modules do `from _hyp import given, settings, st`.
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

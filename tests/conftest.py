@@ -1,9 +1,31 @@
 import pytest
 
+# Markers (`slow`, `multidevice`) are registered in pyproject.toml
+# [tool.pytest.ini_options] so plain `pytest` runs emit no unknown-marker
+# warnings; this hook only implements the multidevice auto-skip.
 
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers",
-        "slow: slowest cases (multi-device subprocess tests, long trainer "
-        "loops); deselect with -m 'not slow' for a quick local loop — CI "
-        "always runs the full suite, parallelized via pytest-xdist")
+
+def _multidevice_possible() -> bool:
+    """The multidevice tests spawn a child process on the CPU backend with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 (the pattern in
+    tests/test_sharding.py), so they run fine in single-device environments
+    — all they need is a CPU jax backend to host the forced devices, or a
+    session that already has >= 8 real devices."""
+    try:
+        import jax
+
+        return jax.device_count() >= 8 or any(
+            d.platform == "cpu" for d in jax.devices())
+    except Exception:
+        return False
+
+
+def pytest_collection_modifyitems(config, items):
+    if _multidevice_possible():
+        return
+    skip = pytest.mark.skip(
+        reason="needs >= 8 devices or a CPU backend to host the forced-"
+               "host-device child process")
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)

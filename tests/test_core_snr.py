@@ -9,8 +9,6 @@ from repro.core import (
     ParamMeta,
     SNRTracker,
     derive_rules,
-    measure_leaf_snr,
-    measure_tree_snr,
     rules_as_tree,
     second_moment_savings,
     snr_along_dims,

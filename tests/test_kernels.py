@@ -8,7 +8,7 @@ from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core.snr import snr_along_dims
 from repro.kernels import fused_adam_op, slim_update_op, snr_op
-from repro.kernels.ref import adam_update_ref, slim_update_ref, snr_from_stats, snr_stats_ref
+from repro.kernels.ref import adam_update_ref, slim_update_ref, snr_stats_ref
 from repro.kernels.snr_stats import snr_stats
 
 SHAPES = [(16, 128), (128, 256), (100, 300), (257, 129), (8, 1024)]

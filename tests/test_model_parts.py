@@ -6,8 +6,8 @@ import pytest
 from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.models.attention import chunked_attention, dense_attention, flash_attention
+from repro.models.common import init_params, layer_norm, normal_init, rms_norm
 from repro.models.mlp_moe import MoEConfig, moe_forward, moe_specs
-from repro.models.common import init_params, layer_norm, meta_tree, normal_init, rms_norm
 from repro.models.ssm import selective_scan
 
 

@@ -3,16 +3,13 @@ subprocess so the main pytest process keeps its single real CPU device)."""
 import json
 import subprocess
 import sys
-import textwrap
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.core import ParamMeta
 from repro.sharding.logical import ShardingContext, default_rules
 
 
@@ -85,7 +82,6 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_reduced
 from repro.core import rules_as_tree, table3_rules
@@ -153,7 +149,6 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
 import jax, jax.numpy as jnp
-import numpy as np
 from repro.sharding.pipeline import gpipe, sequential_reference
 
 mesh = jax.make_mesh((4,), ("pipe",))

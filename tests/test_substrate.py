@@ -1,11 +1,10 @@
 """Data pipeline, checkpointing (incl. resharding restore), trainer, serving."""
 import time
 
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.checkpoint import store
 from repro.configs import get_reduced
@@ -67,7 +66,6 @@ class TestCheckpoint:
         for s in (10, 20, 30, 40):
             store.save(tmp_path, s, t, keep=2)
         assert store.latest_step(tmp_path) == 40
-        import os
         kept = sorted(p.name for p in tmp_path.glob("step_*"))
         assert kept == ["step_00000030", "step_00000040"]
 
