@@ -65,3 +65,29 @@ def write_csv(name: str, rows: List[Dict[str, Any]]):
 def emit(name: str, us_per_call: float, derived: str):
     """The harness contract: one ``name,us_per_call,derived`` CSV line."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def append_bench_history(bench: str, metrics: Dict[str, Any],
+                         name: str = "BENCH_opt_speed.json"):
+    """Append one machine-readable perf-trajectory entry to
+    ``results/<name>`` (a JSON list; one element per bench invocation with a
+    timestamp). The CSVs are per-run snapshots that each run overwrites —
+    this file is the *history* `make bench` accretes, so a perf regression
+    shows up as a trajectory, not a diff someone has to remember to take.
+    A corrupt or missing file starts a fresh list rather than failing the
+    bench."""
+    import json
+    import time
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / name
+    try:
+        history = json.loads(path.read_text())
+        if not isinstance(history, list):
+            raise ValueError("history root must be a list")
+    except (OSError, ValueError):
+        history = []
+    history.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                    "bench": bench, "metrics": metrics})
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return path

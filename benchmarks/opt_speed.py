@@ -20,7 +20,7 @@ from repro.kernels import fused_adam_op, slim_update_op
 from repro.kernels.ref import adam_update_ref, slim_update_ref
 from repro.optim import scale_by_adam
 
-from .common import emit, write_csv
+from .common import append_bench_history, emit, write_csv
 
 HBM_BW = 819e9
 
@@ -72,6 +72,10 @@ def main(preset: str = "quick"):
     emit("opt_speed", t_jnp_adam[0],
          f"slim streams {slim_bytes/adam_bytes:.2f}x of adam bytes -> "
          f"projected v5e {slim_bytes/HBM_BW*1e6:.1f}us vs {adam_bytes/HBM_BW*1e6:.1f}us per {r}x{c} tensor")
+    append_bench_history("opt_speed", {
+        "preset": preset, "shape": [r, c],
+        "rows": rows, "slim_to_adam_bytes": round(slim_bytes / adam_bytes, 4),
+    })
     return rows
 
 
@@ -205,6 +209,11 @@ def tree_main(preset: str = "quick"):
          f"5/7={5/7:.3f} tensor-pass floor ({tf_ratio:.3f}x bytes incl. "
          f"O(kept) reduced moments) -> "
          f"projected v5e {f_slim/HBM_BW*1e3:.2f}ms vs {f_adam/HBM_BW*1e3:.2f}ms")
+    append_bench_history("opt_speed_tree", {
+        "preset": preset, "rows": rows,
+        "full_apply_slim_to_adam_bytes": round(f_slim / f_adam, 5),
+        "transpose_free_ratio": round(tf_ratio, 5),
+    })
     return rows
 
 
@@ -249,14 +258,80 @@ def roofline_check() -> int:
 # Sharded per-leaf full-size pass counts (the full-apply 7/5 model of
 # `_tree_bytes`, regime-adjusted):
 #   local  — the unchanged slim kernel on the local shard: 5 passes + O(kept)
-#   psum   — still 5: the lax.psum splits the leaf into two passes, but the
-#            first-moment update rides in the partial-sums pass (read g, m;
-#            write m') and the finalize reads m' instead of g — see
-#            repro.optim.fused._psum_slim_leaf. The collective itself is
-#            ICI traffic, charged separately.
-#   jnp    — reference math per shard; XLA materializes the g^2 round-trip
-#            (+2 local passes), the analogue of the transpose surcharge
+#   psum   — still 5, now Pallas-resident end to end: slim_partial_stats
+#            (read g, m; write m') -> lax.psum -> slim_finalize (read m';
+#            write update), see repro.optim.fused._psum_slim_leaf. The
+#            collective itself is ICI traffic, charged separately.
+#   jnp    — reference math per shard ('psum_jnp' finalize fallbacks charge
+#            the same 5 + the psum ICI); interleaved-K leaves: XLA
+#            materializes the g^2 round-trip (+2 local passes), the
+#            analogue of the transpose surcharge
+#
+# O(kept) moment terms: a psum leaf with an owner placement stores v as a
+# 1/A owner slice (A = the placed psum-group factor) — the write *and* the
+# next step's read are deduped, and the broadcast back to full lines rides
+# the partial-sums all-reduce (each shard folds b2*v for its owned lines
+# into the payload), so ICI is unchanged. Transient O(kept) line buffers
+# around the collective (partial sums, the psum output) are not charged,
+# consistent with the PR-4 model.
 _SHARDED_PASSES = {"local": 5, "psum": 5, "jnp": 7}
+
+def _snr_stat_lines():
+    """Per-regime extra-output counts of the with_snr kernel variants,
+    derived from the kernels themselves (``jax.eval_shape`` of a small
+    canonical leaf with and without ``with_snr``), plus a structural check
+    that every extra output is line-shaped — the fused-SNR claim is
+    precisely that a measure step adds O(kept) stat lines and zero
+    full-size passes, so the gate must observe the kernels' actual output
+    signatures, not a constant that restates the model's own assumption.
+
+    Returns ({'psum': n, 'local': n, 'jnp': n}, full_size_outputs) where a
+    non-empty second element means a with_snr variant grew a full-size
+    output (the gate fails on it)."""
+    import math
+
+    from repro.kernels.slim_update import (slim_partial_stats_batched,
+                                           slim_precond_batched)
+
+    g = jax.ShapeDtypeStruct((2, 8, 128), jnp.float32)
+    v = jax.ShapeDtypeStruct((2, 8, 1), jnp.float32)
+    full = math.prod(g.shape)
+
+    def extra(base_fn, snr_fn):
+        base = jax.tree.leaves(jax.eval_shape(base_fn))
+        snr = jax.tree.leaves(jax.eval_shape(snr_fn))
+        return snr[len(base):]
+
+    partial = extra(
+        lambda: slim_partial_stats_batched(g, g, axis=1, interpret=True),
+        lambda: slim_partial_stats_batched(g, g, axis=1, with_snr=True,
+                                           interpret=True))
+    precond = extra(
+        lambda: slim_precond_batched(g, g, v, axis=1, interpret=True),
+        lambda: slim_precond_batched(g, g, v, axis=1, with_snr=True,
+                                     interpret=True))
+    oversize = [tuple(o.shape) for o in partial + precond
+                if math.prod(o.shape) >= full]
+    # jnp-fallback leaves fuse the same centered sums into the XLA pass —
+    # charge them like the single-kernel (local) form.
+    return ({"psum": len(partial), "local": len(precond),
+             "jnp": len(precond)}, oversize)
+
+# CI gate ceilings (tightened for the owner-write scheme; see ROADMAP's
+# sharded roofline record for the decomposition):
+#   compressed-leaf per-shard ratio — the paper-relevant figure: compressed
+#   leaves stream ~0.7150x of per-shard dense Adam on the production mesh
+#   (5/7 = 0.7143 floor + the O(kept) terms the owner dedupe cannot remove,
+#   chiefly embed's non-256-divisible vocab).
+_GATE_COMPRESSED_RATIO = 0.716
+#   full-tree per-shard ratio — includes the dense K=() leaves (norm scales,
+#   pos_embed), whose relative weight is ~3.5x larger per shard than on a
+#   single device (embed shards 256x, pos_embed only 16x), which is why
+#   this sits above the single-device 0.715 record. 0.72166 achieved.
+_GATE_FULL_RATIO = 0.722
+#   fused-SNR measure-step delta must stay O(kept): bounded by 4 stat lines
+#   per compressed leaf's kept bytes.
+_GATE_SNR_LINES = 4
 
 
 def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16))) -> int:
@@ -270,39 +345,54 @@ def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16
     (ring all-reduce: ``2 * (A-1)/A`` of the O(kept_local) stats per hop
     direction, ``ICI_BW_PER_LINK`` in ``repro.launch.mesh``).
 
-    With ``check=True`` this is the CI gate: every leaf whose single-device
-    plan is transpose-free must stream per-shard bytes <= single-device
-    bytes / min(per-dim shard counts) — i.e. sharding the tree must never
-    *inflate* a shard's traffic past an even split of the unsharded leaf."""
+    With ``check=True`` this is the CI gate, failing when:
+
+      * any transpose-free leaf streams more than single-device bytes /
+        min(per-dim shard counts) — sharding must never *inflate* a shard's
+        traffic past an even split of the unsharded leaf;
+      * any psum leaf falls back to the jnp finalize (``regime_counts``
+        reports 'psum_jnp' > 0) — the psum regime must stay Pallas-resident;
+      * the compressed-leaf per-shard ratio exceeds
+        ``_GATE_COMPRESSED_RATIO`` or the full-tree ratio exceeds
+        ``_GATE_FULL_RATIO`` — the owner-write dedupe must hold;
+      * a fused-SNR measure step adds more than ``_GATE_SNR_LINES`` O(kept)
+        stat lines per compressed leaf over a plain update step — the
+        from-update measurement must stay O(kept).
+    """
     import math
 
     from repro.kernels import canon_nd
     from repro.kernels.slim_update import PRECOND_BUFS
     from repro.launch.mesh import ICI_BW_PER_LINK
     from repro.sharding.logical import ShardingContext
-    from repro.sharding.shardspec import SpecMesh, dim_shards, plan_sharded_leaf
+    from repro.sharding.shardspec import (SpecMesh, dim_shards, owner_factor,
+                                          plan_sharded_leaf, regime_counts)
 
     mesh = SpecMesh(dict(mesh_shape))
     ctx = ShardingContext(mesh)
     full, params_full, named, dfl, metas = _gpt_small_full_leaves()
+    snr_lines, snr_oversize = _snr_stat_lines()
 
     rows = []
     failures = []
+    plans = []
     tot_hbm = tot_ici = tot_dense_local = 0
-    counts = {"local": 0, "psum": 0, "jnp": 0}
+    comp_hbm = comp_dense_local = 0
+    snr_extra = kept_total = 0
     for (name, p), dims, m in zip(named, dfl, metas):
         shape = tuple(p.shape)
         n_single = math.prod(shape) * 4
         spec = ctx.spec_for(m.axes, shape)
         factors = dim_shards(shape, spec, mesh)
         local_n = math.prod(s // f for s, f in zip(shape, factors)) * 4
+        owner = 1
         if not dims:
             single = 7 * n_single
             hbm, ici, regime, tf = 7 * local_n, 0.0, "dense", True
         else:
             plan = plan_sharded_leaf(shape, jnp.float32, dims, spec, mesh,
                                      n_bufs=PRECOND_BUFS)
-            counts[plan.regime] += 1
+            plans.append(plan)
             regime = plan.regime
             dset = {d % len(shape) for d in dims}
             kept_local = math.prod(
@@ -312,11 +402,19 @@ def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16
             single = 5 * n_single + 2 * (cn.kept_size * 4)
             if not tf:
                 single += 2 * 5 * n_single
-            hbm = _SHARDED_PASSES[plan.regime] * local_n + 2 * kept_local
+            # Owner-shard moment storage: the persistent v read + write
+            # shrink by the placed psum-group factor; the broadcast rides
+            # the existing all-reduce, so ICI is unchanged.
+            owner = owner_factor(plan, mesh) if plan.regime == "psum" else 1
+            hbm = _SHARDED_PASSES[plan.regime] * local_n + 2 * kept_local // owner
             ici = 0.0
             if plan.regime == "psum":
                 a = math.prod(mesh.shape[ax] for ax in plan.psum_axes)
                 ici = 2.0 * (a - 1) / a * kept_local
+            snr_extra += snr_lines[plan.regime] * kept_local
+            kept_total += kept_local
+            comp_hbm += hbm
+            comp_dense_local += 7 * local_n
         tot_hbm += hbm
         tot_ici += ici
         tot_dense_local += 7 * local_n
@@ -331,32 +429,76 @@ def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16
         rows.append({
             "name": name, "shape": str(shape), "K": str(dims), "spec": str(spec),
             "regime": regime, "shards": int(math.prod(factors)),
+            "owner_dedupe": owner,
             "hbm_bytes_per_shard": int(hbm), "ici_bytes_per_shard": int(ici),
             "single_device_bytes": int(single),
             "bound_bytes": int(bound), "within_bound": ok,
         })
     write_csv("opt_speed_sharded.csv", rows)
+    counts = regime_counts(plans)
     n_chips = math.prod(dict(mesh_shape).values())
     ratio = tot_hbm / tot_dense_local
+    comp_ratio = comp_hbm / comp_dense_local if comp_dense_local else 1.0
     print(f"{full.name} on {dict(mesh_shape)} ({n_chips} chips): compressed "
           f"regimes {counts}; per-shard HBM {tot_hbm/2**20:.2f} MiB "
-          f"({ratio:.3f}x of per-shard dense Adam), ICI {tot_ici/2**10:.1f} KiB "
-          f"(psum lines only)")
+          f"({ratio:.4f}x of per-shard dense Adam full-tree; compressed "
+          f"leaves {comp_ratio:.4f}x), ICI {tot_ici/2**10:.1f} KiB charged "
+          f"separately (psum lines; owner-slice broadcasts ride the same "
+          f"all-reduce)")
+    print(f"fused-SNR measure step: +{snr_extra/2**10:.1f} KiB O(kept) stat "
+          f"lines ({snr_extra/tot_hbm*100:.2f}% of a plain update step; zero "
+          f"extra full-size passes)")
     proj_us = (tot_hbm / HBM_BW + tot_ici / ICI_BW_PER_LINK) * 1e6
     emit("opt_speed_sharded", proj_us,
-         f"per-shard fused slim step streams {ratio:.3f}x of per-shard dense-"
-         f"Adam bytes on the ({'x'.join(str(v) for v in dict(mesh_shape).values())}) mesh; "
+         f"per-shard fused slim step streams {comp_ratio:.4f}x of per-shard "
+         f"dense-Adam bytes over the compressed leaves ({ratio:.4f}x full "
+         f"tree) on the ({'x'.join(str(v) for v in dict(mesh_shape).values())}) mesh; "
          f"psum ICI traffic {tot_ici/2**10:.1f} KiB/step -> projected v5e "
          f"{proj_us:.1f}us/step/chip")
+    append_bench_history("opt_speed_sharded", {
+        "mesh": dict(mesh_shape), "hbm_ratio_full_tree": round(ratio, 5),
+        "hbm_ratio_compressed": round(comp_ratio, 5),
+        "hbm_mib_per_shard": round(tot_hbm / 2**20, 3),
+        "ici_kib_per_shard": round(tot_ici / 2**10, 2),
+        "proj_us_per_step_chip": round(proj_us, 2),
+        "snr_extra_kib": round(snr_extra / 2**10, 2),
+        "regimes": counts,
+    })
     if check:
+        bad = []
         if failures:
-            print(f"SHARDED ROOFLINE REGRESSION: {len(failures)} transpose-free "
-                  f"leaf/leaves exceed single-device bytes / min(shard counts):")
-            for name, shape, dims, got, bound in failures:
-                print(f"  {name} {shape} K={dims}: {got:.0f} > {bound:.0f}")
+            bad.append(f"{len(failures)} transpose-free leaf/leaves exceed "
+                       f"single-device bytes / min(shard counts): " +
+                       "; ".join(f"{n} {s} K={d}: {g:.0f} > {b:.0f}"
+                                 for n, s, d, g, b in failures))
+        if counts.get("psum_jnp", 0):
+            bad.append(f"{counts['psum_jnp']} psum leaf/leaves regressed to "
+                       f"the jnp finalize fallback (regime_counts={counts}) — "
+                       f"the psum regime must stay Pallas-resident")
+        if comp_ratio > _GATE_COMPRESSED_RATIO:
+            bad.append(f"compressed-leaf per-shard ratio {comp_ratio:.4f} > "
+                       f"{_GATE_COMPRESSED_RATIO} — owner-write dedupe regressed")
+        if ratio > _GATE_FULL_RATIO:
+            bad.append(f"full-tree per-shard ratio {ratio:.4f} > {_GATE_FULL_RATIO}")
+        if snr_oversize:
+            bad.append(f"a with_snr kernel variant emits full-size extra "
+                       f"output(s) {snr_oversize} — the from-update SNR must "
+                       f"add only O(kept) stat lines")
+        if snr_extra > _GATE_SNR_LINES * kept_total:
+            bad.append(f"fused-SNR measure-step delta {snr_extra} B "
+                       f"({max(snr_lines.values())} stat lines per leaf, from "
+                       f"the kernels' with_snr signatures) exceeds "
+                       f"{_GATE_SNR_LINES} O(kept) lines "
+                       f"({_GATE_SNR_LINES * kept_total} B) — no longer O(kept)")
+        if bad:
+            print("SHARDED ROOFLINE REGRESSION:")
+            for b in bad:
+                print(f"  {b}")
             return 1
-        print("sharded roofline OK: every transpose-free leaf streams <= "
-              "single-device bytes / min(shard counts) per shard")
+        print(f"sharded roofline OK: per-shard byte bound holds, psum regime "
+              f"Pallas-resident ({counts['psum']} leaves, 0 jnp fallbacks), "
+              f"compressed ratio {comp_ratio:.4f} <= {_GATE_COMPRESSED_RATIO}, "
+              f"fused-SNR delta O(kept)")
     return 0
 
 

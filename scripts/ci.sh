@@ -8,11 +8,17 @@
 #   scripts/ci.sh test-fast       pytest -m "not slow" (quick tier)
 #   scripts/ci.sh test-full       full pytest suite
 #   scripts/ci.sh bench-roofline  analytic roofline gates: transpose-free
-#                                 planner + per-shard sharded byte bound
+#                                 planner + the sharded gate (per-shard byte
+#                                 bound, zero psum-finalize jnp fallbacks,
+#                                 compressed-leaf ratio <= 0.716 under the
+#                                 owner-write scheme, fused-SNR measure-step
+#                                 delta O(kept))
 #   scripts/ci.sh bench-quick     just the optimizer benches (opt_speed,
 #                                 opt_speed_tree, opt_speed_sharded)
 #   scripts/ci.sh bench           full quick-preset benchmark sweep
-#                                 (writes benchmarks/results/*.csv)
+#                                 (writes benchmarks/results/*.csv and
+#                                 appends the machine-readable perf
+#                                 trajectory BENCH_opt_speed.json)
 #   scripts/ci.sh all  (default)  lint + test-full + bench-roofline + the
 #                                 quick optimizer benches (the tier-1 gate)
 #
@@ -70,7 +76,12 @@ run_test_full() {
 
 run_bench_roofline() {
   require_jax
+  # Single-device planner gate: every gpt_small leaf transpose-free.
   python -m benchmarks.opt_speed --check-roofline
+  # Sharded gate on the production (16x16) mesh: per-shard byte bound,
+  # psum regime fully Pallas-resident (regime_counts psum_jnp == 0),
+  # compressed-leaf ratio <= 0.716 (owner-shard moment writes), and the
+  # fused-SNR measure-step delta bounded to O(kept) stat lines.
   python -m benchmarks.opt_speed --check-roofline --sharded
 }
 

@@ -37,6 +37,13 @@ class ScaleBySlimAdamState(NamedTuple):
     count: jnp.ndarray
     mu: PyTree          # first moments, full shape (fp32)
     nu: PyTree          # second moments, reduced over K (size-1 kept dims, fp32)
+    # From-update SNR snapshot: a params-structured pytree of scalars (None
+    # for K = () leaves), populated only by transformations built with
+    # ``emit_snr=True`` — the paper's compressibility diagnostic riding the
+    # update pass (SNR_K of b2*V + (1-b2)*g^2) instead of a separate nu
+    # read. None (an empty subtree) otherwise, so ordinary states carry no
+    # extra leaves.
+    snr: PyTree = None
 
 
 def _reduced_zeros(p: jnp.ndarray, dims: Dims) -> jnp.ndarray:
@@ -64,12 +71,22 @@ def scale_by_slim_adam(
     bucket_min_size: int = fused.DEFAULT_BUCKET_MIN,
     mesh=None,
     param_specs=None,
+    emit_snr: bool = False,
 ) -> GradientTransformation:
     """Adam preconditioner with mean-shared second moments along per-leaf dims.
 
     ``dims_tree``: pytree with the *same structure as params*, each leaf a
     (possibly empty) tuple of reduction dims. Tuples are static — they shape
     the state pytree at init.
+
+    ``emit_snr=True`` makes each update also measure the from-update SNR of
+    every compressed leaf (SNR_K of the dense reconstruction
+    ``b2*V + (1-b2)*g^2``) and publish it on ``state.snr`` — on the fused
+    backend the stats ride the update kernels' strip loops, so a measure
+    step adds only O(kept) HBM traffic over a plain step (the jnp backend
+    fuses them into the same XLA pass). Build a *second* transformation with
+    this flag for measure steps and reuse the same state: the two update
+    functions share state layout apart from ``snr``.
 
     ``backend`` selects the execution path (``repro.optim.base.BACKENDS``):
     'fused' routes K != () leaves through the slim Pallas kernel (any
@@ -113,18 +130,20 @@ def scale_by_slim_adam(
         d_leaves = [tuple(d) for d in treedef.flatten_up_to(dims_tree)]
         nu_leaves = treedef.flatten_up_to(state.nu)
 
+        unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
         if backend_r == "fused":
             mu_leaves = treedef.flatten_up_to(state.mu) if use_first_moment else None
             spec_leaves = (None if mesh is None else normalize_spec_leaves(
                 param_specs, treedef, "scale_by_slim_adam"))
-            u, mu_l, nu_l = fused.slim_tree_update(
+            out = fused.slim_tree_update(
                 g_leaves, mu_leaves, nu_leaves, d_leaves, b1=b1, b2=b2,
                 eps=eps, count=count, use_first_moment=use_first_moment,
-                bucket_min_size=bucket_min_size, mesh=mesh, spec_leaves=spec_leaves)
-            unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+                bucket_min_size=bucket_min_size, mesh=mesh,
+                spec_leaves=spec_leaves, emit_snr=emit_snr)
+            u, mu_l, nu_l = out[:3]
             return unflat(u), ScaleBySlimAdamState(
                 count=count, mu=unflat(mu_l) if use_first_moment else None,
-                nu=unflat(nu_l))
+                nu=unflat(nu_l), snr=unflat(out[3]) if emit_snr else None)
 
         # Per-leaf reference math shared with the fused backend's fallback
         # leaves — one definition of the semantics oracle.
@@ -132,12 +151,16 @@ def scale_by_slim_adam(
         outs = [fused.jnp_slim_leaf(g, m, v, dims, b1=b1, b2=b2, eps=eps,
                                     count=count, use_first_moment=use_first_moment)
                 for g, m, v, dims in zip(g_leaves, mu_leaves, nu_leaves, d_leaves)]
-        mu_out = (jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
-                  if use_first_moment else None)
+        mu_out = unflat([o[1] for o in outs]) if use_first_moment else None
+        snr = None
+        if emit_snr:
+            snr = unflat([fused.jnp_update_snr_leaf(g, o[2], dims, b2=b2)
+                          if dims else None
+                          for g, o, dims in zip(g_leaves, outs, d_leaves)])
         return (
-            jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs]),
+            unflat([o[0] for o in outs]),
             ScaleBySlimAdamState(count=count, mu=mu_out,
-                                 nu=jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])),
+                                 nu=unflat([o[2] for o in outs]), snr=snr),
         )
 
     return GradientTransformation(init_fn, update_fn)
@@ -154,18 +177,21 @@ def slim_adam(
     backend: str = "jnp",
     mesh=None,
     param_specs=None,
+    emit_snr: bool = False,
 ) -> GradientTransformation:
     """Drop-in AdamW recipe with SlimAdam's compressed preconditioner.
 
     Uses the *same* hyperparameters as Adam — the paper's requirement that
-    users can swap optimizers without re-tuning. ``mesh``/``param_specs``
-    thread to :func:`scale_by_slim_adam` for the shard-aware fused backend.
+    users can swap optimizers without re-tuning. ``mesh``/``param_specs``/
+    ``emit_snr`` thread to :func:`scale_by_slim_adam` for the shard-aware
+    fused backend and the from-update SNR measurement.
     """
     parts = []
     if grad_clip is not None:
         parts.append(clip_by_global_norm(grad_clip))
     parts.append(scale_by_slim_adam(dims_tree, b1=b1, b2=b2, eps=eps, backend=backend,
-                                    mesh=mesh, param_specs=param_specs))
+                                    mesh=mesh, param_specs=param_specs,
+                                    emit_snr=emit_snr))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
     parts.append(scale_by_learning_rate(learning_rate))

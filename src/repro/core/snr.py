@@ -210,7 +210,8 @@ def measure_leaf_snr_per_layer(v: jnp.ndarray, meta: ParamMeta) -> Dict[str, jnp
 
 
 def measure_tree_snr(nu: Any, meta: Any, *, backend: str = "jnp",
-                     mesh=None, param_specs=None) -> Dict[str, Dict[str, jnp.ndarray]]:
+                     mesh=None, param_specs=None, from_update: Any = None,
+                     update_dims: Any = None) -> Dict[str, Dict[str, jnp.ndarray]]:
     """{param_name: {K_label: snr}} over a whole second-moment pytree.
 
     Leaves whose meta marks them vector-like produce an empty dict (the paper
@@ -222,6 +223,16 @@ def measure_tree_snr(nu: Any, meta: Any, *, backend: str = "jnp",
     correct when the moments live sharded on an FSDP x TP mesh — candidate
     Ks whose dims are split across devices psum their centered stats instead
     of silently measuring per-shard slices.
+
+    ``from_update`` + ``update_dims`` consume SNR scalars that rode the
+    optimizer's update pass (``scale_by_slim_adam(emit_snr=True)`` publishes
+    them on ``state.snr``; ``update_dims`` is the optimizer's per-leaf
+    reduction-dims pytree): for each leaf, the candidate K whose dims equal
+    the leaf's update K takes the ridden value — no nu read at all for that
+    candidate — and only the remaining candidates fall back to the standard
+    measurement. For a SlimAdam run this removes the measure step's extra
+    pass over every compressed leaf; K = () leaves (dense-stored moments)
+    always use the standard path.
     """
     nu_named, nu_def = flatten_with_names(nu)
     meta_named, _ = flatten_with_names(meta)
@@ -233,9 +244,37 @@ def measure_tree_snr(nu: Any, meta: Any, *, backend: str = "jnp",
         if mesh is not None:
             spec_leaves = normalize_spec_leaves(param_specs, nu_def,
                                                 "measure_tree_snr")
+    ridden: Dict[str, Tuple[Any, Tuple[int, ...]]] = {}
+    if from_update is not None:
+        if update_dims is None:
+            raise ValueError("measure_tree_snr: from_update needs update_dims "
+                             "(the optimizer's per-leaf reduction-dims pytree)")
+        from .labels import path_str
+
+        def named(tree, is_leaf):
+            kv = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
+            return [(path_str(p), v) for p, v in kv]
+
+        dims_by_name = dict(named(update_dims, lambda x: isinstance(x, tuple)))
+        for name, s in named(from_update, lambda x: x is None):
+            if s is not None and name in dims_by_name:
+                ridden[name] = (s, tuple(dims_by_name[name]))
     out: Dict[str, Dict[str, jnp.ndarray]] = {}
     for (name, v), (_, m), spec in zip(nu_named, meta_named, spec_leaves):
-        out[name] = measure_leaf_snr(v, m, backend=backend, mesh=mesh, spec=spec)
+        if name in ridden:
+            s_val, s_dims = ridden[name]
+            leaf_out: Dict[str, jnp.ndarray] = {}
+            for label, axis_names in m.candidate_ks().items():
+                dims = tuple(m.dims_of(axis_names))
+                if tuple(sorted(d % v.ndim for d in dims)) == \
+                        tuple(sorted(d % v.ndim for d in s_dims)):
+                    leaf_out[label] = s_val
+                else:
+                    leaf_out[label] = snr_along_dims(v, dims, backend=backend,
+                                                     mesh=mesh, spec=spec)
+            out[name] = leaf_out
+        else:
+            out[name] = measure_leaf_snr(v, m, backend=backend, mesh=mesh, spec=spec)
     return out
 
 

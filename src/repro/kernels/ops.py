@@ -44,6 +44,10 @@ from .ref import snr_from_centered_stats
 from .slim_update import (
     PRECOND_BUFS,
     UPDATE_BUFS,
+    slim_finalize,
+    slim_finalize_batched,
+    slim_partial_stats,
+    slim_partial_stats_batched,
     slim_precond,
     slim_precond_batched,
     slim_precond_major,
@@ -64,7 +68,9 @@ from .tiling import strip_fits
 __all__ = ["fused_adam_op", "slim_update_op", "slim_update_nd", "snr_op",
            "snr_partial_op", "fused_adam", "slim_update", "slim_update_major",
            "slim_update_batched", "adam_precond", "slim_precond",
-           "slim_precond_major", "slim_precond_batched", "snr_stats",
+           "slim_precond_major", "slim_precond_batched",
+           "slim_partial_stats", "slim_partial_stats_batched",
+           "slim_finalize", "slim_finalize_batched", "snr_stats",
            "snr_stats_centered", "snr_stats_centered_major",
            "snr_stats_centered_batched", "snr_stats_centered_partial",
            "snr_stats_centered_partial_batched", "CanonND", "Canon2D",

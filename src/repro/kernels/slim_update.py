@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .fused_adam import bias_corrections
+from .snr_stats import centered_line_stats
 from .tiling import pad_kept, strip_grid, trim_kept
 
 # Live full-size fp32 buffers per kernel instance (inputs + outputs + cast
@@ -45,6 +46,9 @@ from .tiling import pad_kept, strip_grid, trim_kept
 # gate un-servable leaves with ``tiling.strip_fits(red_size, *_BUFS)``.
 UPDATE_BUFS = 6    # p, g, m in + p', m' out + cast headroom
 PRECOND_BUFS = 5   # g, m in + u, m' out + cast headroom
+PRECOND_SNR_BUFS = 6   # + the shifted g^2 copy for the centered SNR sums
+PARTIAL_BUFS = 5   # g, m in + m' out + g^2 / shifted-copy headroom (with_snr)
+FINALIZE_BUFS = 3  # m' in + u out + cast headroom (v/ek lines are O(kept))
 
 _DEFAULT_BLOCK = {1: 32, 0: 256}  # kept-axis strip width per orientation
 
@@ -112,57 +116,221 @@ def slim_update_batched(p, g, m, v_line, *, axis: int, lr: float, b1: float = 0.
 
 
 def _slim_precond_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
-                         *, b1: float, b2: float, eps: float,
+                         *snr_outs, b1: float, b2: float, eps: float,
                          red_axis: int, n_red: int):
     bc1 = scal_ref[0]
     bc2 = scal_ref[1]
     g = g_ref[...].astype(jnp.float32)                   # (1, TR, C) | (1, R, TC)
     m_new = b1 * m_ref[...] + (1.0 - b1) * g
-    ek = jnp.sum(g * g, axis=red_axis, keepdims=True) * (1.0 / n_red)
+    g2 = g * g
+    ek = jnp.sum(g2, axis=red_axis, keepdims=True) * (1.0 / n_red)
     v_new = b2 * v_ref[...] + (1.0 - b2) * ek            # reduced line
     u_out[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
     m_out[...] = m_new
     v_out[...] = v_new
+    if snr_outs:
+        s1c, s2c, _ = centered_line_stats(g2, red_axis)
+        snr_outs[0][...] = s1c
+        snr_outs[1][...] = s2c
 
 
 def slim_precond_batched(g, m, v_line, *, axis: int, b1: float = 0.9,
                          b2: float = 0.95, eps: float = 1e-8, count=1,
-                         block: Optional[int] = None, interpret: bool = True):
+                         with_snr: bool = False, block: Optional[int] = None,
+                         interpret: bool = True):
     """Preconditioned batched SlimAdam update: (g, m, v_line) -> (u, m', v').
 
     The GradientTransformation form of :func:`slim_update_batched` — no
     parameter read/write, lr / weight decay applied downstream, traced
     ``count`` fine. Streams 4 full passes (g, m read + u, m' write) plus
     O(B * kept) for the reduced moment.
+
+    ``with_snr=True`` appends ``(s1c, s2c)`` — shift-centered sums of g^2
+    per reduction line (reduced-line layout), computed in the same strip
+    loop — so a from-update SNR measurement (see
+    ``repro.kernels.snr_stats.snr_update_stats_finalize``) costs O(kept)
+    extra writes and zero extra full-size passes.
     """
     assert g.ndim == 3 and axis in (0, 1)
     b, r, c = g.shape
     block = _DEFAULT_BLOCK[axis] if block is None else block
-    sg = strip_grid(b, r, c, axis=axis, n_bufs=PRECOND_BUFS, block=block)
+    n_bufs = PRECOND_SNR_BUFS if with_snr else PRECOND_BUFS
+    sg = strip_grid(b, r, c, axis=axis, n_bufs=n_bufs, block=block)
     if sg.kept % sg.tile:
-        uo, mo, vo = slim_precond_batched(pad_kept(g, sg), pad_kept(m, sg),
-                                          pad_kept(v_line, sg), axis=axis,
-                                          b1=b1, b2=b2, eps=eps, count=count,
-                                          block=block, interpret=interpret)
-        return trim_kept(uo, sg), trim_kept(mo, sg), trim_kept(vo, sg)
+        outs = slim_precond_batched(pad_kept(g, sg), pad_kept(m, sg),
+                                    pad_kept(v_line, sg), axis=axis,
+                                    b1=b1, b2=b2, eps=eps, count=count,
+                                    with_snr=with_snr, block=block,
+                                    interpret=interpret)
+        return tuple(trim_kept(o, sg) for o in outs)
 
     scal = bias_corrections(b1, b2, count)
     kernel = functools.partial(_slim_precond_kernel, b1=b1, b2=b2, eps=eps,
                                red_axis=sg.red_axis, n_red=sg.n_red)
     v_shape = (b, r, 1) if axis == 1 else (b, 1, c)
+    n_snr = 2 if with_snr else 0
     return pl.pallas_call(
         kernel,
         grid=sg.grid,
         in_specs=[sg.full, sg.full, sg.line,
                   pl.BlockSpec((2,), lambda bi, i: (0,))],
-        out_specs=[sg.full, sg.full, sg.line],
+        out_specs=[sg.full, sg.full, sg.line] + [sg.line] * n_snr,
         out_shape=[
             jax.ShapeDtypeStruct((b, r, c), jnp.float32),
             jax.ShapeDtypeStruct((b, r, c), jnp.float32),
             jax.ShapeDtypeStruct(v_shape, jnp.float32),
-        ],
+        ] + [jax.ShapeDtypeStruct(v_shape, jnp.float32)] * n_snr,
         interpret=interpret,
     )(g, m, v_line, scal)
+
+
+# ---------------------------------------------------------------------------
+# Sharded psum regime: partial-stats / finalize kernel pair
+# ---------------------------------------------------------------------------
+#
+# When a leaf's reduction dims are split across mesh shards, the E_K[g^2]
+# line mean needs a cross-shard ``lax.psum`` between reading g and applying
+# the preconditioner — a collective cannot run inside a pallas_call, so the
+# leaf becomes two kernels around it:
+#
+#   pass 1  slim_partial_stats: read g, m -> write m_new + the per-line
+#           partial g^2 sums (O(kept)); with ``with_snr`` the same strip
+#           loop also emits shift-centered partial sums of g^2 (the
+#           from-update SNR diagnostic, see
+#           ``repro.kernels.snr_stats.snr_update_stats_finalize``) — three
+#           more O(kept) lines, zero extra full-size traffic;
+#   (psum)  the collective completes the line sums — and, for owner-sharded
+#           reduced moments, simultaneously broadcasts v_new: each shard
+#           folds ``b2 * v`` for the lines it owns into the payload, so the
+#           moment's broadcast rides the all-reduce instead of adding ICI;
+#   pass 2  slim_finalize: read m_new (+ the completed line mean / moment)
+#           -> write u (+ v_new when the kernel owns the moment update).
+#
+# Full-size traffic stays at the psum regime's 5-pass floor (g, m read;
+# m' write; m' read; u write); everything else is O(kept).
+
+
+def _slim_partial_kernel(g_ref, m_ref, m_out, part_out, *snr_outs, b1: float,
+                         red_axis: int):
+    g = g_ref[...].astype(jnp.float32)                   # (1, TR, C) | (1, R, TC)
+    m_out[...] = b1 * m_ref[...] + (1.0 - b1) * g
+    g2 = g * g
+    part_out[...] = jnp.sum(g2, axis=red_axis, keepdims=True)
+    if snr_outs:
+        s1c, s2c, f = centered_line_stats(g2, red_axis)
+        snr_outs[0][...] = s1c
+        snr_outs[1][...] = s2c
+        snr_outs[2][...] = f
+
+
+def slim_partial_stats_batched(g, m, *, axis: int, b1: float = 0.9,
+                               with_snr: bool = False, block: Optional[int] = None,
+                               interpret: bool = True):
+    """Pass 1 of the sharded psum regime on the (B, R, C) canonical form.
+
+    g, m: (B, R, C). Returns ``(m_new, part)`` — m_new fp32 full shape, part
+    the per-line partial sum of g^2 in the reduced-line layout ((B, R, 1) for
+    axis=1, (B, 1, C) for axis=0) ready for a ``lax.psum`` over the owning
+    mesh axes. With ``with_snr=True`` also returns ``(s1c, s2c, first)``:
+    shift-centered partial sums of g^2 per line (same layout), which compose
+    across shards via ``repro.kernels.ref.rebase_centered_stats`` exactly
+    like the snr_stats partial entries — the SNR measurement rides the
+    update's strip loop for free.
+    """
+    assert g.ndim == 3 and axis in (0, 1)
+    b, r, c = g.shape
+    block = _DEFAULT_BLOCK[axis] if block is None else block
+    sg = strip_grid(b, r, c, axis=axis, n_bufs=PARTIAL_BUFS, block=block)
+    if sg.kept % sg.tile:
+        outs = slim_partial_stats_batched(pad_kept(g, sg), pad_kept(m, sg),
+                                          axis=axis, b1=b1, with_snr=with_snr,
+                                          block=block, interpret=interpret)
+        return tuple(trim_kept(o, sg) for o in outs)
+
+    kernel = functools.partial(_slim_partial_kernel, b1=b1, red_axis=sg.red_axis)
+    line_shape = (b, r, 1) if axis == 1 else (b, 1, c)
+    n_lines = 1 + (3 if with_snr else 0)
+    return pl.pallas_call(
+        kernel,
+        grid=sg.grid,
+        in_specs=[sg.full, sg.full],
+        out_specs=[sg.full] + [sg.line] * n_lines,
+        out_shape=[jax.ShapeDtypeStruct((b, r, c), jnp.float32)]
+                  + [jax.ShapeDtypeStruct(line_shape, jnp.float32)] * n_lines,
+        interpret=interpret,
+    )(g, m)
+
+
+def _slim_finalize_kernel(m_ref, v_ref, ek_ref, scal_ref, u_out, v_out,
+                          *, b2: float, eps: float):
+    bc1 = scal_ref[0]
+    bc2 = scal_ref[1]
+    v_new = b2 * v_ref[...] + (1.0 - b2) * ek_ref[...]   # reduced line
+    u_out[...] = (m_ref[...] / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    v_out[...] = v_new
+
+
+def _slim_apply_line_kernel(m_ref, v_ref, scal_ref, u_out, *, eps: float):
+    bc1 = scal_ref[0]
+    bc2 = scal_ref[1]
+    u_out[...] = (m_ref[...] / bc1) / (jnp.sqrt(v_ref[...] / bc2) + eps)
+
+
+def slim_finalize_batched(m_new, v_line, *, axis: int, ek=None, b1: float = 0.9,
+                          b2: float = 0.95, eps: float = 1e-8, count=1,
+                          block: Optional[int] = None, interpret: bool = True):
+    """Pass 2 of the sharded psum regime (post-psum finalize).
+
+    m_new: (B, R, C) fp32 from :func:`slim_partial_stats_batched`. With
+    ``ek`` (the psum-completed line *mean* of g^2, reduced-line layout) this
+    is the ISSUE-form finalize: reads m_new + v_line (the stored reduced
+    moment) and returns ``(u, v_new)``. With ``ek=None``, ``v_line`` is the
+    *already-completed* new moment — the owner-sharded flow, where each
+    shard's ``b2 * v`` contribution rode the partial-sums psum and the
+    collective delivered v_new directly — and only ``u`` is returned (the
+    moment's O(kept) store is the caller's owner-slice, not a full
+    replicated kernel write).
+    """
+    assert m_new.ndim == 3 and axis in (0, 1)
+    b, r, c = m_new.shape
+    block = _DEFAULT_BLOCK[axis] if block is None else block
+    sg = strip_grid(b, r, c, axis=axis, n_bufs=FINALIZE_BUFS, block=block)
+    if sg.kept % sg.tile:
+        pads = (pad_kept(m_new, sg), pad_kept(v_line, sg))
+        if ek is not None:
+            uo, vo = slim_finalize_batched(pads[0], pads[1], axis=axis,
+                                           ek=pad_kept(ek, sg), b1=b1, b2=b2,
+                                           eps=eps, count=count, block=block,
+                                           interpret=interpret)
+            return trim_kept(uo, sg), trim_kept(vo, sg)
+        uo = slim_finalize_batched(pads[0], pads[1], axis=axis, ek=None, b1=b1,
+                                   b2=b2, eps=eps, count=count, block=block,
+                                   interpret=interpret)
+        return trim_kept(uo, sg)
+
+    scal = bias_corrections(b1, b2, count)
+    line_shape = (b, r, 1) if axis == 1 else (b, 1, c)
+    if ek is None:
+        kernel = functools.partial(_slim_apply_line_kernel, eps=eps)
+        return pl.pallas_call(
+            kernel,
+            grid=sg.grid,
+            in_specs=[sg.full, sg.line, pl.BlockSpec((2,), lambda bi, i: (0,))],
+            out_specs=[sg.full],
+            out_shape=[jax.ShapeDtypeStruct((b, r, c), jnp.float32)],
+            interpret=interpret,
+        )(m_new, v_line, scal)[0]
+    kernel = functools.partial(_slim_finalize_kernel, b2=b2, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=sg.grid,
+        in_specs=[sg.full, sg.line, sg.line,
+                  pl.BlockSpec((2,), lambda bi, i: (0,))],
+        out_specs=[sg.full, sg.line],
+        out_shape=[jax.ShapeDtypeStruct((b, r, c), jnp.float32),
+                   jax.ShapeDtypeStruct(line_shape, jnp.float32)],
+        interpret=interpret,
+    )(m_new, v_line, ek, scal)
 
 
 # ---------------------------------------------------------------------------
@@ -220,3 +388,31 @@ def slim_precond_major(g, m, v_col, *, b1: float = 0.9, b2: float = 0.95,
     return _unb1(slim_precond_batched(*_b1(g, m, v_col), axis=0, b1=b1, b2=b2,
                                       eps=eps, count=count, block=col_block,
                                       interpret=interpret))
+
+
+def slim_partial_stats(g, m, *, axis: int = 1, b1: float = 0.9,
+                       with_snr: bool = False, block: Optional[int] = None,
+                       interpret: bool = True):
+    """2-D wrapper of :func:`slim_partial_stats_batched`: g, m (R, C) ->
+    (m_new, part[, s1c, s2c, first]); lines are (R, 1) (axis=1) / (1, C)
+    (axis=0)."""
+    return _unb1(slim_partial_stats_batched(*_b1(g, m), axis=axis, b1=b1,
+                                            with_snr=with_snr, block=block,
+                                            interpret=interpret))
+
+
+def slim_finalize(m_new, v_line, *, axis: int = 1, ek=None, b1: float = 0.9,
+                  b2: float = 0.95, eps: float = 1e-8, count=1,
+                  block: Optional[int] = None, interpret: bool = True):
+    """2-D wrapper of :func:`slim_finalize_batched`: m_new (R, C) + lines ->
+    (u, v_new) with ``ek``, or just u when ``v_line`` is already the
+    completed new moment (owner-sharded flow)."""
+    if ek is None:
+        out = slim_finalize_batched(*_b1(m_new, v_line), axis=axis, ek=None,
+                                    b1=b1, b2=b2, eps=eps, count=count,
+                                    block=block, interpret=interpret)
+        return out[0]
+    return _unb1(slim_finalize_batched(*_b1(m_new, v_line), axis=axis,
+                                       ek=ek[None], b1=b1, b2=b2, eps=eps,
+                                       count=count, block=block,
+                                       interpret=interpret))

@@ -39,6 +39,39 @@ def _first_along(v: jnp.ndarray, red_axis: int) -> jnp.ndarray:
     return jax.lax.slice_in_dim(v, 0, 1, axis=red_axis)
 
 
+def centered_line_stats(v: jnp.ndarray, red_axis: int):
+    """Shift-centered per-line sums of an in-VMEM block: (s1c, s2c, first),
+    each keepdims along ``red_axis``. The shared body the snr_stats kernels
+    and the slim partial-stats kernel (``repro.kernels.slim_update``, which
+    rides these sums on the update pass's strip loop) both inline, so the
+    centering semantics — shift by the line's local first entry, making both
+    sums O(spread) instead of O(magnitude) — have one definition."""
+    f = _first_along(v, red_axis)
+    d = v - f
+    return (jnp.sum(d, axis=red_axis, keepdims=True),
+            jnp.sum(d * d, axis=red_axis, keepdims=True), f)
+
+
+def snr_update_stats_finalize(v_new: jnp.ndarray, s1c: jnp.ndarray, s2c: jnp.ndarray,
+                              n: int, one_minus_b2: float,
+                              eps: float = 1e-30) -> jnp.ndarray:
+    """Finalize the from-update SNR of one leaf (scalar).
+
+    ``s1c``/``s2c`` are the completed centered line sums of g^2 along the
+    leaf's compression dims K (from the update kernels' ``with_snr`` outputs,
+    psum-completed for sharded lines); ``v_new`` the completed reduced moment
+    (same layout). The measured quantity is SNR_K of the step's dense
+    reconstruction ``V_dense = b2 * V_red + (1 - b2) * g^2`` — the second
+    moment dense Adam would hold this step given the compressed history:
+    ``E_K[V_dense]`` is exactly ``v_new`` and ``Var_K[V_dense] =
+    (1 - b2)^2 * Var_K[g^2]``, so the whole diagnostic costs O(kept) on top
+    of the update pass. High SNR -> the compression rule is still valid."""
+    mean_c = s1c / n
+    var = s2c / n - jnp.square(mean_c)
+    var = jnp.maximum(var, 0.0) * (one_minus_b2 * one_minus_b2)
+    return jnp.mean(jnp.square(v_new) / (var + eps))
+
+
 def _snr_kernel(v_ref, s1_out, s2_out, *, red_axis: int):
     v = v_ref[...].astype(jnp.float32)        # (1, TR, C) | (1, R, TC)
     s1_out[...] = jnp.sum(v, axis=red_axis)
@@ -47,10 +80,10 @@ def _snr_kernel(v_ref, s1_out, s2_out, *, red_axis: int):
 
 def _snr_centered_kernel(v_ref, s1_out, s1c_out, s2c_out, *, red_axis: int):
     v = v_ref[...].astype(jnp.float32)        # (1, TR, C) | (1, R, TC)
-    d = v - _first_along(v, red_axis)         # shift by the line's first entry
+    s1c, s2c, _ = centered_line_stats(v, red_axis)
     s1_out[...] = jnp.sum(v, axis=red_axis)
-    s1c_out[...] = jnp.sum(d, axis=red_axis)
-    s2c_out[...] = jnp.sum(d * d, axis=red_axis)
+    s1c_out[...] = jnp.squeeze(s1c, axis=red_axis)
+    s2c_out[...] = jnp.squeeze(s2c, axis=red_axis)
 
 
 def _snr_centered_partial_kernel(v_ref, s1_out, s1c_out, s2c_out, f_out, *, red_axis: int):
@@ -59,11 +92,10 @@ def _snr_centered_partial_kernel(v_ref, s1_out, s1c_out, s2c_out, f_out, *, red_
     sums to a common shift (exact O(spread) algebra, see
     ``repro.kernels.ref.rebase_centered_stats``) and ``lax.psum`` them."""
     v = v_ref[...].astype(jnp.float32)        # (1, TR, C) | (1, R, TC)
-    f = _first_along(v, red_axis)
-    d = v - f
+    s1c, s2c, f = centered_line_stats(v, red_axis)
     s1_out[...] = jnp.sum(v, axis=red_axis)
-    s1c_out[...] = jnp.sum(d, axis=red_axis)
-    s2c_out[...] = jnp.sum(d * d, axis=red_axis)
+    s1c_out[...] = jnp.squeeze(s1c, axis=red_axis)
+    s2c_out[...] = jnp.squeeze(s2c, axis=red_axis)
     f_out[...] = jnp.squeeze(f, axis=red_axis)
 
 

@@ -180,7 +180,10 @@ def build_cell(arch: str, shape: str, mesh, *, optimizer: str = "slim", grad_acc
                 accum = grad_accum or pick_grad_accum(cfg, shape, mesh)
                 info["grad_accum"] = accum
                 opt_abs = jax.eval_shape(tx.init, params_abs)
-                o_specs = opt_state_specs(opt_abs, params_abs, p_specs)
+                from ..optim.base import resolve_backend
+                o_specs = opt_state_specs(
+                    opt_abs, params_abs, p_specs,
+                    owner_mesh=mesh if resolve_backend(backend) == "fused" else None)
                 o_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
                                            is_leaf=lambda x: isinstance(x, P))
                 step = make_train_step(cfg, tx, grad_accum=accum, grad_shardings=p_shardings)

@@ -61,9 +61,16 @@ def main(argv=None):
         opt_state = tx.init(params)
 
         if ctx is not None:
+            from ..optim.base import resolve_backend
+
             p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
                                 is_leaf=lambda x: isinstance(x, P))
-            o_specs = opt_state_specs(jax.eval_shape(lambda: opt_state), params, p_specs)
+            # Fused backend: pin psum-regime reduced moments to their
+            # owner-slice storage layout so the pjit state boundary matches
+            # the shard_map output (no per-step O(kept) re-gather).
+            owner_mesh = mesh if resolve_backend(args.backend) == "fused" else None
+            o_specs = opt_state_specs(jax.eval_shape(lambda: opt_state), params,
+                                      p_specs, owner_mesh=owner_mesh)
             o_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
                                 is_leaf=lambda x: isinstance(x, P))
             params = jax.device_put(params, p_sh)

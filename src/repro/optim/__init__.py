@@ -75,14 +75,33 @@ local shards. Every leaf is classified by one
     every shard, so the unchanged kernels (dense, slim minor/major/batched,
     bucketing included) run per shard with plans re-derived from the *local*
     shard shape. Bit-identical to the single-device fused path.
-  * **reduced dims sharded ('psum')** — each shard computes partial g^2 sums
-    over its slice of the line, a ``lax.psum`` over the owning mesh axes
-    completes the mean, and the elementwise preconditioner finishes locally.
-    The first-moment update rides in the partial-sums pass, so the leaf
-    still streams 5 full-size passes; the collective carries only the
-    O(kept) compressed moment — deleting the moment's TP axis also deleted
-    its collective traffic (``state_shardings``), and this is the payoff.
-    Matches single-device to fp32 reassociation (<= 1e-6).
+  * **reduced dims sharded ('psum')** — Pallas-resident end to end: pass 1
+    (``slim_partial_stats``, the strip-grid kernel pair in
+    ``repro.kernels.slim_update``) reads g and m and writes m_new plus the
+    per-line partial g^2 sums; a ``lax.psum`` over the owning mesh axes
+    completes the lines; pass 2 (``slim_finalize``) reads m_new and writes
+    the preconditioned update — 5 full-size passes total, nothing left to
+    XLA fusion. The collective carries only the O(kept) compressed moment —
+    deleting the moment's TP axis also deleted its collective traffic
+    (``state_shardings``), and this is the payoff. Local plans the kernel
+    pair cannot serve fall back to jnp and are counted separately
+    ('psum_jnp' in ``regime_counts``; the CI gate holds it at zero for
+    GPT-small). Matches single-device to fp32 reassociation (<= 1e-6).
+
+    **Owner-shard moment writes**: the reduced moment of a psum leaf is
+    replicated across the psum group, so PR 4 wrote the same O(kept) v_new
+    on every shard. Now each plan carries an owner placement
+    (``repro.sharding.shardspec.owner_placement``: psum axes assigned onto
+    kept dims they divide evenly) and v is *stored* as a 1/A owner slice:
+    each shard folds ``b2 * v`` for the lines it owns into the partial-sums
+    payload, so the same all-reduce that completes E_K[g^2] also broadcasts
+    the completed v_new — the moment's read and write shrink by A with
+    **zero** extra ICI (an explicit gather would cost ~16x more wall time
+    per byte than the HBM it saves; riding the collective costs nothing).
+    Leaves with no evenly-dividing kept dim (GPT-small: only embed's
+    50304-vocab vs a 256-way group) keep the replicated write. Moments are
+    cast back to their stored dtype at the boundary, so bf16 states stay
+    bf16 through the psum path.
   * **interleaved K after sharding ('jnp')** — plans that would need a
     materialized boundary transpose on the shard run the reference jnp math
     locally instead; ``repro.sharding.shardspec.regime_counts`` reports how
@@ -97,13 +116,31 @@ O(spread) algebra, ``repro.kernels.ref.rebase_centered_stats``) and then
 psummed, preserving the one-pass centered-variance accuracy across the
 shard boundary.
 
+**From-update SNR (the measurement rides the update pass).** Built with
+``emit_snr=True``, ``scale_by_slim_adam`` / ``slim_adam`` publish a per-leaf
+SNR scalar on ``state.snr``: the update kernels' strip loops also emit
+shift-centered sums of g^2 per reduction line (``with_snr`` outputs of
+``slim_precond_batched`` / ``slim_partial_stats``), finalized against the
+new moment as SNR_K of the dense reconstruction ``b2*V + (1-b2)*g^2`` — the
+second moment dense Adam would hold this step given the compressed history.
+A measure step therefore adds only O(kept) stat lines over a plain update
+step (asserted by the sharded roofline gate); under shard_map the stats
+rebase + psum exactly like the snr_stats partial entries.
+``measure_tree_snr(from_update=..., update_dims=...)`` consumes the ridden
+scalars for each leaf's own K and falls back to the standard nu measurement
+for the other candidates; ``TrainerConfig.snr_from_update`` wires the whole
+path (measure-cadence steps run a second jitted step variant).
+
 ``benchmarks/opt_speed.py --sharded`` reports the per-shard byte model on
-the production (data=16, model=16) mesh: GPT-small's compressed tree
-streams ~0.725x of per-shard dense-Adam bytes (vs 0.715x single-device —
-the delta is the replicated O(kept) moment writes on psum leaves) plus
-~247 KiB/step of ICI for the psum lines; the ``--check-roofline --sharded``
-CI gate holds every transpose-free leaf to per-shard bytes <= single-device
-bytes / min(shard counts).
+the production (data=16, model=16) mesh: GPT-small's *compressed leaves*
+stream ~0.7150x of per-shard dense-Adam bytes (5/7 = 0.7143 floor + the
+O(kept) terms the owner dedupe cannot remove, chiefly embed), ~0.7216x over
+the full tree (dense K = () leaves weigh ~3.5x more per shard than on one
+device: embed shards 256x, pos_embed only 16x), plus ~247 KiB/step of ICI
+for the psum lines. The ``--check-roofline --sharded`` CI gate holds every
+transpose-free leaf to per-shard bytes <= single-device bytes / min(shard
+counts), the psum regime to zero jnp-finalize fallbacks, the compressed
+ratio to <= 0.716, and the fused-SNR measure-step delta to O(kept).
 
 Why fused is the hot path (bytes-streamed model)
 ------------------------------------------------

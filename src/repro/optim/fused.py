@@ -54,11 +54,18 @@ from ..kernels.ops import (
     canon_restore,
     default_interpret,
     leaf_plan,
+    slim_finalize_batched,
+    slim_partial_stats_batched,
     slim_precond,
     slim_precond_batched,
     slim_precond_major,
 )
-from ..kernels.slim_update import PRECOND_BUFS
+from ..kernels.slim_update import PRECOND_BUFS, PRECOND_SNR_BUFS
+from ..kernels.snr_stats import snr_update_stats_finalize
+
+# 0/0 guard for exactly-constant lines in the from-update SNR (matches
+# repro.core.snr._VAR_EPS so both measurement paths agree on the limit).
+_SNR_EPS = 1e-30
 
 Dims = Tuple[int, ...]
 
@@ -102,6 +109,18 @@ def jnp_slim_leaf(g, m, v, dims: Dims, *, b1, b2, eps, count, use_first_moment):
     return u, m_new, v_new
 
 
+def jnp_update_snr_leaf(g32, v_new, dims: Dims, *, b2) -> jnp.ndarray:
+    """Reference from-update SNR for one compressed leaf (scalar).
+
+    SNR_K of the step's dense reconstruction ``b2 * V_red + (1 - b2) * g^2``
+    (whose per-line mean is exactly ``v_new``), the oracle for the
+    ``with_snr`` kernel outputs — see
+    :func:`repro.kernels.snr_stats.snr_update_stats_finalize`."""
+    g2 = jnp.square(g32.astype(jnp.float32))
+    var = jnp.var(g2, axis=dims, keepdims=True)
+    return jnp.mean(jnp.square(v_new) / ((1 - b2) ** 2 * var + _SNR_EPS))
+
+
 # adam_precond's tile width — imported from the kernel module so a block
 # change there can't desync this lane-folding layout.
 _LANES = LANES
@@ -131,20 +150,32 @@ def _dense_kernel_leaf(g, m, v, *, b1, b2, eps, count, interpret):
     return un2d(u2), un2d(m2), un2d(v2)
 
 
-def _slim_kernel_leaf(g, m, v_red, cn: CanonND, *, b1, b2, eps, count, interpret):
+def _slim_kernel_leaf(g, m, v_red, cn: CanonND, *, b1, b2, eps, count, interpret,
+                      with_snr: bool = False):
     """Run one compressed leaf through the kernel its plan names: minor /
-    major for 2-D-canonical plans, the batched kernel for batch > 1."""
+    major for 2-D-canonical plans, the batched kernel for batch > 1. With
+    ``with_snr`` the kernel's strip loop also emits the centered g^2 line
+    sums and a from-update SNR scalar rides along (O(kept) extra traffic)."""
     g2 = canon_apply(g, cn)
     m2 = canon_apply(m, cn)
     v2 = canon_apply(v_red, cn, reduced_cols=True)
     kw = dict(b1=b1, b2=b2, eps=eps, count=count, interpret=interpret)
-    if cn.batch > 1:
-        u2, m2o, v2o = slim_precond_batched(g2, m2, v2, axis=cn.axis, **kw)
+    if with_snr or cn.batch > 1:
+        to3 = (lambda x: x) if cn.batch > 1 else (lambda x: x[None])
+        un3 = (lambda x: x) if cn.batch > 1 else (lambda x: x[0])
+        outs = slim_precond_batched(to3(g2), to3(m2), to3(v2), axis=cn.axis,
+                                    with_snr=with_snr, **kw)
+        u2, m2o, v2o = un3(outs[0]), un3(outs[1]), un3(outs[2])
+        snr = (snr_update_stats_finalize(outs[2], outs[3], outs[4],
+                                         cn.red_size, 1.0 - b2, eps=_SNR_EPS)
+               if with_snr else None)
     else:
         fn = slim_precond if cn.axis == 1 else slim_precond_major
         u2, m2o, v2o = fn(g2, m2, v2, **kw)
-    return (canon_restore(u2, cn, g.shape), canon_restore(m2o, cn, g.shape),
-            canon_restore(v2o, cn, v_red.shape))
+        snr = None
+    out = (canon_restore(u2, cn, g.shape), canon_restore(m2o, cn, g.shape),
+           canon_restore(v2o, cn, v_red.shape))
+    return out + (snr,) if with_snr else out
 
 
 # ---------------------------------------------------------------------------
@@ -221,32 +252,150 @@ def sharded_tree_plans(g_leaves: Sequence[Any], dims_leaves: Sequence[Dims],
                              list(spec_leaves), mesh, n_bufs=n_bufs)
 
 
-def _psum_slim_leaf(g, m, v_red, dims: Dims, *, axes: Tuple[str, ...], red_total: int,
-                    b1, b2, eps, count, use_first_moment: bool):
-    """SlimAdam leaf whose reduced dims are split across ``axes``: local
-    partial sums of g^2 per reduction line, ``lax.psum`` to complete them,
-    then the elementwise preconditioner on the local shard. The psum carries
-    O(kept_local) bytes over ICI — the compressed moment's tininess is
-    exactly what keeps the cross-shard completion cheap.
+def _owner_scatter(v_slice, owner, sizes):
+    """Embed this shard's owner slice of the reduced moment into a zeros
+    full-line buffer at its owned offset — the additive ``b2 * v`` term of
+    the combined psum payload. Inverse of :func:`_owner_slice`."""
+    out = v_slice
+    for ax, dim in reversed(owner):
+        blk = out.shape[dim]
+        full = list(out.shape)
+        full[dim] = blk * int(sizes[ax])
+        out = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros(full, out.dtype), out, jax.lax.axis_index(ax) * blk, axis=dim)
+    return out
 
-    Scheduling note: the first-moment update is computed *before* the psum
-    on purpose. The collective splits the leaf into two passes, but m_new
-    shares pass one with the partial sums (read g, m; write m_new) and the
-    post-psum finalize reads m_new instead of g — so the leaf still streams
-    the slim path's 5 full-size passes, not 6 (the sharded roofline charges
-    exactly that)."""
+
+def _owner_slice(v_full, owner, sizes):
+    """This shard's owner slice of a completed full-line reduced moment."""
+    for ax, dim in owner:
+        blk = v_full.shape[dim] // int(sizes[ax])
+        v_full = jax.lax.dynamic_slice_in_dim(
+            v_full, jax.lax.axis_index(ax) * blk, blk, axis=dim)
+    return v_full
+
+
+def _psum_snr(s1c, s2c, first, v_new, pl, *, n_loc, red_total, b2):
+    """Complete from-update SNR stats across the psum group: rebase each
+    shard's centered g^2 sums to a mesh-common shift (exact O(spread)
+    algebra), psum, finalize against the completed moment, and average the
+    ratio over the kept-line shards."""
+    from ..kernels.ref import rebase_centered_stats
+
+    shift = jax.lax.pmean(first, pl.psum_axes)
+    s1c, s2c = rebase_centered_stats(s1c, s2c, first, shift, n_loc)
+    s1c = jax.lax.psum(s1c, pl.psum_axes)
+    s2c = jax.lax.psum(s2c, pl.psum_axes)
+    snr = snr_update_stats_finalize(v_new, s1c, s2c, red_total, 1.0 - b2,
+                                    eps=_SNR_EPS)
+    if pl.kept_axes:
+        snr = jax.lax.pmean(snr, pl.kept_axes)
+    return snr
+
+
+def _psum_slim_leaf(g, m, v_red, dims: Dims, *, pl, sizes, b1, b2, eps, count,
+                    use_first_moment: bool, interpret: bool,
+                    emit_snr: bool = False):
+    """SlimAdam leaf whose reduced dims are split across ``pl.psum_axes``,
+    Pallas-resident: pass 1 (``slim_partial_stats``) reads g, m and writes
+    m_new plus per-line partial g^2 sums; a ``lax.psum`` over the owning
+    mesh axes completes the lines; pass 2 (``slim_finalize``) reads m_new
+    and writes the preconditioned update. The collective carries O(kept)
+    bytes over ICI — the compressed moment's tininess is exactly what keeps
+    the cross-shard completion cheap — and the leaf streams the slim path's
+    5 full-size passes (g, m read; m' write; m' read; u write), charged
+    exactly so by the sharded roofline.
+
+    Owner-shard moment writes (``pl.owner``): instead of every shard in the
+    psum group redundantly writing the same O(kept) v_new, each shard folds
+    ``b2 * v`` for the kept lines it *owns* into the partial-sums payload —
+    the all-reduce then delivers the completed v_new to every shard (the
+    broadcast rides the collective, zero extra ICI) while the persistent
+    store is each shard's 1/A owner slice. Leaves with no evenly-dividing
+    kept dim (``pl.owner == ()``) keep PR-4's replicated write.
+
+    ``emit_snr``: the partial-stats strip loop also emits centered g^2 line
+    sums; the completed from-update SNR scalar (see
+    :func:`jnp_update_snr_leaf`) is appended to the return.
+
+    Moments are computed in fp32 and cast back to the *stored* dtypes at the
+    boundary, so bf16 optimizer states stay bf16 across the psum path
+    (states/checkpoints used to silently promote to fp32 here).
+    """
+    m_dtype = m.dtype if m is not None else None
+    v_dtype = v_red.dtype
     g32 = g.astype(jnp.float32)
-    part = jnp.sum(g32 * g32, axis=dims, keepdims=True)
+    v32 = v_red.astype(jnp.float32)
+    dset = {d % g.ndim for d in dims}
+    red_local_shape = tuple(1 if i in dset else s for i, s in enumerate(g.shape))
+    n_loc = 1
+    for i in sorted(dset):
+        n_loc *= g.shape[i]
+    scale = (1.0 - b2) / pl.red_total
+
+    # The plan's local CanonND was gated by plan_sharded_leaf on the
+    # partial/finalize pair's working sets — run exactly that plan (the
+    # moment-less variant streams a discarded m, so it stays on jnp).
+    if use_first_moment and pl.finalize == "kernel" and pl.cn is not None:
+        cn = pl.cn
+        to3 = (lambda x: x) if cn.batch > 1 else (lambda x: x[None])
+        un3 = (lambda x: x) if cn.batch > 1 else (lambda x: x[0])
+        outs = slim_partial_stats_batched(
+            to3(canon_apply(g32, cn)), to3(canon_apply(m.astype(jnp.float32), cn)),
+            axis=cn.axis, b1=b1, with_snr=emit_snr, interpret=interpret)
+        m_new2, part2 = outs[0], outs[1]
+        part = canon_restore(un3(part2), cn, red_local_shape)
+        if pl.owner:
+            payload = scale * part + b2 * _owner_scatter(v32, pl.owner, sizes)
+            v_new = jax.lax.psum(payload, pl.psum_axes)
+            u2 = slim_finalize_batched(
+                m_new2, to3(canon_apply(v_new, cn, reduced_cols=True)),
+                axis=cn.axis, ek=None, b1=b1, b2=b2, eps=eps, count=count,
+                interpret=interpret)
+            v_out = _owner_slice(v_new, pl.owner, sizes).astype(v_dtype)
+        else:
+            ek = jax.lax.psum(part, pl.psum_axes) / pl.red_total
+            u2, v_new2 = slim_finalize_batched(
+                m_new2, to3(canon_apply(v32, cn, reduced_cols=True)),
+                axis=cn.axis, ek=to3(canon_apply(ek, cn, reduced_cols=True)),
+                b1=b1, b2=b2, eps=eps, count=count, interpret=interpret)
+            v_new = canon_restore(un3(v_new2), cn, red_local_shape)
+            v_out = v_new.astype(v_dtype)
+        u = canon_restore(un3(u2), cn, g.shape)
+        m_new = canon_restore(un3(m_new2), cn, g.shape).astype(m_dtype)
+        snr = None
+        if emit_snr:
+            s1c, s2c, first = (canon_restore(un3(o), cn, red_local_shape)
+                               for o in outs[2:])
+            snr = _psum_snr(s1c, s2c, first, v_new, pl, n_loc=n_loc,
+                            red_total=pl.red_total, b2=b2)
+        return (u, m_new, v_out) + ((snr,) if emit_snr else ())
+
+    # jnp fallback: moment-less variant, or a local plan the kernel pair
+    # cannot serve ('psum_jnp' in regime_counts). Same psum/owner algebra.
+    part = jnp.sum(g32 * g32, axis=tuple(sorted(dset)), keepdims=True)
     bc1, bc2 = bias_corrections(b1, b2, count)
-    if use_first_moment:
-        m_new = b1 * m + (1 - b1) * g32
+    m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32 if use_first_moment else None
+    if pl.owner:
+        payload = scale * part + b2 * _owner_scatter(v32, pl.owner, sizes)
+        v_new = jax.lax.psum(payload, pl.psum_axes)
+        v_out = _owner_slice(v_new, pl.owner, sizes).astype(v_dtype)
     else:
-        m_new = None
-    ek = jax.lax.psum(part, axes) / red_total
-    v_new = b2 * v_red + (1 - b2) * ek
+        ek = jax.lax.psum(part, pl.psum_axes) / pl.red_total
+        v_new = b2 * v32 + (1 - b2) * ek
+        v_out = v_new.astype(v_dtype)
     num = m_new / bc1 if use_first_moment else g32
     u = num / (jnp.sqrt(v_new / bc2) + eps)
-    return u, m_new, v_new
+    m_out = m_new.astype(m_dtype) if use_first_moment else None
+    if not emit_snr:
+        return u, m_out, v_out
+    from ..kernels.ref import snr_stats_centered_partial_ref
+
+    _, s1c, s2c, first = snr_stats_centered_partial_ref(g32 * g32,
+                                                        tuple(sorted(dset)))
+    snr = _psum_snr(s1c, s2c, first, v_new, pl, n_loc=n_loc,
+                    red_total=pl.red_total, b2=b2)
+    return u, m_out, v_out, snr
 
 
 def _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh, *,
@@ -271,72 +420,117 @@ def _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh, *,
 
 
 def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves, mesh, *,
-                       b1, b2, eps, count, use_first_moment, interpret, bucket_min_size):
+                       b1, b2, eps, count, use_first_moment, interpret,
+                       bucket_min_size, emit_snr: bool = False):
     """SlimAdam under shard_map, three regimes per leaf (see
     ``repro.sharding.shardspec``): 'local' leaves run the unchanged kernel
     dispatch on their shard (kernels, bucketing, jnp fits-gate fallback all
-    re-derived from local shapes); 'psum' leaves complete their reduction
-    lines with a cross-shard ``lax.psum``; 'jnp' leaves (interleaved K after
-    sharding) run the reference math on their shard."""
+    re-derived from local shapes); 'psum' leaves run the Pallas-resident
+    partial-stats/finalize pair around a cross-shard ``lax.psum`` (with
+    owner-shard moment storage where the plan found a placement); 'jnp'
+    leaves (interleaved K after sharding) run the reference math on their
+    shard. ``emit_snr`` appends a per-leaf from-update SNR scalar (None for
+    K = () leaves) — the stats ride the update kernels' strip loops, psum-
+    completed for sharded lines, so a measure step adds O(kept) traffic."""
     from ..sharding.logical import shard_map
     from jax.sharding import PartitionSpec as P
 
     plans = sharded_tree_plans(g_leaves, dims_leaves, spec_leaves, mesh,
-                               n_bufs=PRECOND_BUFS)
+                               n_bufs=PRECOND_SNR_BUFS if emit_snr else PRECOND_BUFS)
+    sizes = dict(mesh.shape)
     g_specs = [pl.spec for pl in plans]
-    v_specs = [pl.red_spec for pl in plans]
+    v_specs = [pl.nu_spec if pl.nu_spec is not None else pl.red_spec
+               for pl in plans]
     n = len(g_leaves)
+    snr_idx = [i for i in range(n) if tuple(dims_leaves[i])] if emit_snr else []
     kw = dict(b1=b1, b2=b2, eps=eps)
 
     def dispatch(count, gs, ms, vs):
         out_u: List[Any] = [None] * n
         out_m: List[Any] = [None] * n
         out_v: List[Any] = [None] * n
+        out_s: List[Any] = [None] * n
         local_idx = [i for i, pl in enumerate(plans) if pl.regime == "local"]
         if local_idx:
-            u, mo, vo = slim_tree_update(
+            out = slim_tree_update(
                 [gs[i] for i in local_idx],
                 [ms[i] for i in local_idx] if use_first_moment else None,
                 [vs[i] for i in local_idx],
                 [tuple(dims_leaves[i]) for i in local_idx],
                 count=count, use_first_moment=use_first_moment,
-                interpret=interpret, bucket_min_size=bucket_min_size, **kw)
+                interpret=interpret, bucket_min_size=bucket_min_size,
+                emit_snr=emit_snr, **kw)
+            u, mo, vo = out[:3]
             for j, i in enumerate(local_idx):
                 out_u[i] = u[j]
                 out_m[i] = mo[j] if use_first_moment else None
                 out_v[i] = vo[j]
+                if emit_snr and out[3][j] is not None:
+                    s = out[3][j]
+                    pl = plans[i]
+                    # lines are sharded over the kept axes: the global ratio
+                    # mean is the mean of the equal-count per-shard means.
+                    out_s[i] = jax.lax.pmean(s, pl.kept_axes) if pl.kept_axes else s
         for i, pl in enumerate(plans):
             if pl.regime == "local":
                 continue
             dims = tuple(dims_leaves[i])
             m_i = ms[i] if use_first_moment else None
             if pl.regime == "psum":
-                out = _psum_slim_leaf(gs[i], m_i, vs[i], dims, axes=pl.psum_axes,
-                                      red_total=pl.red_total, count=count,
-                                      use_first_moment=use_first_moment, **kw)
+                out = _psum_slim_leaf(gs[i], m_i, vs[i], dims, pl=pl, sizes=sizes,
+                                      count=count, use_first_moment=use_first_moment,
+                                      interpret=interpret, emit_snr=emit_snr, **kw)
             else:  # 'jnp': reduced dims whole on the shard, reference math
                 out = jnp_slim_leaf(gs[i], m_i, vs[i], dims, count=count,
                                     use_first_moment=use_first_moment, **kw)
-            out_u[i], out_m[i], out_v[i] = out
+                if emit_snr:
+                    s = jnp_update_snr_leaf(gs[i], out[2], dims, b2=b2)
+                    s = jax.lax.pmean(s, pl.kept_axes) if pl.kept_axes else s
+                    out = out + (s,)
+            out_u[i], out_m[i], out_v[i] = out[:3]
+            if emit_snr:
+                out_s[i] = out[3]
+        if emit_snr:
+            return out_u, out_m, out_v, [out_s[i] for i in snr_idx]
         return out_u, out_m, out_v
+
+    snr_specs = [P() for _ in snr_idx]
+
+    def unpack(res):
+        if not emit_snr:
+            return res + (None,)
+        u, mo, vo, snr = res
+        out_s: List[Any] = [None] * n
+        for j, i in enumerate(snr_idx):
+            out_s[i] = snr[j]
+        return u, mo, vo, out_s
 
     if use_first_moment:
         def local_fn(count, gs, ms, vs):
             return dispatch(count, gs, ms, vs)
 
+        out_specs = (g_specs, g_specs, v_specs) + ((snr_specs,) if emit_snr else ())
         fn = shard_map(local_fn, mesh=mesh,
                        in_specs=(P(), g_specs, g_specs, v_specs),
-                       out_specs=(g_specs, g_specs, v_specs), check_rep=False)
-        return fn(count, list(g_leaves), list(mu_leaves), list(nu_leaves))
+                       out_specs=out_specs, check_rep=False)
+        u, mo, vo, snr = unpack(fn(count, list(g_leaves), list(mu_leaves),
+                                   list(nu_leaves)))
+        return (u, mo, vo, snr) if emit_snr else (u, mo, vo)
 
     def local_fn_no_mu(count, gs, vs):
-        u, _, v = dispatch(count, gs, None, vs)
-        return u, v
+        out = dispatch(count, gs, None, vs)
+        return (out[0], out[2]) + ((out[3],) if emit_snr else ())
 
+    out_specs = (g_specs, v_specs) + ((snr_specs,) if emit_snr else ())
     fn = shard_map(local_fn_no_mu, mesh=mesh,
                    in_specs=(P(), g_specs, v_specs),
-                   out_specs=(g_specs, v_specs), check_rep=False)
-    u, v = fn(count, list(g_leaves), list(nu_leaves))
+                   out_specs=out_specs, check_rep=False)
+    out = fn(count, list(g_leaves), list(nu_leaves))
+    if emit_snr:
+        u, v, snr = out
+        _, _, _, out_s = unpack((u, None, v, snr))
+        return u, None, v, out_s
+    u, v = out
     return u, None, v
 
 
@@ -387,7 +581,7 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
                      b1: float, b2: float, eps: float, count,
                      use_first_moment: bool = True, interpret: Optional[bool] = None,
                      bucket_min_size: int = DEFAULT_BUCKET_MIN,
-                     mesh=None, spec_leaves=None):
+                     mesh=None, spec_leaves=None, emit_snr: bool = False):
     """SlimAdam over a leaf list with per-leaf reduction-dim tuples.
 
     Each leaf's route comes from one :func:`leaf_plan` lookup: K = () leaves
@@ -398,34 +592,56 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
     serving the moment-less variant would stream a discarded full-size m and
     forfeit the bandwidth win. Returns (updates, new_mu_or_None, new_nu).
 
+    ``emit_snr=True`` appends a fourth element: a per-leaf list of
+    from-update SNR scalars (None for K = () leaves) — SNR_K of the step's
+    dense reconstruction ``b2 * V + (1 - b2) * g^2``, the paper's
+    compressibility diagnostic riding the update pass. Kernel-served leaves
+    emit the centered g^2 line sums from the same strip loop (O(kept) extra
+    traffic, zero extra full-size passes); jnp-fallback leaves compute the
+    same quantity in the already-fused XLA pass.
+
     With ``mesh`` + ``spec_leaves`` the update runs under ``shard_map`` with
     per-leaf regime plans (``repro.sharding.shardspec``): leaves whose
     reduced dims are whole per shard run the kernels locally on the shard,
-    leaves whose reduced dims are split complete their reduction lines with
-    a ``lax.psum`` over the owning mesh axes, and interleaved-K-after-
-    sharding leaves run the reference jnp math per shard."""
+    leaves whose reduced dims are split run the Pallas partial-stats /
+    finalize pair around a ``lax.psum`` over the owning mesh axes (with
+    owner-shard moment storage riding the collective), and interleaved-K-
+    after-sharding leaves run the reference jnp math per shard."""
     interpret = default_interpret() if interpret is None else interpret
     if _use_sharded(mesh, spec_leaves) and len(g_leaves):
         return _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves,
                                   spec_leaves, mesh, b1=b1, b2=b2, eps=eps,
                                   count=count, use_first_moment=use_first_moment,
-                                  interpret=interpret, bucket_min_size=bucket_min_size)
+                                  interpret=interpret, bucket_min_size=bucket_min_size,
+                                  emit_snr=emit_snr)
     kw = dict(b1=b1, b2=b2, eps=eps, count=count)
     n = len(g_leaves)
+    out_s: List[Any] = [None] * n
     if not use_first_moment:
         outs = [jnp_slim_leaf(g, None, v, tuple(d), use_first_moment=False, **kw)
                 for g, v, d in zip(g_leaves, nu_leaves, dims_leaves)]
+        if emit_snr:
+            out_s = [jnp_update_snr_leaf(g, o[2], tuple(d), b2=b2) if tuple(d) else None
+                     for g, o, d in zip(g_leaves, outs, dims_leaves)]
+            return [o[0] for o in outs], None, [o[2] for o in outs], out_s
         return [o[0] for o in outs], None, [o[2] for o in outs]
     out_u: List[Any] = [None] * n
     out_m: List[Any] = [None] * n
     out_v: List[Any] = [None] * n
     bucket: List[int] = []
+    # The with_snr kernel variant keeps an extra shifted-g^2 copy live, so
+    # measure steps gate the VMEM fit on its larger working set (a leaf near
+    # the budget may route jnp on measure steps while staying fused on
+    # plain steps — different jitted executables anyway).
+    n_bufs = PRECOND_SNR_BUFS if emit_snr else PRECOND_BUFS
     for i, (g, v, dims) in enumerate(zip(g_leaves, nu_leaves, dims_leaves)):
         dims = tuple(dims)
-        plan = leaf_plan(g.shape, g.dtype, dims, n_bufs=PRECOND_BUFS)
+        plan = leaf_plan(g.shape, g.dtype, dims, n_bufs=n_bufs)
         if plan.route == "jnp":
             out_u[i], out_m[i], out_v[i] = jnp_slim_leaf(
                 g, mu_leaves[i], v, dims, use_first_moment=True, **kw)
+            if emit_snr and dims:
+                out_s[i] = jnp_update_snr_leaf(g, out_v[i], dims, b2=b2)
         elif plan.route == "dense":
             if bucket_min_size and g.size < bucket_min_size:
                 bucket.append(i)
@@ -433,8 +649,13 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
                 out_u[i], out_m[i], out_v[i] = _dense_kernel_leaf(
                     g, mu_leaves[i], v, interpret=interpret, **kw)
         else:
-            out_u[i], out_m[i], out_v[i] = _slim_kernel_leaf(
-                g, mu_leaves[i], v, plan.cn, interpret=interpret, **kw)
+            out = _slim_kernel_leaf(g, mu_leaves[i], v, plan.cn,
+                                    interpret=interpret, with_snr=emit_snr, **kw)
+            out_u[i], out_m[i], out_v[i] = out[:3]
+            if emit_snr:
+                out_s[i] = out[3]
     _flush_bucket(bucket, g_leaves, mu_leaves, nu_leaves, out_u, out_m, out_v,
                   interpret=interpret, **kw)
+    if emit_snr:
+        return out_u, out_m, out_v, out_s
     return out_u, out_m, out_v

@@ -144,7 +144,25 @@ class ShardLeafPlan(NamedTuple):
     shards). ``spec`` / ``red_spec`` are the evened full-leaf and reduced-
     moment specs; ``psum_axes`` the mesh axes owning sharded reduced dims
     ('psum' only); ``red_total`` the *global* reduction extent (the mean's
-    divisor after the psum)."""
+    divisor after the psum).
+
+    Psum-regime extras:
+
+    ``finalize`` ('kernel' | 'jnp') records whether the *local* canonical
+    plan is servable by the partial-stats/finalize Pallas pair — 'jnp' is
+    the fallback the roofline gate counts (:func:`regime_counts` reports it
+    as 'psum_jnp') — and ``cn`` carries that local plan's
+    :class:`repro.kernels.ops.CanonND` (set iff ``finalize == 'kernel'``),
+    so the dispatcher runs exactly the plan the planner gated instead of
+    re-deriving one under a second buffer-count constant. ``owner`` is the owner-shard dedupe placement for the
+    reduced moment: ``((mesh_axis, dim), ...)`` assigning psum-group axes
+    onto kept dims they divide evenly, and ``nu_spec`` the corresponding
+    storage spec — v_new is written only as each shard's owner slice and
+    re-broadcast by riding the next step's partial-sums psum (zero extra
+    ICI; see ``repro.optim.fused._psum_slim_leaf``). Empty/``red_spec``
+    when no kept dim divides (the moment stays replicated, PR-4 style).
+    ``kept_axes`` are the mesh axes sharding kept dims (the ``lax.pmean``
+    axes for from-update SNR ratio means)."""
 
     regime: str
     spec: P
@@ -152,6 +170,59 @@ class ShardLeafPlan(NamedTuple):
     psum_axes: Tuple[str, ...]
     local_shape: Tuple[int, ...]
     red_total: int
+    finalize: str = "kernel"
+    owner: Tuple[Tuple[str, int], ...] = ()
+    nu_spec: Optional[P] = None
+    kept_axes: Tuple[str, ...] = ()
+    cn: Optional[Any] = None    # local CanonND, set iff finalize == 'kernel'
+
+
+def owner_factor(pl: ShardLeafPlan, mesh: Any) -> int:
+    """Dedupe factor the owner placement achieves for the stored reduced
+    moment (1 = fully replicated across the psum group, PR-4 behavior)."""
+    sizes = dict(mesh.shape)
+    return math.prod(int(sizes.get(a, 1)) for a, _ in pl.owner)
+
+
+def owner_placement(red_shape: Sequence[int], red_spec: P, psum_axes: Sequence[str],
+                    mesh: Any) -> Tuple[Tuple[Tuple[str, int], ...], P]:
+    """Greedy owner-shard placement for a psum leaf's reduced moment.
+
+    The moment is replicated across ``psum_axes`` (masking the reduced dims
+    deleted exactly those spec entries). Assign each psum axis onto a kept
+    dim whose *local* extent it divides evenly — the storage then holds a
+    1/A owner slice per shard, and the broadcast back to full lines rides
+    the partial-sums all-reduce (which already moves every line over those
+    axes), costing zero additional ICI.
+
+    All-or-nothing: if *any* psum axis finds no dim (e.g. gpt_small's vocab
+    50304, which 256 does not divide), the whole placement is dropped and
+    the moment stays replicated. A partial placement would be wrong, not
+    merely weaker — the ``b2 * v`` payload contribution is keyed to the
+    owner slice, so shards along an *unplaced* psum axis would each add an
+    identical copy into the all-reduce, inflating the moment by that axis's
+    size. Returns ``(placement, nu_spec)``."""
+    sizes = dict(mesh.shape)
+    entries = [list(e) for e in spec_entries(red_spec, len(red_shape))]
+    local = [s // math.prod(int(sizes.get(a, 1)) for a in e)
+             for s, e in zip(red_shape, entries)]
+    placement: List[Tuple[str, int]] = []
+    for a in psum_axes:
+        f = int(sizes.get(a, 1))
+        if f <= 1:
+            continue
+        # Largest local extent first: keeps slices tile-friendly.
+        for i in sorted(range(len(red_shape)), key=lambda j: -local[j]):
+            if local[i] > 1 and local[i] % f == 0:
+                entries[i].append(a)
+                local[i] //= f
+                placement.append((a, i))
+                break
+        else:
+            return (), red_spec
+    nu_spec = P(*[None if not e else (e[0] if len(e) == 1 else tuple(e))
+                  for e in entries])
+    return tuple(placement), nu_spec
 
 
 def plan_sharded_leaf(shape: Sequence[int], dtype: Any, dims: Dims, spec: Optional[P],
@@ -176,11 +247,29 @@ def plan_sharded_leaf(shape: Sequence[int], dtype: Any, dims: Dims, spec: Option
     red_spec = masked_spec(shape, spec, mesh, dims)
     red_total = math.prod(shape[i] for i in sorted(dset))
     psum_axes = owning_axes(shape, spec, mesh, dims)
+    kept = tuple(i for i in range(len(shape)) if i not in dset)
+    kept_axes = owning_axes(shape, spec, mesh, kept)
     if psum_axes:
-        return ShardLeafPlan("psum", spec_e, red_spec, psum_axes, lshape, red_total)
+        from ..kernels.slim_update import FINALIZE_BUFS, PARTIAL_BUFS
+
+        red_shape = tuple(1 if i in dset else s for i, s in enumerate(shape))
+        owner, nu_spec = owner_placement(red_shape, red_spec, psum_axes, mesh)
+        # The psum route runs the partial-stats + finalize pair: the line
+        # must fit the hungriest stage's working set (PARTIAL_BUFS also
+        # covers the with_snr variant), not just the caller's single-kernel
+        # buffer count.
+        lplan = leaf_plan(lshape, dtype, dims,
+                          n_bufs=max(n_bufs, PARTIAL_BUFS, FINALIZE_BUFS),
+                          allow_transpose=False)
+        finalize = "kernel" if lplan.route == "slim" else "jnp"
+        return ShardLeafPlan("psum", spec_e, red_spec, psum_axes, lshape,
+                             red_total, finalize=finalize, owner=owner,
+                             nu_spec=nu_spec, kept_axes=kept_axes,
+                             cn=lplan.cn)
     plan = leaf_plan(lshape, dtype, dims, n_bufs=n_bufs, allow_transpose=False)
     regime = "local" if plan.route in ("dense", "slim") else "jnp"
-    return ShardLeafPlan(regime, spec_e, red_spec, (), lshape, red_total)
+    return ShardLeafPlan(regime, spec_e, red_spec, (), lshape, red_total,
+                         kept_axes=kept_axes)
 
 
 def plan_sharded_tree(shapes: Sequence[Tuple[int, ...]], dtypes: Sequence[Any],
@@ -192,12 +281,20 @@ def plan_sharded_tree(shapes: Sequence[Tuple[int, ...]], dtypes: Sequence[Any],
 
 
 def regime_counts(plans: Sequence[ShardLeafPlan]) -> Dict[str, int]:
-    """{'local': n, 'psum': n, 'jnp': n} over a planned tree — the report the
-    dispatchers and the sharded roofline print, so a planner regression that
-    silently demotes kernel leaves to the jnp fallback is visible."""
-    out = {"local": 0, "psum": 0, "jnp": 0}
+    """{'local': n, 'psum': n, 'psum_jnp': n, 'jnp': n} over a planned tree —
+    the report the dispatchers and the sharded roofline print, so a planner
+    regression that silently demotes kernel leaves to a jnp fallback is
+    visible. 'psum' counts only Pallas-resident psum leaves (partial-stats +
+    finalize kernels); 'psum_jnp' counts psum leaves whose local canonical
+    plan the kernel pair cannot serve (interleaved K after sharding,
+    VMEM-exceeding lines) — the CI roofline gate holds this at zero for
+    gpt_small."""
+    out = {"local": 0, "psum": 0, "psum_jnp": 0, "jnp": 0}
     for pl in plans:
-        out[pl.regime] += 1
+        if pl.regime == "psum" and pl.finalize != "kernel":
+            out["psum_jnp"] += 1
+        else:
+            out[pl.regime] += 1
     return out
 
 

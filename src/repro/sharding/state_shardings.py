@@ -50,16 +50,36 @@ def _check_mirrors(state_tree: Any, params_abstract: Any, what: str) -> None:
             f"({s_def} vs params {p_def}) — {hint}.")
 
 
-def _masked_like_params(spec_tree: Any, abstract_tree: Any, params_abstract: Any) -> Any:
-    """Param specs with entries dropped where the state dim collapsed to 1."""
+def _masked_like_params(spec_tree: Any, abstract_tree: Any, params_abstract: Any,
+                        owner_mesh: Any = None) -> Any:
+    """Param specs with entries dropped where the state dim collapsed to 1.
+
+    With ``owner_mesh`` (the fused sharded backend's mesh), a reduced moment
+    whose reduction dims are split across mesh shards ('psum' regime) gets
+    the plan's *owner* storage spec instead: the fused update stores v as a
+    1/A owner slice per shard and re-broadcasts it by riding the
+    partial-sums all-reduce (``repro.sharding.shardspec.owner_placement``).
+    Pinning the launcher-visible state to the same layout keeps the dedupe
+    real end to end — the masked (psum-group-replicated) spec would force an
+    O(kept) gather on every step's pjit output boundary, silently un-doing
+    the owner-write saving."""
 
     def leaf(spec: P, state_leaf, param_leaf):
         entries = list(spec) + [None] * (param_leaf.ndim - len(spec))
-        out = [
-            None if state_leaf.shape[i] != param_leaf.shape[i] else entries[i]
-            for i in range(param_leaf.ndim)
-        ]
-        return P(*out)
+        dims = tuple(i for i in range(param_leaf.ndim)
+                     if state_leaf.shape[i] != param_leaf.shape[i])
+        out = [None if i in dims else entries[i] for i in range(param_leaf.ndim)]
+        base = P(*out)
+        if owner_mesh is None or not dims:
+            return base
+        from ..kernels.slim_update import PRECOND_BUFS
+        from .shardspec import plan_sharded_leaf
+
+        pl = plan_sharded_leaf(param_leaf.shape, param_leaf.dtype, dims, spec,
+                               owner_mesh, n_bufs=PRECOND_BUFS)
+        if pl.regime == "psum" and pl.owner:
+            return pl.nu_spec
+        return base
 
     return jax.tree.map(leaf, spec_tree, abstract_tree, params_abstract)
 
@@ -68,8 +88,17 @@ def _replicated(tree: Any) -> Any:
     return jax.tree.map(lambda _: P(), tree)
 
 
-def opt_state_specs(abstract_state: Any, params_abstract: Any, param_spec_tree: Any) -> Any:
+def opt_state_specs(abstract_state: Any, params_abstract: Any, param_spec_tree: Any,
+                    *, owner_mesh: Any = None) -> Any:
     """PartitionSpec pytree matching ``abstract_state``.
+
+    ``owner_mesh``: pass the mesh when the optimizer runs the *fused sharded
+    backend* — SlimAdam's psum-regime reduced moments then get their
+    owner-slice storage specs (see :func:`_masked_like_params`) so the pjit
+    state boundary matches the shard_map layout instead of gathering the
+    owner slices back to psum-group-replicated every step. Leave ``None``
+    for the jnp backend, which partitions natively under pjit and expects
+    the masked specs.
 
     Raises ``ValueError`` (not a cryptic tree_map arity failure) when a
     state subtree that must mirror the parameter tree does not — e.g. the
@@ -91,7 +120,10 @@ def opt_state_specs(abstract_state: Any, params_abstract: Any, param_spec_tree: 
             return ScaleBySlimAdamState(
                 count=P(),
                 mu=_like_params(param_spec_tree) if node.mu is not None else None,
-                nu=_masked_like_params(param_spec_tree, node.nu, params_abstract),
+                nu=_masked_like_params(param_spec_tree, node.nu, params_abstract,
+                                       owner_mesh),
+                # from-update SNR scalars (emit_snr states only): replicated
+                snr=_replicated(node.snr) if node.snr is not None else None,
             )
         if isinstance(node, ScaleByAdamState):
             _check_mirrors(node.mu, params_abstract, "ScaleByAdamState.mu")

@@ -40,39 +40,59 @@ OPTIMIZERS = ("adam", "slim", "slim_snr", "adalayer", "adalayer_ln_tl",
               "sm3", "lion", "sgdm")
 
 
+_SLIM_FAMILY = ("slim", "slim_snr", "adalayer", "adalayer_ln_tl",
+                "adam_mini_v1", "adam_mini_v2")
+
+
+def slim_rule_dims(name: str, params, meta, rules: Optional[Dict[str, Any]] = None):
+    """Per-leaf reduction-dims pytree the slim-family optimizer ``name``
+    compresses with (None for optimizers without compressed moments). One
+    derivation shared by :func:`make_optimizer` and the trainer's
+    from-update SNR consumer, so the measurement pairs ridden stats with
+    exactly the K the update reduced."""
+    if name not in _SLIM_FAMILY:
+        return None
+    if name == "slim":
+        r = table3_rules(meta)
+    elif name == "slim_snr":
+        if rules is None:
+            raise ValueError("slim_snr requires derived rules")
+        r = rules
+    elif name == "adalayer":
+        r = adalayer_rules(meta)
+    elif name == "adalayer_ln_tl":
+        r = adalayer_ln_tl_rules(meta)
+    elif name == "adam_mini_v1":
+        r = adam_mini_v1_rules(meta)
+    else:
+        r = adam_mini_v2_rules(meta)
+    return rules_as_tree(r, params, meta)
+
+
 def make_optimizer(name: str, lr, params, meta, *, weight_decay: float = 0.1,
                    b1: float = 0.9, b2: float = 0.95, grad_clip: float = 1.0,
                    rules: Optional[Dict[str, Any]] = None, backend: str = "jnp",
-                   mesh=None, param_specs=None):
+                   mesh=None, param_specs=None, emit_snr: bool = False):
     """Build any of the paper's optimizers. ``rules`` overrides the rule set
     for 'slim_snr' (derived from a measured SNR pass). ``backend`` selects
     the execution path for the Adam/SlimAdam family ('jnp' | 'fused' |
     'auto', see repro.optim.base.BACKENDS); other optimizers ignore it.
     ``mesh``/``param_specs`` make the fused backend shard-aware (the tree
     update runs under shard_map on the local shards); only the Adam/SlimAdam
-    family consumes them."""
+    family consumes them. ``emit_snr`` (slim family only) builds the
+    measure-step variant whose update publishes from-update SNR scalars on
+    the optimizer state (see ``repro.core.slim_adam.scale_by_slim_adam``)."""
+    if emit_snr and name not in _SLIM_FAMILY:
+        raise ValueError(f"emit_snr is only supported by the slim family "
+                         f"{_SLIM_FAMILY}, not {name!r}")
     if name == "adam":
         return adamw(lr, b1=b1, b2=b2, weight_decay=weight_decay, grad_clip=grad_clip,
                      backend=backend, mesh=mesh, param_specs=param_specs)
-    if name in ("slim", "slim_snr", "adalayer", "adalayer_ln_tl", "adam_mini_v1", "adam_mini_v2"):
-        if name == "slim":
-            r = table3_rules(meta)
-        elif name == "slim_snr":
-            if rules is None:
-                raise ValueError("slim_snr requires derived rules")
-            r = rules
-        elif name == "adalayer":
-            r = adalayer_rules(meta)
-        elif name == "adalayer_ln_tl":
-            r = adalayer_ln_tl_rules(meta)
-        elif name == "adam_mini_v1":
-            r = adam_mini_v1_rules(meta)
-        else:
-            r = adam_mini_v2_rules(meta)
-        dims = rules_as_tree(r, params, meta)
+    if name in _SLIM_FAMILY:
+        dims = slim_rule_dims(name, params, meta, rules)
         return slim_adam(lr, dims, b1=b1, b2=b2, weight_decay=weight_decay,
                          grad_clip=grad_clip, backend=backend, mesh=mesh,
-                         param_specs=param_specs)
+                         param_specs=param_specs, emit_snr=emit_snr)
     if name == "adafactor":
         return adafactor(lr, weight_decay=weight_decay, grad_clip=grad_clip)
     if name == "adafactor_v2":
@@ -108,6 +128,47 @@ def find_adam_nu(opt_state) -> Optional[Any]:
     return walk(opt_state)
 
 
+def _strip_slim_snr(opt_state):
+    """Return ``opt_state`` with any published from-update SNR snapshot
+    cleared — restores the snr-less pytree layout after the trainer has
+    consumed a measure step's snapshot (checkpoint templates and the normal
+    step's jit signature both expect it)."""
+    from ..core.slim_adam import ScaleBySlimAdamState
+    from ..optim.base import ChainState, MultiStepsState
+
+    def walk(node):
+        if isinstance(node, ScaleBySlimAdamState):
+            return node._replace(snr=None) if node.snr is not None else node
+        if isinstance(node, ChainState):
+            return ChainState(tuple(walk(s) for s in node.inner_states))
+        if isinstance(node, MultiStepsState):
+            return node._replace(inner_state=walk(node.inner_state))
+        return node
+
+    return walk(opt_state)
+
+
+def find_slim_snr(opt_state) -> Optional[Any]:
+    """Extract the from-update SNR pytree a measure-step ``emit_snr``
+    update published on the (possibly chained) SlimAdam state, if any."""
+    from ..core.slim_adam import ScaleBySlimAdamState
+    from ..optim.base import ChainState, MultiStepsState
+
+    def walk(node):
+        if isinstance(node, ScaleBySlimAdamState):
+            return node.snr
+        if isinstance(node, ChainState):
+            for s in node.inner_states:
+                out = walk(s)
+                if out is not None:
+                    return out
+        if isinstance(node, MultiStepsState):
+            return walk(node.inner_state)
+        return None
+
+    return walk(opt_state)
+
+
 @dataclasses.dataclass
 class TrainerConfig:
     total_steps: int = 1000
@@ -118,6 +179,12 @@ class TrainerConfig:
     measure_snr: bool = False
     snr_early_every: int = 100
     snr_late_every: int = 1000
+    # Ride the SNR measurement on the update pass: measure steps run a
+    # second jitted train step whose optimizer update also emits per-leaf
+    # from-update SNR scalars (slim family only; O(kept) extra traffic on
+    # the fused backend), and measure_tree_snr consumes them instead of
+    # re-reading nu for the candidate K the optimizer already reduces.
+    snr_from_update: bool = False
     seed: int = 0
     # Execution backend for the Adam/SlimAdam update and the SNR measurement
     # pass: 'jnp' | 'fused' | 'auto' (fused kernels on TPU, jnp elsewhere).
@@ -155,6 +222,19 @@ class Trainer:
         self.snr = SNRTracker()
         self.metrics_log: list = []
         self._train_step = jax.jit(make_train_step(model_cfg, self.tx, grad_accum=grad_accum))
+        # Measure-step variant: same optimizer built with emit_snr=True, so
+        # on SNR cadence steps the update pass itself measures SNR_K along
+        # each compressed leaf's own K (state.snr) and maybe_measure_snr
+        # skips the extra nu read for that candidate.
+        self._train_step_snr = None
+        self._update_dims = None
+        if tc.measure_snr and tc.snr_from_update and optimizer_name in _SLIM_FAMILY:
+            self._update_dims = slim_rule_dims(optimizer_name, self.params,
+                                               self.meta, rules)
+            tx_snr = make_optimizer(optimizer_name, lr, self.params, self.meta,
+                                    rules=rules, emit_snr=True, **okw)
+            self._train_step_snr = jax.jit(
+                make_train_step(model_cfg, tx_snr, grad_accum=grad_accum))
         self._restored = False
         if tc.ckpt_dir and store.latest_step(tc.ckpt_dir) is not None:
             self.restore()
@@ -185,9 +265,18 @@ class Trainer:
         nu = find_adam_nu(self.opt_state)
         if nu is None:
             return
-        snapshot = measure_tree_snr(nu, self.meta, backend=self.backend,
-                                    mesh=self.mesh, param_specs=self.param_specs)
+        from_upd = (find_slim_snr(self.opt_state)
+                    if self._train_step_snr is not None else None)
+        snapshot = measure_tree_snr(
+            nu, self.meta, backend=self.backend,
+            mesh=self.mesh, param_specs=self.param_specs,
+            from_update=from_upd,
+            update_dims=self._update_dims if from_upd is not None else None)
         self.snr.update(snapshot, self.step)
+        if from_upd is not None:
+            # Strip the consumed snapshot so checkpoints and the normal
+            # step's jit signature keep the snr-less state layout.
+            self.opt_state = _strip_slim_snr(self.opt_state)
 
     # -- main loop -----------------------------------------------------------
 
@@ -210,7 +299,14 @@ class Trainer:
         while self.step < steps:
             batch = self.data.batch(self.step)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            self.params, self.opt_state, metrics = self._train_step(
+            # On SNR-cadence steps, run the emit_snr step variant so the
+            # measurement rides the update pass (state.snr) instead of
+            # paying a separate nu read in maybe_measure_snr.
+            step_fn = self._train_step
+            if self._train_step_snr is not None and SNRTracker.should_measure(
+                    self.step + 1, self.tc.snr_early_every, self.tc.snr_late_every):
+                step_fn = self._train_step_snr
+            self.params, self.opt_state, metrics = step_fn(
                 self.params, self.opt_state, batch)
             self.step += 1
             self.maybe_measure_snr()
