@@ -1,7 +1,7 @@
 # Every target delegates to scripts/ci.sh — the single source of truth the
 # GitHub workflow calls too, so `make ci` and hosted CI cannot drift.
 
-.PHONY: lint test test-fast bench-quick bench bench-roofline ci
+.PHONY: lint test test-fast bench-quick bench bench-roofline fault-drill ci
 
 lint:
 	bash scripts/ci.sh lint
@@ -28,6 +28,12 @@ bench:
 # in interpret mode — nothing executes, only the planners run.
 bench-roofline:
 	bash scripts/ci.sh bench-roofline
+
+# Resilience gate: fault-injection test suite + the end-to-end drill (an
+# injected gpt_small run must complete within 2% of the clean run's eval
+# loss with every injection visible in the guard counters).
+fault-drill:
+	bash scripts/ci.sh fault-drill
 
 ci:
 	bash scripts/ci.sh

@@ -1,0 +1,177 @@
+"""Fault drill: prove an injected run survives and converges.
+
+The resilience substrate's acceptance test (ISSUE 6): a guarded gpt_small
+run with **NaN-gradient**, **loss-spike**, **torn-checkpoint**, and
+**checkpoint-IO-failure** injections must (a) complete, (b) land within 2%
+of the un-injected run's final eval loss on a held-out stream, and (c) show
+every injection in the guard counters. A separate pass injects a **kernel
+failure** and checks the per-leaf degradation to the jnp reference path
+keeps the update numerically correct.
+
+    PYTHONPATH=src python -m benchmarks.fault_drill [--preset quick|full]
+
+Exit code 1 on any tolerance/counter failure (CI gate: scripts/ci.sh
+fault-drill).
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import sys
+import tempfile
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.data import DataConfig, ZipfLM
+from repro.train import (
+    FaultPlan,
+    GuardConfig,
+    Trainer,
+    TrainerConfig,
+    inject_checkpoint_io_failure,
+    inject_kernel_failure,
+    tear_checkpoint,
+)
+from repro.train.step import make_eval_step
+
+from .common import append_bench_history, emit
+
+REL_TOL = 0.02   # injected final eval loss within 2% of clean
+EVAL_SEED = 123
+EVAL_BATCHES = 4
+
+
+def _eval_loss(cfg, params, *, seq: int, batch: int) -> float:
+    """Mean eval loss over a fixed held-out stream (same for every run)."""
+    data = ZipfLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                             global_batch=batch, seed=EVAL_SEED))
+    step = jax.jit(make_eval_step(cfg))
+    losses = []
+    for i in range(EVAL_BATCHES):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        losses.append(float(step(params, b)["loss"]))
+    return sum(losses) / len(losses)
+
+
+def _make_trainer(cfg, steps, *, seq, batch, backend, ckpt_dir=None,
+                  ckpt_every=0, faults=None) -> Trainer:
+    data = ZipfLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                             global_batch=batch, seed=0))
+    tc = TrainerConfig(
+        total_steps=steps, log_every=max(steps // 2, 1), seed=0,
+        backend=backend, ckpt_every=ckpt_every, ckpt_dir=ckpt_dir,
+        guard=GuardConfig(max_bad_steps=2, min_history=4, spike_z=6.0))
+    return Trainer(cfg, "slim", 3e-3, data, tc, faults=faults)
+
+
+def main(preset: str = "quick") -> None:
+    steps = 40 if preset == "quick" else 200
+    seq, batch = (32, 8) if preset == "quick" else (128, 8)
+    backend = "fused"
+    cfg = get_reduced("gpt_small")
+    half = steps // 2
+    failures = []
+
+    # -- clean reference run (guarded, no injections) ----------------------
+    clean = _make_trainer(cfg, steps, seq=seq, batch=batch, backend=backend)
+    clean.run()
+    clean_loss = _eval_loss(cfg, clean.params, seq=seq, batch=batch)
+
+    # -- injected run ------------------------------------------------------
+    # NaN grads early, then a consecutive spike pair in the second half that
+    # escalates past max_bad_steps into a rollback — whose newest checkpoint
+    # we tear mid-run, forcing restore() to fall back to an older valid one.
+    faults = FaultPlan(nan_grad_steps=(7,),
+                       spike_steps=(half + 4, half + 5), spike_scale=100.0)
+    tmp = Path(tempfile.mkdtemp(prefix="fault_drill_"))
+    try:
+        tr = _make_trainer(cfg, steps, seq=seq, batch=batch, backend=backend,
+                           ckpt_dir=str(tmp), ckpt_every=5, faults=faults)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            tr.run(half)
+            # torn-checkpoint injection: corrupt the newest step on disk the
+            # way a preemption mid-write would
+            torn = tear_checkpoint(tmp)
+            # checkpoint-IO-failure injection: the next save raises OSError
+            with inject_checkpoint_io_failure(fail_on=(1,)) as io_state:
+                tr.run(steps)
+        inj_loss = _eval_loss(cfg, tr.params, seq=seq, batch=batch)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    rel = abs(inj_loss - clean_loss) / max(clean_loss, 1e-9)
+    c = tr.guard.counters
+    if tr.step != steps:
+        failures.append(f"injected run stopped at step {tr.step}/{steps}")
+    if rel > REL_TOL:
+        failures.append(f"injected eval loss {inj_loss:.4f} deviates "
+                        f"{rel:.1%} from clean {clean_loss:.4f} (> {REL_TOL:.0%})")
+    if c["skipped"] < 1:
+        failures.append("NaN-grad injection not visible: guard skipped == 0")
+    if c["spikes"] < 1:
+        failures.append("spike injection not visible: guard spikes == 0")
+    if c["rollbacks"] < 1:
+        failures.append("no rollback despite consecutive spikes")
+    if tr.ckpt_failures < 1 or io_state["failed"] < 1:
+        failures.append("checkpoint-IO injection not visible: "
+                        f"ckpt_failures={tr.ckpt_failures}, "
+                        f"injected={io_state['failed']}")
+
+    # -- kernel-failure degradation pass -----------------------------------
+    # Force the fused path's pallas launches to raise: every leaf must
+    # degrade to the jnp reference path and the update must match a clean
+    # jnp run bit-for-bit (same math, same order).
+    from repro.optim import fused as fused_mod
+
+    deg_tr = _make_trainer(cfg, 3, seq=seq, batch=batch, backend="fused")
+    ref_tr = _make_trainer(cfg, 3, seq=seq, batch=batch, backend="jnp")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with inject_kernel_failure():
+            deg_tr.run()
+            degraded = fused_mod.kernel_degraded_leaves()
+        ref_tr.run()
+    fused_mod.reset_kernel_degradation()
+    if degraded < 1:
+        failures.append("kernel-failure injection produced no degraded leaves")
+    deg_delta = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree_util.tree_leaves(deg_tr.params),
+                        jax.tree_util.tree_leaves(ref_tr.params)))
+    if deg_delta > 1e-5:
+        failures.append(f"degraded-path params deviate from jnp oracle "
+                        f"by {deg_delta:.2e}")
+
+    metrics = {
+        "preset": preset, "steps": steps,
+        "clean_eval_loss": round(clean_loss, 6),
+        "injected_eval_loss": round(inj_loss, 6),
+        "rel_diff": round(rel, 6),
+        "guard_skipped": c["skipped"], "guard_spikes": c["spikes"],
+        "guard_backoffs": c["backoffs"], "guard_rollbacks": c["rollbacks"],
+        "guard_nonfinite_total": c["nonfinite_total"],
+        "ckpt_failures": tr.ckpt_failures, "torn_step": torn,
+        "degraded_leaves": degraded,
+        "degraded_param_delta": deg_delta,
+        "ok": not failures,
+    }
+    append_bench_history("fault_drill", metrics, name="BENCH_stability.json")
+    emit("fault_drill_rel_diff", rel * 1e6,
+         f"clean={clean_loss:.4f};injected={inj_loss:.4f};"
+         f"rollbacks={c['rollbacks']};skipped={c['skipped']};"
+         f"degraded={degraded}")
+    for f in failures:
+        print(f"FAULT DRILL FAILURE: {f}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=("quick", "full"), default="quick")
+    main(ap.parse_args().preset)

@@ -317,6 +317,44 @@ def _snr_stat_lines():
     return ({"psum": len(partial), "local": len(precond),
              "jnp": len(precond)}, oversize)
 
+
+def _health_stat_outputs():
+    """Extra-output shapes of every kernel's ``with_health`` variant,
+    observed from the kernels' own signatures (``jax.eval_shape`` with and
+    without the flag) — the anomaly-guard claim is that health stats ride
+    the existing update pass for **O(1) scalars per leaf**, zero new tensor
+    traffic, so the gate must see exactly one tiny accumulator per kernel.
+
+    Returns a list of (kernel_name, extra_output_shapes); the gate fails if
+    any kernel adds more than one extra output or any extra output holds
+    more than the 2 health scalars."""
+    from repro.kernels.fused_adam import adam_precond
+    from repro.kernels.slim_update import (slim_partial_stats_batched,
+                                           slim_precond_batched)
+
+    g2 = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+    g3 = jax.ShapeDtypeStruct((2, 8, 128), jnp.float32)
+    v3 = jax.ShapeDtypeStruct((2, 8, 1), jnp.float32)
+
+    def extra(base_fn, health_fn):
+        base = jax.tree.leaves(jax.eval_shape(base_fn))
+        health = jax.tree.leaves(jax.eval_shape(health_fn))
+        return [tuple(o.shape) for o in health[len(base):]]
+
+    return [
+        ("adam_precond", extra(
+            lambda: adam_precond(g2, g2, g2, interpret=True),
+            lambda: adam_precond(g2, g2, g2, with_health=True, interpret=True))),
+        ("slim_precond_batched", extra(
+            lambda: slim_precond_batched(g3, g3, v3, axis=1, interpret=True),
+            lambda: slim_precond_batched(g3, g3, v3, axis=1, with_health=True,
+                                         interpret=True))),
+        ("slim_partial_stats_batched", extra(
+            lambda: slim_partial_stats_batched(g3, g3, axis=1, interpret=True),
+            lambda: slim_partial_stats_batched(g3, g3, axis=1, with_health=True,
+                                               interpret=True))),
+    ]
+
 # CI gate ceilings (tightened for the owner-write scheme; see ROADMAP's
 # sharded roofline record for the decomposition):
 #   compressed-leaf per-shard ratio — the paper-relevant figure: compressed
@@ -357,7 +395,11 @@ def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16
         ``_GATE_FULL_RATIO`` — the owner-write dedupe must hold;
       * a fused-SNR measure step adds more than ``_GATE_SNR_LINES`` O(kept)
         stat lines per compressed leaf over a plain update step — the
-        from-update measurement must stay O(kept).
+        from-update measurement must stay O(kept);
+      * a ``with_health`` kernel variant adds anything beyond one 2-scalar
+        accumulator output (``_health_stat_outputs``) — the anomaly guard's
+        in-pass stats must stay O(1) bytes per leaf, so the update-step
+        byte ratios above are provably unchanged by guarded training.
     """
     import math
 
@@ -372,6 +414,7 @@ def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16
     ctx = ShardingContext(mesh)
     full, params_full, named, dfl, metas = _gpt_small_full_leaves()
     snr_lines, snr_oversize = _snr_stat_lines()
+    health_outputs = _health_stat_outputs()
 
     rows = []
     failures = []
@@ -462,6 +505,8 @@ def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16
         "ici_kib_per_shard": round(tot_ici / 2**10, 2),
         "proj_us_per_step_chip": round(proj_us, 2),
         "snr_extra_kib": round(snr_extra / 2**10, 2),
+        "health_extra_scalars": sum(math.prod(s) for _, shapes in health_outputs
+                                    for s in shapes),
         "regimes": counts,
     })
     if check:
@@ -490,6 +535,13 @@ def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16
                        f"the kernels' with_snr signatures) exceeds "
                        f"{_GATE_SNR_LINES} O(kept) lines "
                        f"({_GATE_SNR_LINES * kept_total} B) — no longer O(kept)")
+        health_bad = [(k, shapes) for k, shapes in health_outputs
+                      if len(shapes) != 1
+                      or any(math.prod(s) > 2 for s in shapes)]
+        if health_bad:
+            bad.append(f"with_health kernel variant(s) add more than one "
+                       f"2-scalar accumulator: {health_bad} — in-pass health "
+                       f"must stay O(1) bytes per leaf")
         if bad:
             print("SHARDED ROOFLINE REGRESSION:")
             for b in bad:
@@ -498,7 +550,7 @@ def sharded_roofline(check: bool = False, mesh_shape=(("data", 16), ("model", 16
         print(f"sharded roofline OK: per-shard byte bound holds, psum regime "
               f"Pallas-resident ({counts['psum']} leaves, 0 jnp fallbacks), "
               f"compressed ratio {comp_ratio:.4f} <= {_GATE_COMPRESSED_RATIO}, "
-              f"fused-SNR delta O(kept)")
+              f"fused-SNR delta O(kept), in-pass health O(1)/leaf")
     return 0
 
 

@@ -11,7 +11,7 @@ import traceback
 
 from . import (lr_sweep, snr_trajectories, vocab_tail, lr_compressibility,
                init_comparison, savings, rule_robustness, opt_memory,
-               opt_speed, stability, resnet_snr)
+               opt_speed, stability, resnet_snr, fault_drill)
 
 ALL = {
     "lr_sweep": lr_sweep.main,                    # Fig 1 / Fig 10 bottom
@@ -27,6 +27,7 @@ ALL = {
     "opt_speed_sharded": opt_speed.sharded_main,  # per-shard bytes on the production mesh
     "stability": stability.main,                  # Fig 11
     "resnet_snr": resnet_snr.main,                # Fig 5, §3.1.3
+    "fault_drill": fault_drill.main,              # resilience substrate gate
 }
 
 

@@ -19,6 +19,14 @@
 #                                 (writes benchmarks/results/*.csv and
 #                                 appends the machine-readable perf
 #                                 trajectory BENCH_opt_speed.json)
+#   scripts/ci.sh fault-drill     resilience gate: the fault-injection test
+#                                 suite (tests/test_guard.py + the hardened
+#                                 checkpoint cases) then the end-to-end drill
+#                                 (benchmarks/fault_drill.py: injected
+#                                 gpt_small run completes within 2% of the
+#                                 clean run's eval loss, every injection
+#                                 visible in the guard counters; appends
+#                                 BENCH_stability.json)
 #   scripts/ci.sh all  (default)  lint + test-full + bench-roofline + the
 #                                 quick optimizer benches (the tier-1 gate)
 #
@@ -97,6 +105,15 @@ run_bench() {
   python -m benchmarks.run --preset quick
 }
 
+run_fault_drill() {
+  require_jax
+  # Injection suite first (fast, pinpoints the failing layer), then the
+  # end-to-end drill that exercises guard + rollback + hardened IO together.
+  python -m pytest -x -q tests/test_guard.py
+  python -m pytest -x -q tests/test_substrate.py -k "Hardened or wall_clock"
+  python -m benchmarks.run --preset quick --only fault_drill
+}
+
 case "$stage" in
   lint)           run_lint ;;
   test-fast)      run_test_fast ;;
@@ -104,8 +121,9 @@ case "$stage" in
   bench-roofline) run_bench_roofline ;;
   bench-quick)    run_bench_quick ;;
   bench)          run_bench ;;
+  fault-drill)    run_fault_drill ;;
   all)            run_lint; run_test_full; run_bench_roofline; run_bench_quick ;;
   *)
-    echo "usage: scripts/ci.sh [lint|test-fast|test-full|bench-roofline|bench-quick|bench|all]" >&2
+    echo "usage: scripts/ci.sh [lint|test-fast|test-full|bench-roofline|bench-quick|bench|fault-drill|all]" >&2
     exit 2 ;;
 esac

@@ -1,21 +1,29 @@
-"""Checkpointing: atomic, sharded, keep-last-k, with mesh-resharding restore.
+"""Checkpointing: atomic, checksummed, keep-last-k, with mesh-resharding
+restore and torn-write fallback.
 
 Layout (one directory per step):
 
     ckpt_dir/
       step_000100/
-        manifest.json        # step, tree structure, leaf shapes/dtypes, rng
+        manifest.json        # step, leaf shapes/dtypes/crc32s, extra
         arrays.npz           # flat leaf name -> full (unsharded) array
       step_000200/ ...
       LATEST                 # atomic pointer file
 
 Design notes for scale:
-  * arrays are written via a temp dir + atomic rename, so a preemption
-    mid-save never corrupts the latest checkpoint (fault tolerance);
+  * saves stage into a ``step-<n>.tmp`` dir and ``os.replace`` into place —
+    the dash keeps every ``step_*`` consumer (``_gc``, ``latest_step``'s
+    fallback scan, a concurrent restore) from ever observing a half-written
+    checkpoint, and a preemption mid-save leaves only the tmp dir behind;
+  * every leaf carries a crc32 in the manifest; ``restore()`` verifies them
+    and, when asked for the newest step, falls back to the newest *valid*
+    one instead of crashing on a torn/corrupt write;
   * ``restore(..., shardings=...)`` re-lays arrays onto *any* mesh — a run
     checkpointed on N chips restores onto M (elastic scaling). On a real
     cluster the npz would be a per-host shard file; the manifest logic is
-    identical;
+    identical. The atomic tmp-dir protocol is the groundwork for streaming
+    per-owner-shard writes (ROADMAP open item 5): each host will stage its
+    shard file into the same tmp dir before the single rename publishes;
   * optimizer states ride along as ordinary pytrees — SlimAdam's reduced
     second moments make the optimizer section ~50% smaller than Adam's,
     which is the paper's saving materialized on disk too.
@@ -27,7 +35,11 @@ import json
 import os
 import shutil
 import threading
+import time
+import warnings
 import weakref
+import zipfile
+import zlib
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
@@ -35,6 +47,15 @@ import jax
 import numpy as np
 
 from ..core.labels import flatten_with_names
+
+# Test/drill hook (see repro.train.faults.inject_checkpoint_io_failure):
+# called with the step number at the top of every save() attempt.
+_io_fault_hook = None
+
+
+class ChecksumError(ValueError):
+    """A stored leaf's bytes don't match its manifest crc32 (torn write or
+    bit rot). Subclasses ValueError so strict callers can catch broadly."""
 
 
 def _leaf_names(tree: Any):
@@ -44,27 +65,39 @@ def _leaf_names(tree: Any):
 
 def save(ckpt_dir: str | Path, step: int, tree: Any, *, extra: Optional[Dict[str, Any]] = None,
          keep: int = 3) -> Path:
-    """Blocking save. Returns the checkpoint path."""
+    """Blocking save. Returns the checkpoint path.
+
+    Atomic: everything is staged under ``step-<n>.tmp`` (the dash can never
+    match the ``step_*`` glob) and published with one ``os.replace``; on any
+    failure the tmp dir is removed and no ``step_*`` dir was touched."""
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
+    if _io_fault_hook is not None:
+        _io_fault_hook(step)
     final = ckpt_dir / f"step_{step:08d}"
-    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    tmp = ckpt_dir / f"step-{step:08d}.tmp"
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
-
-    named, _ = _leaf_names(tree)
-    arrays = {}
-    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
-    for name, leaf in named:
-        arr = np.asarray(jax.device_get(leaf))
-        arrays[name] = arr
-        manifest["leaves"][name] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
-    np.savez(tmp / "arrays.npz", **arrays)
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    if final.exists():
-        shutil.rmtree(final)
-    os.replace(tmp, final)
+    try:
+        named, _ = _leaf_names(tree)
+        arrays = {}
+        manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+        for name, leaf in named:
+            arr = np.asarray(jax.device_get(leaf))
+            arrays[name] = arr
+            manifest["leaves"][name] = {
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     # atomic LATEST pointer
     ptr_tmp = ckpt_dir / ".LATEST.tmp"
     ptr_tmp.write_text(final.name)
@@ -81,20 +114,61 @@ class AsyncCheckpointer:
     the newest — overlapping saves used to orphan the older thread), and a
     module-level ``atexit`` hook flushes every live checkpointer so the
     daemon threads can't be killed mid-write at interpreter exit (a WeakSet,
-    so instances stay collectable)."""
+    so instances stay collectable).
 
-    def __init__(self):
+    Fault handling: retryable IO errors (``OSError``) are retried with
+    exponential backoff (warning per retry); a save that still fails — or
+    fails with any other exception — is *recorded*, and the **first** such
+    failure is re-raised as a ``RuntimeError`` naming the failing step on
+    the next ``save()``/``wait()`` call (a worker-thread exception used to
+    vanish entirely)."""
+
+    def __init__(self, max_retries: int = 2, backoff_s: float = 0.05):
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
         self._io_lock = threading.Lock()       # serializes the actual writes
-        self._reg_lock = threading.Lock()      # guards the in-flight list
+        self._reg_lock = threading.Lock()      # guards in-flight list + failure
         self._threads: List[threading.Thread] = []
+        self._failure: Optional[tuple] = None  # (step, exception)
         _live_checkpointers.add(self)
 
+    def _record_failure(self, step, exc):
+        with self._reg_lock:
+            if self._failure is None:          # first failure wins
+                self._failure = (step, exc)
+
+    def _raise_pending(self):
+        with self._reg_lock:
+            failure, self._failure = self._failure, None
+        if failure is not None:
+            step, exc = failure
+            raise RuntimeError(
+                f"async checkpoint save for step {step} failed: {exc!r}") from exc
+
     def save(self, ckpt_dir, step, tree, **kw):
+        self._raise_pending()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
             with self._io_lock:
-                save(ckpt_dir, step, host_tree, **kw)
+                delay = self.backoff_s
+                for attempt in range(self.max_retries + 1):
+                    try:
+                        save(ckpt_dir, step, host_tree, **kw)
+                        return
+                    except OSError as e:
+                        if attempt == self.max_retries:
+                            self._record_failure(step, e)
+                            return
+                        warnings.warn(
+                            f"checkpoint save for step {step} hit {e!r}; "
+                            f"retrying in {delay:.2f}s "
+                            f"({attempt + 1}/{self.max_retries})")
+                        time.sleep(delay)
+                        delay *= 2
+                    except Exception as e:     # non-retryable
+                        self._record_failure(step, e)
+                        return
 
         t = threading.Thread(target=work, daemon=True)
         with self._reg_lock:
@@ -107,13 +181,15 @@ class AsyncCheckpointer:
             t.start()
 
     def wait(self):
-        """Block until every save issued so far has hit disk."""
+        """Block until every save issued so far has hit disk; re-raise the
+        first recorded worker failure, if any."""
         with self._reg_lock:
             pending = list(self._threads)
         for t in pending:
             t.join()
         with self._reg_lock:
             self._threads = [t for t in self._threads if t.is_alive()]
+        self._raise_pending()
 
 
 _live_checkpointers: "weakref.WeakSet[AsyncCheckpointer]" = weakref.WeakSet()
@@ -121,20 +197,67 @@ _live_checkpointers: "weakref.WeakSet[AsyncCheckpointer]" = weakref.WeakSet()
 
 def _flush_live_checkpointers():
     for acp in list(_live_checkpointers):
-        acp.wait()
+        try:
+            acp.wait()
+        except RuntimeError as e:
+            # interpreter exit: surface the failure without aborting the
+            # remaining flushes
+            warnings.warn(str(e))
 
 
 atexit.register(_flush_live_checkpointers)
 
 
+def _step_dirs(ckpt_dir: Path) -> List[Path]:
+    """All ``step_*`` checkpoint dirs, oldest first."""
+    return sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+
+
+def _shallow_valid(path: Path) -> bool:
+    return (path / "manifest.json").exists() and (path / "arrays.npz").exists()
+
+
 def latest_step(ckpt_dir: str | Path) -> Optional[int]:
-    ptr = Path(ckpt_dir) / "LATEST"
-    if not ptr.exists():
-        return None
-    name = ptr.read_text().strip()
-    if not (Path(ckpt_dir) / name / "manifest.json").exists():
-        return None
-    return int(name.split("_")[1])
+    """Newest step that at least *looks* complete (manifest + arrays on
+    disk; ``restore`` does the deep checksum verification). Prefers the
+    LATEST pointer, falls back to scanning ``step_*`` dirs newest-first when
+    the pointer is missing, stale, or names a torn dir."""
+    ckpt_dir = Path(ckpt_dir)
+    ptr = ckpt_dir / "LATEST"
+    if ptr.exists():
+        name = ptr.read_text().strip()
+        if _shallow_valid(ckpt_dir / name):
+            return int(name.split("_")[1])
+    for path in reversed(_step_dirs(ckpt_dir)):
+        if _shallow_valid(path):
+            return int(path.name.split("_")[1])
+    return None
+
+
+def _read_verified(path: Path) -> tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Storage phase of a restore: read manifest + every array and verify
+    the per-leaf crc32s. Raises OSError / BadZipFile / JSONDecodeError /
+    ChecksumError on torn or corrupt data — the errors the newest-valid
+    fallback treats as 'try the previous step'."""
+    manifest = json.loads((path / "manifest.json").read_text())
+    with np.load(path / "arrays.npz") as data:
+        arrays = {name: data[name] for name in data.files}
+    for name, arr in arrays.items():
+        want = manifest.get("leaves", {}).get(name, {}).get("crc32")
+        if want is None:
+            continue  # pre-checksum checkpoint: readable == valid
+        got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if got != want:
+            raise ChecksumError(
+                f"{path.name}: leaf {name!r} crc32 {got:#010x} != "
+                f"manifest {want:#010x} (torn write or corruption)")
+    return arrays, manifest
+
+
+# Errors _read_verified can raise for bad *storage* (vs a mismatched `like`
+# template, which always raises through).
+_STORAGE_ERRORS = (OSError, zipfile.BadZipFile, json.JSONDecodeError,
+                   zlib.error, ChecksumError, EOFError)
 
 
 def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
@@ -142,16 +265,40 @@ def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). With ``shardings`` (same-structure NamedSharding
     pytree) each leaf is jax.device_put onto the new mesh — this is the
-    elastic-rescale path: the stored arrays are global, so any mesh works."""
-    ckpt_dir = Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    path = ckpt_dir / f"step_{step:08d}"
-    manifest = json.loads((path / "manifest.json").read_text())
-    data = np.load(path / "arrays.npz")
+    elastic-rescale path: the stored arrays are global, so any mesh works.
 
+    Every leaf is checksum-verified against the manifest. With ``step=None``
+    a torn/corrupt newest checkpoint is *skipped with a warning* and the
+    next-newest valid one restored (crash-during-save resilience); an
+    explicit ``step`` raises instead. Template mismatches (wrong shape,
+    missing leaf) always raise — they mean the caller's ``like`` doesn't
+    match this run, not that storage is bad."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is not None:
+        path = ckpt_dir / f"step_{step:08d}"
+        arrays, manifest = _read_verified(path)
+        return _build_tree(arrays, manifest, like, shardings)
+
+    candidates = list(reversed(_step_dirs(ckpt_dir)))
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    last_err: Optional[Exception] = None
+    for path in candidates:
+        try:
+            arrays, manifest = _read_verified(path)
+        except _STORAGE_ERRORS as e:
+            warnings.warn(f"checkpoint {path.name} unreadable ({e}); "
+                          f"falling back to the previous step")
+            last_err = e
+            continue
+        return _build_tree(arrays, manifest, like, shardings)
+    raise FileNotFoundError(
+        f"no valid checkpoint under {ckpt_dir} "
+        f"({len(candidates)} torn/corrupt candidates; last error: {last_err!r})")
+
+
+def _build_tree(arrays: Dict[str, np.ndarray], manifest: Dict[str, Any],
+                like: Any, shardings: Optional[Any]) -> tuple[Any, Dict[str, Any]]:
     named, treedef = _leaf_names(like)
     if shardings is not None:
         sh_named, _ = _leaf_names(shardings)
@@ -160,9 +307,9 @@ def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
         sh_map = {}
     leaves = []
     for name, proto in named:
-        if name not in data:
+        if name not in arrays:
             raise KeyError(f"checkpoint missing leaf {name}")
-        arr = data[name]
+        arr = arrays[name]
         want_shape = tuple(proto.shape)
         if tuple(arr.shape) != want_shape:
             raise ValueError(f"{name}: checkpoint shape {arr.shape} != expected {want_shape}")
@@ -175,6 +322,6 @@ def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
 
 
 def _gc(ckpt_dir: Path, keep: int):
-    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    steps = _step_dirs(ckpt_dir)
     for p in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(p, ignore_errors=True)

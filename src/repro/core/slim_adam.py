@@ -44,6 +44,10 @@ class ScaleBySlimAdamState(NamedTuple):
     # read. None (an empty subtree) otherwise, so ordinary states carry no
     # extra leaves.
     snr: PyTree = None
+    # In-pass gradient health (emit_health states only; None otherwise — a
+    # None field contributes no pytree leaves, so checkpoints/jit layouts of
+    # plain states are unchanged). See repro.optim.fused.StepHealth.
+    health: object = None
 
 
 def _reduced_zeros(p: jnp.ndarray, dims: Dims) -> jnp.ndarray:
@@ -72,6 +76,7 @@ def scale_by_slim_adam(
     mesh=None,
     param_specs=None,
     emit_snr: bool = False,
+    emit_health: bool = False,
 ) -> GradientTransformation:
     """Adam preconditioner with mean-shared second moments along per-leaf dims.
 
@@ -101,6 +106,11 @@ def scale_by_slim_adam(
     per-shard jnp for interleaved-K-after-sharding leaves (see
     ``repro.sharding.shardspec``). Ignored by the jnp backend, which
     partitions natively under pjit.
+
+    ``emit_health=True`` publishes a :class:`repro.optim.fused.StepHealth`
+    on ``state.health`` each update — per-leaf non-finite counts plus the
+    finite-masked grad sumsq, accumulated inside the kernels' existing
+    passes (see ``repro.train.guard``).
     """
     backend_r = resolve_backend(backend)
     if backend_r == "fused" and (mesh is not None or param_specs is not None):
@@ -139,11 +149,13 @@ def scale_by_slim_adam(
                 g_leaves, mu_leaves, nu_leaves, d_leaves, b1=b1, b2=b2,
                 eps=eps, count=count, use_first_moment=use_first_moment,
                 bucket_min_size=bucket_min_size, mesh=mesh,
-                spec_leaves=spec_leaves, emit_snr=emit_snr)
+                spec_leaves=spec_leaves, emit_snr=emit_snr,
+                with_health=emit_health)
             u, mu_l, nu_l = out[:3]
             return unflat(u), ScaleBySlimAdamState(
                 count=count, mu=unflat(mu_l) if use_first_moment else None,
-                nu=unflat(nu_l), snr=unflat(out[3]) if emit_snr else None)
+                nu=unflat(nu_l), snr=unflat(out[3]) if emit_snr else None,
+                health=out[-1] if emit_health else None)
 
         # Per-leaf reference math shared with the fused backend's fallback
         # leaves — one definition of the semantics oracle.
@@ -157,10 +169,13 @@ def scale_by_slim_adam(
             snr = unflat([fused.jnp_update_snr_leaf(g, o[2], dims, b2=b2)
                           if dims else None
                           for g, o, dims in zip(g_leaves, outs, d_leaves)])
+        health = (fused._health_from_rows([fused.leaf_health(g) for g in g_leaves])
+                  if emit_health else None)
         return (
             unflat([o[0] for o in outs]),
             ScaleBySlimAdamState(count=count, mu=mu_out,
-                                 nu=unflat([o[2] for o in outs]), snr=snr),
+                                 nu=unflat([o[2] for o in outs]), snr=snr,
+                                 health=health),
         )
 
     return GradientTransformation(init_fn, update_fn)
@@ -178,20 +193,22 @@ def slim_adam(
     mesh=None,
     param_specs=None,
     emit_snr: bool = False,
+    emit_health: bool = False,
 ) -> GradientTransformation:
     """Drop-in AdamW recipe with SlimAdam's compressed preconditioner.
 
     Uses the *same* hyperparameters as Adam — the paper's requirement that
     users can swap optimizers without re-tuning. ``mesh``/``param_specs``/
-    ``emit_snr`` thread to :func:`scale_by_slim_adam` for the shard-aware
-    fused backend and the from-update SNR measurement.
+    ``emit_snr``/``emit_health`` thread to :func:`scale_by_slim_adam` for the
+    shard-aware fused backend, the from-update SNR measurement, and the
+    in-pass anomaly stats.
     """
     parts = []
     if grad_clip is not None:
         parts.append(clip_by_global_norm(grad_clip))
     parts.append(scale_by_slim_adam(dims_tree, b1=b1, b2=b2, eps=eps, backend=backend,
                                     mesh=mesh, param_specs=param_specs,
-                                    emit_snr=emit_snr))
+                                    emit_snr=emit_snr, emit_health=emit_health))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
     parts.append(scale_by_learning_rate(learning_rate))

@@ -91,8 +91,22 @@ def fused_adam(p, g, m, v, *, lr: float, b1: float = 0.9, b2: float = 0.95,
     )(p, g, m, v, scal)
 
 
+def health_terms(g32) -> jnp.ndarray:
+    """``[nonfinite_count, finite_masked_sumsq]`` of one gradient block.
+
+    The sum-of-squares is masked to the finite entries so the global grad
+    norm stays usable even on a step where some entries are NaN/Inf — the
+    guard layer reports both "how many entries were poisoned" and "how big
+    was the rest of the gradient".
+    """
+    fin = jnp.isfinite(g32)
+    nf = jnp.sum(jnp.where(fin, 0.0, 1.0))
+    ss = jnp.sum(jnp.where(fin, g32 * g32, 0.0))
+    return jnp.stack([nf, ss])
+
+
 def _adam_precond_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
-                         *, b1: float, b2: float, eps: float):
+                         *h_out, b1: float, b2: float, eps: float):
     bc1 = scal_ref[0]
     bc2 = scal_ref[1]
     g = g_ref[...].astype(jnp.float32)
@@ -101,16 +115,31 @@ def _adam_precond_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
     u_out[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
     m_out[...] = m_new
     v_out[...] = v_new
+    if h_out:
+        # (2,) accumulator shared by every grid instance: the TPU grid is
+        # sequential, so zero on the first instance, then add each tile's
+        # contribution. Costs one O(1) output — no extra tensor pass.
+        @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+        def _zero():
+            h_out[0][...] = jnp.zeros((2,), jnp.float32)
+
+        h_out[0][...] = h_out[0][...] + health_terms(g)
 
 
 def adam_precond(g, m, v, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-                 count=1, block: tuple = BLOCK, interpret: bool = True):
+                 count=1, block: tuple = BLOCK, interpret: bool = True,
+                 with_health: bool = False):
     """Preconditioned Adam update only: (g, m, v) -> (u, m', v'), all fp32.
 
     The GradientTransformation form of the fused step — lr / weight decay /
     the parameter write happen downstream in the chain, so this streams 6
     tensor passes (g, m, v read + u, m', v' write) and never touches p.
     ``count`` may be a traced int array (see :func:`bias_corrections`).
+
+    ``with_health=True`` appends one ``(2,)`` fp32 output
+    ``[nonfinite_count, finite_sumsq]`` of ``g``, accumulated in-pass by the
+    same kernel (see :func:`health_terms`) — the anomaly guard's per-leaf
+    stats ride the update's existing HBM traffic.
     """
     r, c = g.shape
     tr = min(block[0], r)
@@ -118,18 +147,27 @@ def adam_precond(g, m, v, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e
     if r % tr or c % tc:
         rp, cp = -(-r // tr) * tr, -(-c // tc) * tc
         pad = lambda x: jnp.pad(x, ((0, rp - r), (0, cp - c)))
-        uo, mo, vo = adam_precond(pad(g), pad(m), pad(v), b1=b1, b2=b2, eps=eps,
-                                  count=count, block=block, interpret=interpret)
-        return uo[:r, :c], mo[:r, :c], vo[:r, :c]
+        outs = adam_precond(pad(g), pad(m), pad(v), b1=b1, b2=b2, eps=eps,
+                            count=count, block=block, interpret=interpret,
+                            with_health=with_health)
+        trimmed = tuple(o[:r, :c] for o in outs[:3])
+        # zero padding is finite and contributes 0 to both health terms, so
+        # the accumulator needs no trimming
+        return trimmed + tuple(outs[3:])
 
     scal = bias_corrections(b1, b2, count)
     spec = pl.BlockSpec((tr, tc), lambda i, j: (i, j))
     kernel = functools.partial(_adam_precond_kernel, b1=b1, b2=b2, eps=eps)
+    out_specs = [spec] * 3
+    out_shape = [jax.ShapeDtypeStruct((r, c), jnp.float32)] * 3
+    if with_health:
+        out_specs = out_specs + [pl.BlockSpec((2,), lambda i, j: (0,))]
+        out_shape = out_shape + [jax.ShapeDtypeStruct((2,), jnp.float32)]
     return pl.pallas_call(
         kernel,
         grid=(r // tr, c // tc),
         in_specs=[spec, spec, spec, pl.BlockSpec((2,), lambda i, j: (0,))],
-        out_specs=[spec] * 3,
-        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.float32)] * 3,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(g, m, v, scal)

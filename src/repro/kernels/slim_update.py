@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .fused_adam import bias_corrections
+from .fused_adam import bias_corrections, health_terms
 from .snr_stats import centered_line_stats
 from .tiling import pad_kept, strip_grid, trim_kept
 
@@ -115,9 +115,24 @@ def slim_update_batched(p, g, m, v_line, *, axis: int, lr: float, b1: float = 0.
     )(p, g, m, v_line, scal)
 
 
+def _accumulate_health(h_ref, g):
+    """Fold one strip's health terms into the shared (2,) accumulator.
+
+    Every grid instance maps to the same output block; the TPU grid is
+    sequential, so zeroing on the first instance then adding per-strip
+    contributions is race-free (and interpret mode preserves the order).
+    """
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _zero():
+        h_ref[...] = jnp.zeros((2,), jnp.float32)
+
+    h_ref[...] = h_ref[...] + health_terms(g)
+
+
 def _slim_precond_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
-                         *snr_outs, b1: float, b2: float, eps: float,
-                         red_axis: int, n_red: int):
+                         *extra_outs, b1: float, b2: float, eps: float,
+                         red_axis: int, n_red: int, with_snr: bool = False,
+                         with_health: bool = False):
     bc1 = scal_ref[0]
     bc2 = scal_ref[1]
     g = g_ref[...].astype(jnp.float32)                   # (1, TR, C) | (1, R, TC)
@@ -128,16 +143,18 @@ def _slim_precond_kernel(g_ref, m_ref, v_ref, scal_ref, u_out, m_out, v_out,
     u_out[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
     m_out[...] = m_new
     v_out[...] = v_new
-    if snr_outs:
+    if with_snr:
         s1c, s2c, _ = centered_line_stats(g2, red_axis)
-        snr_outs[0][...] = s1c
-        snr_outs[1][...] = s2c
+        extra_outs[0][...] = s1c
+        extra_outs[1][...] = s2c
+    if with_health:
+        _accumulate_health(extra_outs[-1], g)
 
 
 def slim_precond_batched(g, m, v_line, *, axis: int, b1: float = 0.9,
                          b2: float = 0.95, eps: float = 1e-8, count=1,
-                         with_snr: bool = False, block: Optional[int] = None,
-                         interpret: bool = True):
+                         with_snr: bool = False, with_health: bool = False,
+                         block: Optional[int] = None, interpret: bool = True):
     """Preconditioned batched SlimAdam update: (g, m, v_line) -> (u, m', v').
 
     The GradientTransformation form of :func:`slim_update_batched` — no
@@ -150,6 +167,11 @@ def slim_precond_batched(g, m, v_line, *, axis: int, b1: float = 0.9,
     loop — so a from-update SNR measurement (see
     ``repro.kernels.snr_stats.snr_update_stats_finalize``) costs O(kept)
     extra writes and zero extra full-size passes.
+
+    ``with_health=True`` appends one ``(2,)`` fp32 accumulator
+    ``[nonfinite_count, finite_sumsq]`` of ``g`` (always the *last* output),
+    folded in by the same strip loop — the anomaly guard's per-leaf stats
+    cost O(1) output bytes and zero extra tensor passes.
     """
     assert g.ndim == 3 and axis in (0, 1)
     b, r, c = g.shape
@@ -160,26 +182,35 @@ def slim_precond_batched(g, m, v_line, *, axis: int, b1: float = 0.9,
         outs = slim_precond_batched(pad_kept(g, sg), pad_kept(m, sg),
                                     pad_kept(v_line, sg), axis=axis,
                                     b1=b1, b2=b2, eps=eps, count=count,
-                                    with_snr=with_snr, block=block,
-                                    interpret=interpret)
-        return tuple(trim_kept(o, sg) for o in outs)
+                                    with_snr=with_snr, with_health=with_health,
+                                    block=block, interpret=interpret)
+        # zero padding is finite and contributes 0 to both health terms, so
+        # the trailing (2,) accumulator passes through untrimmed
+        n_t = 3 + (2 if with_snr else 0)
+        return tuple(trim_kept(o, sg) for o in outs[:n_t]) + tuple(outs[n_t:])
 
     scal = bias_corrections(b1, b2, count)
     kernel = functools.partial(_slim_precond_kernel, b1=b1, b2=b2, eps=eps,
-                               red_axis=sg.red_axis, n_red=sg.n_red)
+                               red_axis=sg.red_axis, n_red=sg.n_red,
+                               with_snr=with_snr, with_health=with_health)
     v_shape = (b, r, 1) if axis == 1 else (b, 1, c)
     n_snr = 2 if with_snr else 0
+    out_specs = [sg.full, sg.full, sg.line] + [sg.line] * n_snr
+    out_shape = [
+        jax.ShapeDtypeStruct((b, r, c), jnp.float32),
+        jax.ShapeDtypeStruct((b, r, c), jnp.float32),
+        jax.ShapeDtypeStruct(v_shape, jnp.float32),
+    ] + [jax.ShapeDtypeStruct(v_shape, jnp.float32)] * n_snr
+    if with_health:
+        out_specs = out_specs + [pl.BlockSpec((2,), lambda bi, i: (0,))]
+        out_shape = out_shape + [jax.ShapeDtypeStruct((2,), jnp.float32)]
     return pl.pallas_call(
         kernel,
         grid=sg.grid,
         in_specs=[sg.full, sg.full, sg.line,
                   pl.BlockSpec((2,), lambda bi, i: (0,))],
-        out_specs=[sg.full, sg.full, sg.line] + [sg.line] * n_snr,
-        out_shape=[
-            jax.ShapeDtypeStruct((b, r, c), jnp.float32),
-            jax.ShapeDtypeStruct((b, r, c), jnp.float32),
-            jax.ShapeDtypeStruct(v_shape, jnp.float32),
-        ] + [jax.ShapeDtypeStruct(v_shape, jnp.float32)] * n_snr,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(g, m, v_line, scal)
 
@@ -210,21 +241,25 @@ def slim_precond_batched(g, m, v_line, *, axis: int, b1: float = 0.9,
 # m' write; m' read; u write); everything else is O(kept).
 
 
-def _slim_partial_kernel(g_ref, m_ref, m_out, part_out, *snr_outs, b1: float,
-                         red_axis: int):
+def _slim_partial_kernel(g_ref, m_ref, m_out, part_out, *extra_outs, b1: float,
+                         red_axis: int, with_snr: bool = False,
+                         with_health: bool = False):
     g = g_ref[...].astype(jnp.float32)                   # (1, TR, C) | (1, R, TC)
     m_out[...] = b1 * m_ref[...] + (1.0 - b1) * g
     g2 = g * g
     part_out[...] = jnp.sum(g2, axis=red_axis, keepdims=True)
-    if snr_outs:
+    if with_snr:
         s1c, s2c, f = centered_line_stats(g2, red_axis)
-        snr_outs[0][...] = s1c
-        snr_outs[1][...] = s2c
-        snr_outs[2][...] = f
+        extra_outs[0][...] = s1c
+        extra_outs[1][...] = s2c
+        extra_outs[2][...] = f
+    if with_health:
+        _accumulate_health(extra_outs[-1], g)
 
 
 def slim_partial_stats_batched(g, m, *, axis: int, b1: float = 0.9,
-                               with_snr: bool = False, block: Optional[int] = None,
+                               with_snr: bool = False, with_health: bool = False,
+                               block: Optional[int] = None,
                                interpret: bool = True):
     """Pass 1 of the sharded psum regime on the (B, R, C) canonical form.
 
@@ -236,6 +271,12 @@ def slim_partial_stats_batched(g, m, *, axis: int, b1: float = 0.9,
     across shards via ``repro.kernels.ref.rebase_centered_stats`` exactly
     like the snr_stats partial entries — the SNR measurement rides the
     update's strip loop for free.
+
+    ``with_health=True`` appends one ``(2,)`` fp32 accumulator
+    ``[nonfinite_count, finite_sumsq]`` of the *local* g shard (always the
+    last output). Health composes across shards by summation, so psum-regime
+    leaves fold it into the same all-reduce that completes the line sums —
+    no extra collective, no extra pass.
     """
     assert g.ndim == 3 and axis in (0, 1)
     b, r, c = g.shape
@@ -244,19 +285,28 @@ def slim_partial_stats_batched(g, m, *, axis: int, b1: float = 0.9,
     if sg.kept % sg.tile:
         outs = slim_partial_stats_batched(pad_kept(g, sg), pad_kept(m, sg),
                                           axis=axis, b1=b1, with_snr=with_snr,
+                                          with_health=with_health,
                                           block=block, interpret=interpret)
-        return tuple(trim_kept(o, sg) for o in outs)
+        # the (2,) health accumulator is padding-invariant — no trim
+        n_t = 2 + (3 if with_snr else 0)
+        return tuple(trim_kept(o, sg) for o in outs[:n_t]) + tuple(outs[n_t:])
 
-    kernel = functools.partial(_slim_partial_kernel, b1=b1, red_axis=sg.red_axis)
+    kernel = functools.partial(_slim_partial_kernel, b1=b1, red_axis=sg.red_axis,
+                               with_snr=with_snr, with_health=with_health)
     line_shape = (b, r, 1) if axis == 1 else (b, 1, c)
     n_lines = 1 + (3 if with_snr else 0)
+    out_specs = [sg.full] + [sg.line] * n_lines
+    out_shape = [jax.ShapeDtypeStruct((b, r, c), jnp.float32)] \
+                + [jax.ShapeDtypeStruct(line_shape, jnp.float32)] * n_lines
+    if with_health:
+        out_specs = out_specs + [pl.BlockSpec((2,), lambda bi, i: (0,))]
+        out_shape = out_shape + [jax.ShapeDtypeStruct((2,), jnp.float32)]
     return pl.pallas_call(
         kernel,
         grid=sg.grid,
         in_specs=[sg.full, sg.full],
-        out_specs=[sg.full] + [sg.line] * n_lines,
-        out_shape=[jax.ShapeDtypeStruct((b, r, c), jnp.float32)]
-                  + [jax.ShapeDtypeStruct(line_shape, jnp.float32)] * n_lines,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(g, m)
 

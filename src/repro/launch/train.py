@@ -24,8 +24,9 @@ from ..configs import ARCH_IDS, get_config, get_reduced
 from ..data import DataConfig, ZipfLM
 from ..sharding.logical import ShardingContext, param_specs, use_sharding
 from ..sharding.state_shardings import opt_state_specs
+from ..train.guard import ROLLBACK, Guard, GuardConfig
 from ..train.step import make_train_step
-from ..train.trainer import make_optimizer
+from ..train.trainer import _SLIM_FAMILY, make_optimizer
 from .mesh import make_production_mesh
 
 
@@ -45,6 +46,10 @@ def main(argv=None):
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--guard", action="store_true",
+                    help="fault-tolerant step: in-pass anomaly health, "
+                         "skip poisoned steps, lr backoff on loss spikes, "
+                         "rollback to the last checkpoint on repeated faults")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced or args.mesh == "none" else get_config(args.arch)
@@ -56,8 +61,10 @@ def main(argv=None):
         # Specs first: the fused backend wants mesh + param specs at
         # construction so its tree update runs under shard_map on the shards.
         p_specs = param_specs(meta, params) if ctx is not None else None
+        emit_health = args.guard and args.optimizer in ("adam",) + _SLIM_FAMILY
         tx = make_optimizer(args.optimizer, args.lr, params, meta,
-                            backend=args.backend, mesh=mesh, param_specs=p_specs)
+                            backend=args.backend, mesh=mesh, param_specs=p_specs,
+                            emit_health=emit_health)
         opt_state = tx.init(params)
 
         if ctx is not None:
@@ -76,12 +83,16 @@ def main(argv=None):
             params = jax.device_put(params, p_sh)
             opt_state = jax.device_put(opt_state, o_sh)
             b_sh = NamedSharding(mesh, ctx.spec_for(("batch", None), (args.batch, args.seq)))
+            batch_sh = {"tokens": b_sh, "labels": b_sh}
+            in_sh = ((p_sh, o_sh, batch_sh, None) if args.guard
+                     else (p_sh, o_sh, batch_sh))
             step_fn = jax.jit(make_train_step(cfg, tx, grad_accum=args.grad_accum,
-                                              grad_shardings=p_sh),
-                              in_shardings=(p_sh, o_sh, {"tokens": b_sh, "labels": b_sh}),
+                                              grad_shardings=p_sh, guard=args.guard),
+                              in_shardings=in_sh,
                               out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
         else:
-            step_fn = jax.jit(make_train_step(cfg, tx, grad_accum=args.grad_accum))
+            step_fn = jax.jit(make_train_step(cfg, tx, grad_accum=args.grad_accum,
+                                              guard=args.guard))
 
         start = 0
         if args.ckpt and store.latest_step(args.ckpt) is not None:
@@ -95,20 +106,50 @@ def main(argv=None):
         host_id = jax.process_index()
         host_count = jax.process_count()
         acp = store.AsyncCheckpointer()
+        guard = Guard(GuardConfig()) if args.guard else None
         t0 = time.time()
         for s in range(start, args.steps):
             batch = {k: jnp.asarray(v) for k, v in
                      data.batch(s, host_id=host_id, host_count=host_count).items()}
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if guard is not None:
+                controls = {"lr_scale": jnp.asarray(guard.lr_scale, jnp.float32),
+                            "grad_scale": jnp.asarray(1.0, jnp.float32)}
+                params, opt_state, metrics = step_fn(params, opt_state, batch, controls)
+                action = guard.observe(
+                    float(metrics["loss"]),
+                    skipped=bool(metrics["step_skipped"] > 0),
+                    nonfinite=float(metrics["nonfinite_count"]))
+                if action == ROLLBACK:
+                    guard.note_rollback()
+                    if args.ckpt and store.latest_step(args.ckpt) is not None:
+                        # Restore the last valid checkpoint; the step index
+                        # keeps advancing, so the data stream naturally
+                        # diverges from the poisoned trajectory.
+                        state, extra = store.restore(
+                            args.ckpt, {"params": params, "opt": opt_state})
+                        params, opt_state = state["params"], state["opt"]
+                        print(f"step {s+1}: guard rolled back to checkpoint "
+                              f"step {int(extra.get('step', 0))}")
+            else:
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
             if (s + 1) % args.log_every == 0:
                 tput = (s + 1 - start) * args.batch * args.seq / (time.time() - t0)
+                extra_log = ""
+                if guard is not None:
+                    c = guard.counters
+                    extra_log = (f" skipped {c['skipped']} backoffs "
+                                 f"{c['backoffs']} rollbacks {c['rollbacks']}"
+                                 f" lr_scale {guard.lr_scale:.2f}")
                 print(f"step {s+1}: loss {float(metrics['loss']):.4f} "
-                      f"grad_norm {float(metrics['grad_norm']):.3f} tok/s {tput:.0f}")
+                      f"grad_norm {float(metrics['grad_norm']):.3f} tok/s {tput:.0f}"
+                      + extra_log)
             if args.ckpt and (s + 1) % max(args.steps // 4, 1) == 0:
                 acp.save(args.ckpt, s + 1, {"params": params, "opt": opt_state},
                          extra={"step": s + 1})
         acp.wait()
         print(f"done: {args.steps - start} steps in {time.time() - t0:.1f}s")
+        if guard is not None:
+            print("guard counters:", guard.counters)
 
 
 if __name__ == "__main__":

@@ -142,6 +142,50 @@ transpose-free leaf to per-shard bytes <= single-device bytes / min(shard
 counts), the psum regime to zero jnp-finalize fallbacks, the compressed
 ratio to <= 0.716, and the fused-SNR measure-step delta to O(kept).
 
+Guards & degradation (the fault-tolerant substrate)
+---------------------------------------------------
+Three independent safety layers, cheapest first:
+
+**In-pass anomaly health (``emit_health=True``).** Built with
+``emit_health=True``, ``scale_by_adam`` / ``adamw`` / ``scale_by_slim_adam``
+/ ``slim_adam`` publish a ``repro.optim.fused.StepHealth`` on
+``state.health``: a per-leaf non-finite-entry count plus the global
+finite-masked grad sum-of-squares (the norm stays meaningful on a poisoned
+step). Kernel-served leaves accumulate both terms *inside* the update
+kernels (the ``with_health`` outputs of ``adam_precond`` /
+``slim_precond_batched`` / ``slim_partial_stats_batched``): every grid
+instance maps to one shared (2,) accumulator block, so the health stats ride
+the update's existing HBM traffic — one O(1) scalar output per kernel, no
+extra tensor pass (the sharded roofline gate asserts exactly one extra
+output of <= 2 elements per kernel). jnp-fallback leaves use the
+``leaf_health`` twin; under shard_map the per-leaf rows are de-duplicated by
+replication factor and completed with the same ``lax.psum`` that carries the
+moments. ``health=None`` states contribute no pytree leaves, so non-guarded
+checkpoints and jit signatures are unchanged.
+
+**Guarded step + policy (``repro.train.guard``).** ``make_train_step(...,
+guard=True)`` returns a 4-arg step taking a ``controls`` dict
+(``lr_scale`` / ``grad_scale`` as traced scalars — no recompiles): a step
+whose health says *bad* is skipped functionally (``jnp.where`` keeps params,
+moments, and count bit-identical; the skip is visible as
+``metrics["step_skipped"]``). The host-side ``Guard`` policy layers on top:
+loss-spike detection (z-score over a rolling window) backs off the lr
+multiplicatively; K consecutive bad steps escalate to a rollback onto the
+last valid checkpoint with a deterministic data re-seed
+(``Trainer(..., TrainerConfig(guard=GuardConfig(...)))`` or
+``repro.launch.train --guard``).
+
+**Graceful kernel degradation.** Every Pallas leaf launch in
+``repro.optim.fused`` runs under a guard: if the kernel path raises, the
+leaf degrades to the jnp reference math (same numbers, one warning), and
+``kernel_degraded_leaves()`` / the ``'degraded'`` key of
+``repro.sharding.shardspec.regime_counts`` make the demotion visible instead
+of silent. ``repro.train.faults`` provides deterministic injectors (NaN/Inf
+grads, loss spikes, checkpoint IO failures, kernel failures, torn
+checkpoints) and ``benchmarks/fault_drill.py`` is the CI gate: an injected
+gpt_small run must complete within 2% of the clean run's eval loss with
+every injection visible in the counters (``scripts/ci.sh fault-drill``).
+
 Why fused is the hot path (bytes-streamed model)
 ------------------------------------------------
 The optimizer step is pure HBM bandwidth. Per leaf of n fp32 elements and r

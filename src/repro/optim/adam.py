@@ -30,12 +30,17 @@ class ScaleByAdamState(NamedTuple):
     count: jnp.ndarray
     mu: object  # first moments, pytree like params (fp32)
     nu: object  # second moments, pytree like params (fp32)
+    # In-pass gradient health (emit_health states only; None otherwise — a
+    # None field contributes no pytree leaves, so checkpoints/jit layouts of
+    # plain states are unchanged). See repro.optim.fused.StepHealth.
+    health: object = None
 
 
 def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
                   backend: str = "jnp",
                   bucket_min_size: int = fused.DEFAULT_BUCKET_MIN,
-                  mesh=None, param_specs=None) -> GradientTransformation:
+                  mesh=None, param_specs=None,
+                  emit_health: bool = False) -> GradientTransformation:
     """Adam preconditioner. ``backend`` selects the execution path
     (see ``repro.optim.base.BACKENDS``): 'fused' streams each eligible leaf
     through the Pallas kernels with small-leaf bucketing; state layout and
@@ -45,7 +50,13 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
     make the fused backend shard-aware: the tree update runs under
     ``shard_map`` on each device's local shards instead of letting GSPMD
     gather full leaves around the pallas_call optimization barrier. Ignored
-    by the jnp backend — plain jax.numpy partitions natively under pjit."""
+    by the jnp backend — plain jax.numpy partitions natively under pjit.
+
+    ``emit_health=True`` publishes a :class:`repro.optim.fused.StepHealth`
+    on ``state.health`` each update — per-leaf non-finite counts + the
+    finite-masked grad sumsq, accumulated by the kernels' own passes (the
+    guarded train step reads it to skip poisoned steps; see
+    ``repro.train.guard``)."""
     backend = resolve_backend(backend)
     if backend == "fused" and (mesh is not None or param_specs is not None):
         from ..sharding.shardspec import normalize_spec_leaves, sharded_pair
@@ -65,13 +76,17 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
         g_leaves, treedef = jax.tree_util.tree_flatten(updates)
         mu_leaves = treedef.flatten_up_to(state.mu)
         nu_leaves = treedef.flatten_up_to(state.nu)
+        health = None
         if backend == "fused":
             spec_leaves = (None if mesh is None else normalize_spec_leaves(
                 param_specs, treedef, "scale_by_adam"))
-            u, mu_l, nu_l = fused.adam_tree_update(
+            out = fused.adam_tree_update(
                 g_leaves, mu_leaves, nu_leaves, b1=b1, b2=b2, eps=eps,
                 count=count, bucket_min_size=bucket_min_size,
-                mesh=mesh, spec_leaves=spec_leaves)
+                mesh=mesh, spec_leaves=spec_leaves, with_health=emit_health)
+            u, mu_l, nu_l = out[:3]
+            if emit_health:
+                health = out[3]
         else:
             # Per-leaf reference math shared with the fused backend's
             # fallback leaves — one definition of the semantics oracle.
@@ -80,8 +95,12 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
             u = [o[0] for o in outs]
             mu_l = [o[1] for o in outs]
             nu_l = [o[2] for o in outs]
+            if emit_health:
+                health = fused._health_from_rows(
+                    [fused.leaf_health(g) for g in g_leaves])
         unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
-        return unflat(u), ScaleByAdamState(count=count, mu=unflat(mu_l), nu=unflat(nu_l))
+        return unflat(u), ScaleByAdamState(count=count, mu=unflat(mu_l),
+                                           nu=unflat(nu_l), health=health)
 
     return GradientTransformation(init_fn, update_fn)
 
@@ -96,16 +115,19 @@ def adamw(
     backend: str = "jnp",
     mesh=None,
     param_specs=None,
+    emit_health: bool = False,
 ) -> GradientTransformation:
     """The paper's training recipe: clip(1.0) -> Adam -> decoupled wd -> -lr.
 
     ``mesh``/``param_specs`` thread to :func:`scale_by_adam` so the fused
-    backend runs shard-aware under a production mesh."""
+    backend runs shard-aware under a production mesh; ``emit_health``
+    threads there too (the guard layer's in-pass anomaly stats)."""
     parts = []
     if grad_clip is not None:
         parts.append(clip_by_global_norm(grad_clip))
     parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps, backend=backend,
-                               mesh=mesh, param_specs=param_specs))
+                               mesh=mesh, param_specs=param_specs,
+                               emit_health=emit_health))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
     parts.append(scale_by_learning_rate(learning_rate))

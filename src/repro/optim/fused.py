@@ -41,7 +41,8 @@ path bit-for-bit up to fp32 reassociation.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +74,96 @@ Dims = Tuple[int, ...]
 # instead of per leaf). 16k elements ~ 64 KiB fp32: far below the per-call
 # tile, so launch/pad overhead dominates any per-leaf call at this size.
 DEFAULT_BUCKET_MIN = 1 << 14
+
+
+class StepHealth(NamedTuple):
+    """In-pass gradient health of one tree update.
+
+    ``nonfinite``: (n_leaves,) fp32 — per-leaf count of non-finite gradient
+    entries. ``grad_sumsq``: () fp32 — global sum of squares over the
+    *finite* entries, so the gradient norm stays meaningful on a poisoned
+    step. Kernel-served leaves accumulate both inside the update kernels
+    (one O(1) output per call, zero extra tensor passes); jnp leaves fuse
+    the same sums into their existing elementwise pass.
+    """
+    nonfinite: jnp.ndarray
+    grad_sumsq: jnp.ndarray
+
+    @property
+    def bad(self) -> jnp.ndarray:
+        """() bool — any non-finite gradient entry anywhere in the tree."""
+        return (jnp.sum(self.nonfinite) > 0) | ~jnp.isfinite(self.grad_sumsq)
+
+    @property
+    def grad_norm(self) -> jnp.ndarray:
+        """() fp32 — global norm over the finite gradient entries."""
+        return jnp.sqrt(self.grad_sumsq)
+
+
+def leaf_health(g) -> jnp.ndarray:
+    """``[nonfinite_count, finite_masked_sumsq]`` of one leaf — the jnp
+    twin of the kernels' in-pass accumulator
+    (:func:`repro.kernels.fused_adam.health_terms`)."""
+    g32 = g.astype(jnp.float32)
+    fin = jnp.isfinite(g32)
+    nf = jnp.sum(jnp.where(fin, 0.0, 1.0))
+    ss = jnp.sum(jnp.where(fin, jnp.square(g32), 0.0))
+    return jnp.stack([nf, ss])
+
+
+def _health_from_rows(rows: Sequence[jnp.ndarray]) -> StepHealth:
+    """Stack per-leaf (2,) health rows into a :class:`StepHealth`."""
+    h = jnp.stack(list(rows)) if len(rows) else jnp.zeros((0, 2), jnp.float32)
+    return StepHealth(nonfinite=h[:, 0], grad_sumsq=jnp.sum(h[:, 1]))
+
+
+# ---------------------------------------------------------------------------
+# Graceful kernel degradation
+# ---------------------------------------------------------------------------
+#
+# A Pallas trace/compile failure on one leaf (driver regression, an exotic
+# layout the backend rejects, an injected fault in tests) should cost that
+# leaf its bandwidth win, not the whole run. Kernel leaf calls route through
+# _guarded(): on any exception the leaf silently re-routes to the reference
+# jnp math, a one-time warning names the first failure, and the count is
+# queryable (and feeds regime_counts(..., degraded=...)).
+
+_DEGRADED = {"leaves": 0, "warned": False}
+_KERNEL_FAULT_HOOK: Optional[Callable[[str], None]] = None
+
+
+def set_kernel_fault_hook(hook: Optional[Callable[[str], None]]) -> None:
+    """Install a fault-injection hook called (with a leaf label) before every
+    guarded kernel dispatch — raise from it to simulate a Pallas failure.
+    ``None`` uninstalls. Test/benchmark instrumentation only."""
+    global _KERNEL_FAULT_HOOK
+    _KERNEL_FAULT_HOOK = hook
+
+
+def kernel_degraded_leaves() -> int:
+    """Leaf calls that degraded kernel -> jnp since the last reset."""
+    return _DEGRADED["leaves"]
+
+
+def reset_kernel_degradation() -> None:
+    _DEGRADED["leaves"] = 0
+    _DEGRADED["warned"] = False
+
+
+def _guarded(label: str, kernel_fn: Callable[[], Any], jnp_fn: Callable[[], Any]):
+    try:
+        if _KERNEL_FAULT_HOOK is not None:
+            _KERNEL_FAULT_HOOK(label)
+        return kernel_fn()
+    except Exception as e:  # noqa: BLE001 — any kernel failure degrades
+        _DEGRADED["leaves"] += 1
+        if not _DEGRADED["warned"]:
+            _DEGRADED["warned"] = True
+            warnings.warn(
+                f"Pallas kernel path failed for {label} "
+                f"({type(e).__name__}: {e}); degrading leaf to the jnp "
+                f"reference path", stacklevel=2)
+        return jnp_fn()
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +227,8 @@ def _fold_lanes(flat: jnp.ndarray) -> jnp.ndarray:
     return jnp.pad(flat, (0, rows * _LANES - n)).reshape(rows, _LANES)
 
 
-def _dense_kernel_leaf(g, m, v, *, b1, b2, eps, count, interpret):
+def _dense_kernel_leaf(g, m, v, *, b1, b2, eps, count, interpret,
+                       with_health: bool = False):
     shape = g.shape
     if g.ndim == 1:
         n = g.size
@@ -145,37 +237,47 @@ def _dense_kernel_leaf(g, m, v, *, b1, b2, eps, count, interpret):
     else:
         to2d = (lambda x: x) if g.ndim == 2 else (lambda x: x.reshape(-1, shape[-1]))
         un2d = lambda y: y.reshape(shape)
-    u2, m2, v2 = adam_precond(to2d(g), to2d(m), to2d(v), b1=b1, b2=b2, eps=eps,
-                              count=count, interpret=interpret)
-    return un2d(u2), un2d(m2), un2d(v2)
+    outs = adam_precond(to2d(g), to2d(m), to2d(v), b1=b1, b2=b2, eps=eps,
+                        count=count, interpret=interpret, with_health=with_health)
+    out = (un2d(outs[0]), un2d(outs[1]), un2d(outs[2]))
+    # lane-fold zero padding is finite -> the (2,) accumulator is exact as-is
+    return out + (outs[3],) if with_health else out
 
 
 def _slim_kernel_leaf(g, m, v_red, cn: CanonND, *, b1, b2, eps, count, interpret,
-                      with_snr: bool = False):
+                      with_snr: bool = False, with_health: bool = False):
     """Run one compressed leaf through the kernel its plan names: minor /
     major for 2-D-canonical plans, the batched kernel for batch > 1. With
     ``with_snr`` the kernel's strip loop also emits the centered g^2 line
-    sums and a from-update SNR scalar rides along (O(kept) extra traffic)."""
+    sums and a from-update SNR scalar rides along (O(kept) extra traffic).
+    With ``with_health`` the same strip loop folds the leaf's (2,) health
+    accumulator (appended last) — O(1) extra output, zero extra passes."""
     g2 = canon_apply(g, cn)
     m2 = canon_apply(m, cn)
     v2 = canon_apply(v_red, cn, reduced_cols=True)
     kw = dict(b1=b1, b2=b2, eps=eps, count=count, interpret=interpret)
-    if with_snr or cn.batch > 1:
+    health = None
+    if with_snr or with_health or cn.batch > 1:
         to3 = (lambda x: x) if cn.batch > 1 else (lambda x: x[None])
         un3 = (lambda x: x) if cn.batch > 1 else (lambda x: x[0])
         outs = slim_precond_batched(to3(g2), to3(m2), to3(v2), axis=cn.axis,
-                                    with_snr=with_snr, **kw)
+                                    with_snr=with_snr, with_health=with_health,
+                                    **kw)
         u2, m2o, v2o = un3(outs[0]), un3(outs[1]), un3(outs[2])
         snr = (snr_update_stats_finalize(outs[2], outs[3], outs[4],
                                          cn.red_size, 1.0 - b2, eps=_SNR_EPS)
                if with_snr else None)
+        if with_health:
+            health = outs[-1]
     else:
         fn = slim_precond if cn.axis == 1 else slim_precond_major
         u2, m2o, v2o = fn(g2, m2, v2, **kw)
         snr = None
     out = (canon_restore(u2, cn, g.shape), canon_restore(m2o, cn, g.shape),
            canon_restore(v2o, cn, v_red.shape))
-    return out + (snr,) if with_snr else out
+    if with_snr:
+        out = out + (snr,)
+    return out + (health,) if with_health else out
 
 
 # ---------------------------------------------------------------------------
@@ -206,20 +308,40 @@ def _bucket_update(gs: Sequence[jnp.ndarray], ms: Sequence[jnp.ndarray],
     return out_u, out_m, out_v
 
 
-def _flush_bucket(bucket, gs, ms, vs, out_u, out_m, out_v, *, interpret, **kw):
+def _flush_bucket(bucket, gs, ms, vs, out_u, out_m, out_v, *, interpret,
+                  out_h=None, **kw):
     """Resolve the collected small-leaf indices in place: a lone leaf skips
-    the concat round-trip, two or more share one kernel call."""
+    the concat round-trip, two or more share one kernel call.
+
+    With ``out_h`` (per-leaf health rows) bucketed leaves compute health via
+    the jnp helper — the guard needs *per-leaf* non-finite counts, and these
+    leaves are below ``bucket_min_size`` elements, so the extra read is
+    noise next to the bucket's own concat round-trip."""
+    with_health = out_h is not None
     if len(bucket) == 1:
         i = bucket[0]
-        out_u[i], out_m[i], out_v[i] = _dense_kernel_leaf(
-            gs[i], ms[i], vs[i], interpret=interpret, **kw)
+        out = _guarded(
+            f"dense:{gs[i].shape}",
+            lambda: _dense_kernel_leaf(gs[i], ms[i], vs[i], interpret=interpret,
+                                       with_health=with_health, **kw),
+            lambda: jnp_adam_leaf(gs[i], ms[i], vs[i], **kw)
+                    + ((leaf_health(gs[i]),) if with_health else ()))
+        out_u[i], out_m[i], out_v[i] = out[:3]
+        if with_health:
+            out_h[i] = out[3]
     elif bucket:
-        us, mss, vss = _bucket_update([gs[i] for i in bucket],
-                                      [ms[i] for i in bucket],
-                                      [vs[i] for i in bucket],
-                                      interpret=interpret, **kw)
+        us, mss, vss = _guarded(
+            f"bucket[{len(bucket)}]",
+            lambda: _bucket_update([gs[i] for i in bucket],
+                                   [ms[i] for i in bucket],
+                                   [vs[i] for i in bucket],
+                                   interpret=interpret, **kw),
+            lambda: tuple(zip(*[jnp_adam_leaf(gs[i], ms[i], vs[i], **kw)
+                                for i in bucket])))
         for i, u, m, v in zip(bucket, us, mss, vss):
             out_u[i], out_m[i], out_v[i] = u, m, v
+            if with_health:
+                out_h[i] = leaf_health(gs[i])
 
 
 # ---------------------------------------------------------------------------
@@ -295,7 +417,7 @@ def _psum_snr(s1c, s2c, first, v_new, pl, *, n_loc, red_total, b2):
 
 def _psum_slim_leaf(g, m, v_red, dims: Dims, *, pl, sizes, b1, b2, eps, count,
                     use_first_moment: bool, interpret: bool,
-                    emit_snr: bool = False):
+                    emit_snr: bool = False, with_health: bool = False):
     """SlimAdam leaf whose reduced dims are split across ``pl.psum_axes``,
     Pallas-resident: pass 1 (``slim_partial_stats``) reads g, m and writes
     m_new plus per-line partial g^2 sums; a ``lax.psum`` over the owning
@@ -318,6 +440,11 @@ def _psum_slim_leaf(g, m, v_red, dims: Dims, *, pl, sizes, b1, b2, eps, count,
     sums; the completed from-update SNR scalar (see
     :func:`jnp_update_snr_leaf`) is appended to the return.
 
+    ``with_health``: the partial-stats strip loop also folds this shard's
+    (2,) health accumulator (appended last, *local* — the caller completes
+    it in the tree-wide stacked psum) — no extra pass over g, no extra
+    collective on this leaf.
+
     Moments are computed in fp32 and cast back to the *stored* dtypes at the
     boundary, so bf16 optimizer states stay bf16 across the psum path
     (states/checkpoints used to silently promote to fp32 here).
@@ -333,16 +460,14 @@ def _psum_slim_leaf(g, m, v_red, dims: Dims, *, pl, sizes, b1, b2, eps, count,
         n_loc *= g.shape[i]
     scale = (1.0 - b2) / pl.red_total
 
-    # The plan's local CanonND was gated by plan_sharded_leaf on the
-    # partial/finalize pair's working sets — run exactly that plan (the
-    # moment-less variant streams a discarded m, so it stays on jnp).
-    if use_first_moment and pl.finalize == "kernel" and pl.cn is not None:
+    def kernel_branch():
         cn = pl.cn
         to3 = (lambda x: x) if cn.batch > 1 else (lambda x: x[None])
         un3 = (lambda x: x) if cn.batch > 1 else (lambda x: x[0])
         outs = slim_partial_stats_batched(
             to3(canon_apply(g32, cn)), to3(canon_apply(m.astype(jnp.float32), cn)),
-            axis=cn.axis, b1=b1, with_snr=emit_snr, interpret=interpret)
+            axis=cn.axis, b1=b1, with_snr=emit_snr, with_health=with_health,
+            interpret=interpret)
         m_new2, part2 = outs[0], outs[1]
         part = canon_restore(un3(part2), cn, red_local_shape)
         if pl.owner:
@@ -363,65 +488,110 @@ def _psum_slim_leaf(g, m, v_red, dims: Dims, *, pl, sizes, b1, b2, eps, count,
             v_out = v_new.astype(v_dtype)
         u = canon_restore(un3(u2), cn, g.shape)
         m_new = canon_restore(un3(m_new2), cn, g.shape).astype(m_dtype)
-        snr = None
+        out = (u, m_new, v_out)
         if emit_snr:
             s1c, s2c, first = (canon_restore(un3(o), cn, red_local_shape)
-                               for o in outs[2:])
-            snr = _psum_snr(s1c, s2c, first, v_new, pl, n_loc=n_loc,
-                            red_total=pl.red_total, b2=b2)
-        return (u, m_new, v_out) + ((snr,) if emit_snr else ())
+                               for o in outs[2:5])
+            out = out + (_psum_snr(s1c, s2c, first, v_new, pl, n_loc=n_loc,
+                                   red_total=pl.red_total, b2=b2),)
+        return out + (outs[-1],) if with_health else out
 
-    # jnp fallback: moment-less variant, or a local plan the kernel pair
-    # cannot serve ('psum_jnp' in regime_counts). Same psum/owner algebra.
-    part = jnp.sum(g32 * g32, axis=tuple(sorted(dset)), keepdims=True)
-    bc1, bc2 = bias_corrections(b1, b2, count)
-    m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32 if use_first_moment else None
-    if pl.owner:
-        payload = scale * part + b2 * _owner_scatter(v32, pl.owner, sizes)
-        v_new = jax.lax.psum(payload, pl.psum_axes)
-        v_out = _owner_slice(v_new, pl.owner, sizes).astype(v_dtype)
-    else:
-        ek = jax.lax.psum(part, pl.psum_axes) / pl.red_total
-        v_new = b2 * v32 + (1 - b2) * ek
-        v_out = v_new.astype(v_dtype)
-    num = m_new / bc1 if use_first_moment else g32
-    u = num / (jnp.sqrt(v_new / bc2) + eps)
-    m_out = m_new.astype(m_dtype) if use_first_moment else None
-    if not emit_snr:
-        return u, m_out, v_out
-    from ..kernels.ref import snr_stats_centered_partial_ref
+    def jnp_branch():
+        # moment-less variant, a local plan the kernel pair cannot serve
+        # ('psum_jnp' in regime_counts), or a degraded kernel leaf. Same
+        # psum/owner algebra as the kernel pair.
+        part = jnp.sum(g32 * g32, axis=tuple(sorted(dset)), keepdims=True)
+        bc1, bc2 = bias_corrections(b1, b2, count)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32 if use_first_moment else None
+        if pl.owner:
+            payload = scale * part + b2 * _owner_scatter(v32, pl.owner, sizes)
+            v_new = jax.lax.psum(payload, pl.psum_axes)
+            v_out = _owner_slice(v_new, pl.owner, sizes).astype(v_dtype)
+        else:
+            ek = jax.lax.psum(part, pl.psum_axes) / pl.red_total
+            v_new = b2 * v32 + (1 - b2) * ek
+            v_out = v_new.astype(v_dtype)
+        num = m_new / bc1 if use_first_moment else g32
+        u = num / (jnp.sqrt(v_new / bc2) + eps)
+        m_out = m_new.astype(m_dtype) if use_first_moment else None
+        out = (u, m_out, v_out)
+        if emit_snr:
+            from ..kernels.ref import snr_stats_centered_partial_ref
 
-    _, s1c, s2c, first = snr_stats_centered_partial_ref(g32 * g32,
-                                                        tuple(sorted(dset)))
-    snr = _psum_snr(s1c, s2c, first, v_new, pl, n_loc=n_loc,
-                    red_total=pl.red_total, b2=b2)
-    return u, m_out, v_out, snr
+            _, s1c, s2c, first = snr_stats_centered_partial_ref(
+                g32 * g32, tuple(sorted(dset)))
+            out = out + (_psum_snr(s1c, s2c, first, v_new, pl, n_loc=n_loc,
+                                   red_total=pl.red_total, b2=b2),)
+        return out + (leaf_health(g32),) if with_health else out
+
+    # The plan's local CanonND was gated by plan_sharded_leaf on the
+    # partial/finalize pair's working sets — run exactly that plan (the
+    # moment-less variant streams a discarded m, so it stays on jnp).
+    if use_first_moment and pl.finalize == "kernel" and pl.cn is not None:
+        return _guarded(f"psum:{g.shape}", kernel_branch, jnp_branch)
+    return jnp_branch()
+
+
+def _repl_factors(g_leaves, spec_leaves, mesh) -> jnp.ndarray:
+    """(n, 1) fp32 — how many mesh devices hold a replica of each leaf's
+    shard. Dividing a per-shard additive stat by this before a psum over
+    *all* mesh axes yields the exact global total (replicas contribute
+    duplicates; genuinely sharded leaves have factor mesh.size / n_shards)."""
+    import math
+
+    from ..sharding.shardspec import dim_shards
+
+    total = math.prod(mesh.shape.values())
+    repl = [total / math.prod(dim_shards(g.shape, s, mesh))
+            for g, s in zip(g_leaves, spec_leaves)]
+    return jnp.asarray(repl, jnp.float32)[:, None]
+
+
+def _psum_health_rows(rows, repl, axes) -> jnp.ndarray:
+    """Complete per-shard health rows across the mesh: one tiny (n, 2)
+    psum for the whole tree — O(leaves) scalars over ICI, nothing per-leaf."""
+    return jax.lax.psum(jnp.stack(list(rows)) / repl, axes)
 
 
 def _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh, *,
-                       b1, b2, eps, count, interpret, bucket_min_size):
+                       b1, b2, eps, count, interpret, bucket_min_size,
+                       with_health: bool = False):
     """Dense Adam under shard_map: elementwise math never crosses shards, so
     every device just runs the plain per-leaf path on its local shards (the
-    leaf plans and bucketing decisions re-derive from local shapes)."""
+    leaf plans and bucketing decisions re-derive from local shapes). With
+    ``with_health`` each shard's in-pass rows are completed by one stacked
+    (n, 2) psum and returned as a replicated :class:`StepHealth`."""
     from ..sharding.logical import shard_map
     from ..sharding.shardspec import even_spec
     from jax.sharding import PartitionSpec as P
 
     specs = [even_spec(g.shape, s, mesh) for g, s in zip(g_leaves, spec_leaves)]
+    axes = tuple(mesh.shape.keys())
+    repl = _repl_factors(g_leaves, spec_leaves, mesh) if with_health else None
 
     def local_fn(count, gs, ms, vs):
-        return adam_tree_update(gs, ms, vs, b1=b1, b2=b2, eps=eps, count=count,
-                                interpret=interpret, bucket_min_size=bucket_min_size)
+        out = _adam_tree_local(gs, ms, vs, b1=b1, b2=b2, eps=eps, count=count,
+                               interpret=interpret, bucket_min_size=bucket_min_size,
+                               with_health=with_health)
+        if not with_health:
+            return out
+        return out[:3] + (_psum_health_rows(out[3], repl, axes),)
 
+    out_specs = (specs, specs, specs) + ((P(),) if with_health else ())
     fn = shard_map(local_fn, mesh=mesh,
                    in_specs=(P(), specs, specs, specs),
-                   out_specs=(specs, specs, specs), check_rep=False)
-    return fn(count, list(g_leaves), list(mu_leaves), list(nu_leaves))
+                   out_specs=out_specs, check_rep=False)
+    out = fn(count, list(g_leaves), list(mu_leaves), list(nu_leaves))
+    if not with_health:
+        return out
+    h = out[3]
+    return out[:3] + (StepHealth(nonfinite=h[:, 0], grad_sumsq=jnp.sum(h[:, 1])),)
 
 
 def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves, mesh, *,
                        b1, b2, eps, count, use_first_moment, interpret,
-                       bucket_min_size, emit_snr: bool = False):
+                       bucket_min_size, emit_snr: bool = False,
+                       with_health: bool = False):
     """SlimAdam under shard_map, three regimes per leaf (see
     ``repro.sharding.shardspec``): 'local' leaves run the unchanged kernel
     dispatch on their shard (kernels, bucketing, jnp fits-gate fallback all
@@ -431,7 +601,10 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
     leaves (interleaved K after sharding) run the reference math on their
     shard. ``emit_snr`` appends a per-leaf from-update SNR scalar (None for
     K = () leaves) — the stats ride the update kernels' strip loops, psum-
-    completed for sharded lines, so a measure step adds O(kept) traffic."""
+    completed for sharded lines, so a measure step adds O(kept) traffic.
+    ``with_health`` appends a replicated :class:`StepHealth`: every regime's
+    local rows come from its own in-pass accumulator (psum leaves from the
+    partial-stats kernel), completed by one stacked (n, 2) psum."""
     from ..sharding.logical import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -443,6 +616,9 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
                for pl in plans]
     n = len(g_leaves)
     snr_idx = [i for i in range(n) if tuple(dims_leaves[i])] if emit_snr else []
+    axes = tuple(mesh.shape.keys())
+    repl = (_repl_factors(g_leaves, [pl.spec for pl in plans], mesh)
+            if with_health else None)
     kw = dict(b1=b1, b2=b2, eps=eps)
 
     def dispatch(count, gs, ms, vs):
@@ -450,21 +626,24 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
         out_m: List[Any] = [None] * n
         out_v: List[Any] = [None] * n
         out_s: List[Any] = [None] * n
+        out_h: List[Any] = [None] * n
         local_idx = [i for i, pl in enumerate(plans) if pl.regime == "local"]
         if local_idx:
-            out = slim_tree_update(
+            out = _slim_tree_local(
                 [gs[i] for i in local_idx],
                 [ms[i] for i in local_idx] if use_first_moment else None,
                 [vs[i] for i in local_idx],
                 [tuple(dims_leaves[i]) for i in local_idx],
                 count=count, use_first_moment=use_first_moment,
                 interpret=interpret, bucket_min_size=bucket_min_size,
-                emit_snr=emit_snr, **kw)
+                emit_snr=emit_snr, with_health=with_health, **kw)
             u, mo, vo = out[:3]
             for j, i in enumerate(local_idx):
                 out_u[i] = u[j]
                 out_m[i] = mo[j] if use_first_moment else None
                 out_v[i] = vo[j]
+                if with_health:
+                    out_h[i] = out[4][j]
                 if emit_snr and out[3][j] is not None:
                     s = out[3][j]
                     pl = plans[i]
@@ -479,7 +658,8 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
             if pl.regime == "psum":
                 out = _psum_slim_leaf(gs[i], m_i, vs[i], dims, pl=pl, sizes=sizes,
                                       count=count, use_first_moment=use_first_moment,
-                                      interpret=interpret, emit_snr=emit_snr, **kw)
+                                      interpret=interpret, emit_snr=emit_snr,
+                                      with_health=with_health, **kw)
             else:  # 'jnp': reduced dims whole on the shard, reference math
                 out = jnp_slim_leaf(gs[i], m_i, vs[i], dims, count=count,
                                     use_first_moment=use_first_moment, **kw)
@@ -487,51 +667,66 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
                     s = jnp_update_snr_leaf(gs[i], out[2], dims, b2=b2)
                     s = jax.lax.pmean(s, pl.kept_axes) if pl.kept_axes else s
                     out = out + (s,)
+                if with_health:
+                    out = out + (leaf_health(gs[i]),)
             out_u[i], out_m[i], out_v[i] = out[:3]
+            if with_health:
+                out_h[i] = out[-1]
             if emit_snr:
                 out_s[i] = out[3]
+        res = (out_u, out_m, out_v)
         if emit_snr:
-            return out_u, out_m, out_v, [out_s[i] for i in snr_idx]
-        return out_u, out_m, out_v
+            res = res + ([out_s[i] for i in snr_idx],)
+        if with_health:
+            res = res + (_psum_health_rows(out_h, repl, axes),)
+        return res
 
     snr_specs = [P() for _ in snr_idx]
 
     def unpack(res):
-        if not emit_snr:
-            return res + (None,)
-        u, mo, vo, snr = res
-        out_s: List[Any] = [None] * n
-        for j, i in enumerate(snr_idx):
-            out_s[i] = snr[j]
-        return u, mo, vo, out_s
+        """Normalize dispatch's variadic return to (u, m, v, snr_list_or_None,
+        health_rows_or_None) with snr scattered back to all-leaves indexing."""
+        h = res[-1] if with_health else None
+        if emit_snr:
+            snr = res[3]
+            out_s: List[Any] = [None] * n
+            for j, i in enumerate(snr_idx):
+                out_s[i] = snr[j]
+        else:
+            out_s = None
+        return res[0], res[1], res[2], out_s, h
 
+    health_spec = (P(),) if with_health else ()
     if use_first_moment:
         def local_fn(count, gs, ms, vs):
             return dispatch(count, gs, ms, vs)
 
-        out_specs = (g_specs, g_specs, v_specs) + ((snr_specs,) if emit_snr else ())
+        out_specs = ((g_specs, g_specs, v_specs)
+                     + ((snr_specs,) if emit_snr else ()) + health_spec)
         fn = shard_map(local_fn, mesh=mesh,
                        in_specs=(P(), g_specs, g_specs, v_specs),
                        out_specs=out_specs, check_rep=False)
-        u, mo, vo, snr = unpack(fn(count, list(g_leaves), list(mu_leaves),
-                                   list(nu_leaves)))
-        return (u, mo, vo, snr) if emit_snr else (u, mo, vo)
+        res = fn(count, list(g_leaves), list(mu_leaves), list(nu_leaves))
+        u, mo, vo, out_s, h = unpack(res)
+    else:
+        def local_fn_no_mu(count, gs, vs):
+            out = dispatch(count, gs, None, vs)
+            return (out[0],) + out[2:]
 
-    def local_fn_no_mu(count, gs, vs):
-        out = dispatch(count, gs, None, vs)
-        return (out[0], out[2]) + ((out[3],) if emit_snr else ())
-
-    out_specs = (g_specs, v_specs) + ((snr_specs,) if emit_snr else ())
-    fn = shard_map(local_fn_no_mu, mesh=mesh,
-                   in_specs=(P(), g_specs, v_specs),
-                   out_specs=out_specs, check_rep=False)
-    out = fn(count, list(g_leaves), list(nu_leaves))
+        out_specs = ((g_specs, v_specs)
+                     + ((snr_specs,) if emit_snr else ()) + health_spec)
+        fn = shard_map(local_fn_no_mu, mesh=mesh,
+                       in_specs=(P(), g_specs, v_specs),
+                       out_specs=out_specs, check_rep=False)
+        res = fn(count, list(g_leaves), list(nu_leaves))
+        u, _, vo, out_s, h = unpack((res[0], None) + res[1:])
+        mo = None
+    out = (u, mo, vo)
     if emit_snr:
-        u, v, snr = out
-        _, _, _, out_s = unpack((u, None, v, snr))
-        return u, None, v, out_s
-    u, v = out
-    return u, None, v
+        out = out + (out_s,)
+    if with_health:
+        out = out + (StepHealth(nonfinite=h[:, 0], grad_sumsq=jnp.sum(h[:, 1])),)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -540,40 +735,147 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
 # ---------------------------------------------------------------------------
 
 
+def _adam_tree_local(g_leaves, mu_leaves, nu_leaves, *, b1, b2, eps, count,
+                     interpret, bucket_min_size, with_health: bool = False):
+    """Unsharded dense-Adam loop; with ``with_health`` also returns the
+    per-leaf (2,) health rows (kernel accumulators for kernel leaves, the
+    fused jnp sums otherwise)."""
+    kw = dict(b1=b1, b2=b2, eps=eps, count=count)
+    n = len(g_leaves)
+    out_u: List[Any] = [None] * n
+    out_m: List[Any] = [None] * n
+    out_v: List[Any] = [None] * n
+    out_h: List[Any] = [None] * n
+    bucket: List[int] = []
+    for i, (g, m, v) in enumerate(zip(g_leaves, mu_leaves, nu_leaves)):
+        if leaf_plan(g.shape, g.dtype, ()).route == "jnp":
+            out_u[i], out_m[i], out_v[i] = jnp_adam_leaf(g, m, v, **kw)
+            if with_health:
+                out_h[i] = leaf_health(g)
+        elif bucket_min_size and g.size < bucket_min_size:
+            bucket.append(i)
+        else:
+            out = _guarded(
+                f"dense:{g.shape}",
+                lambda g=g, m=m, v=v: _dense_kernel_leaf(
+                    g, m, v, interpret=interpret, with_health=with_health, **kw),
+                lambda g=g, m=m, v=v: jnp_adam_leaf(g, m, v, **kw)
+                    + ((leaf_health(g),) if with_health else ()))
+            out_u[i], out_m[i], out_v[i] = out[:3]
+            if with_health:
+                out_h[i] = out[3]
+    _flush_bucket(bucket, g_leaves, mu_leaves, nu_leaves, out_u, out_m, out_v,
+                  interpret=interpret, out_h=out_h if with_health else None, **kw)
+    if with_health:
+        return out_u, out_m, out_v, out_h
+    return out_u, out_m, out_v
+
+
 def adam_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Sequence[jnp.ndarray],
                      nu_leaves: Sequence[jnp.ndarray], *, b1: float, b2: float,
                      eps: float, count, interpret: Optional[bool] = None,
                      bucket_min_size: int = DEFAULT_BUCKET_MIN,
-                     mesh=None, spec_leaves=None):
+                     mesh=None, spec_leaves=None, with_health: bool = False):
     """Dense Adam over a leaf list: kernels for eligible leaves (small ones
     bucketed), jnp fallback otherwise. Returns (updates, new_mu, new_nu).
 
     With ``mesh`` + ``spec_leaves`` (one PartitionSpec per leaf) the whole
     update runs under ``shard_map`` — each device updates its local shards —
     instead of letting GSPMD gather full leaves around the pallas_call
-    optimization barrier."""
+    optimization barrier.
+
+    ``with_health=True`` appends a :class:`StepHealth` — per-leaf non-finite
+    counts and the finite-masked global grad sumsq, accumulated in the same
+    kernel/XLA passes that stream the update (O(leaves) scalar outputs, no
+    extra tensor traffic; under a mesh, one stacked (n, 2) psum)."""
     interpret = default_interpret() if interpret is None else interpret
     if _use_sharded(mesh, spec_leaves) and len(g_leaves):
         return _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh,
                                   b1=b1, b2=b2, eps=eps, count=count,
-                                  interpret=interpret, bucket_min_size=bucket_min_size)
+                                  interpret=interpret, bucket_min_size=bucket_min_size,
+                                  with_health=with_health)
+    out = _adam_tree_local(g_leaves, mu_leaves, nu_leaves, b1=b1, b2=b2, eps=eps,
+                           count=count, interpret=interpret,
+                           bucket_min_size=bucket_min_size, with_health=with_health)
+    if with_health:
+        return out[:3] + (_health_from_rows(out[3]),)
+    return out
+
+
+def _slim_tree_local(g_leaves, mu_leaves, nu_leaves, dims_leaves, *, b1, b2, eps,
+                     count, use_first_moment, interpret, bucket_min_size,
+                     emit_snr: bool = False, with_health: bool = False):
+    """Unsharded SlimAdam loop. Returns ``(u, m, v, snr_list)`` plus, with
+    ``with_health``, the per-leaf (2,) health rows as a fifth element."""
     kw = dict(b1=b1, b2=b2, eps=eps, count=count)
     n = len(g_leaves)
+    out_s: List[Any] = [None] * n
+    out_h: List[Any] = [None] * n
+    if not use_first_moment:
+        outs = [jnp_slim_leaf(g, None, v, tuple(d), use_first_moment=False, **kw)
+                for g, v, d in zip(g_leaves, nu_leaves, dims_leaves)]
+        if emit_snr:
+            out_s = [jnp_update_snr_leaf(g, o[2], tuple(d), b2=b2) if tuple(d) else None
+                     for g, o, d in zip(g_leaves, outs, dims_leaves)]
+        if with_health:
+            out_h = [leaf_health(g) for g in g_leaves]
+        out = ([o[0] for o in outs], None, [o[2] for o in outs], out_s)
+        return out + (out_h,) if with_health else out
     out_u: List[Any] = [None] * n
     out_m: List[Any] = [None] * n
     out_v: List[Any] = [None] * n
     bucket: List[int] = []
-    for i, (g, m, v) in enumerate(zip(g_leaves, mu_leaves, nu_leaves)):
-        if leaf_plan(g.shape, g.dtype, ()).route == "jnp":
-            out_u[i], out_m[i], out_v[i] = jnp_adam_leaf(g, m, v, **kw)
-        elif bucket_min_size and g.size < bucket_min_size:
-            bucket.append(i)
+    # The with_snr kernel variant keeps an extra shifted-g^2 copy live, so
+    # measure steps gate the VMEM fit on its larger working set (a leaf near
+    # the budget may route jnp on measure steps while staying fused on
+    # plain steps — different jitted executables anyway).
+    n_bufs = PRECOND_SNR_BUFS if emit_snr else PRECOND_BUFS
+    for i, (g, v, dims) in enumerate(zip(g_leaves, nu_leaves, dims_leaves)):
+        dims = tuple(dims)
+        plan = leaf_plan(g.shape, g.dtype, dims, n_bufs=n_bufs)
+        if plan.route == "jnp":
+            out_u[i], out_m[i], out_v[i] = jnp_slim_leaf(
+                g, mu_leaves[i], v, dims, use_first_moment=True, **kw)
+            if emit_snr and dims:
+                out_s[i] = jnp_update_snr_leaf(g, out_v[i], dims, b2=b2)
+            if with_health:
+                out_h[i] = leaf_health(g)
+        elif plan.route == "dense":
+            if bucket_min_size and g.size < bucket_min_size:
+                bucket.append(i)
+            else:
+                out = _guarded(
+                    f"dense:{g.shape}",
+                    lambda g=g, m=mu_leaves[i], v=v: _dense_kernel_leaf(
+                        g, m, v, interpret=interpret, with_health=with_health, **kw),
+                    lambda g=g, m=mu_leaves[i], v=v: jnp_adam_leaf(g, m, v, **kw)
+                        + ((leaf_health(g),) if with_health else ()))
+                out_u[i], out_m[i], out_v[i] = out[:3]
+                if with_health:
+                    out_h[i] = out[3]
         else:
-            out_u[i], out_m[i], out_v[i] = _dense_kernel_leaf(
-                g, m, v, interpret=interpret, **kw)
+            def slim_jnp_fallback(g=g, m=mu_leaves[i], v=v, dims=dims):
+                out = jnp_slim_leaf(g, m, v, dims, use_first_moment=True, **kw)
+                if emit_snr:
+                    out = out + (jnp_update_snr_leaf(g, out[2], dims, b2=b2)
+                                 if dims else None,)
+                return out + ((leaf_health(g),) if with_health else ())
+
+            out = _guarded(
+                f"slim:{g.shape}",
+                lambda g=g, m=mu_leaves[i], v=v, cn=plan.cn: _slim_kernel_leaf(
+                    g, m, v, cn, interpret=interpret, with_snr=emit_snr,
+                    with_health=with_health, **kw),
+                slim_jnp_fallback)
+            out_u[i], out_m[i], out_v[i] = out[:3]
+            if with_health:
+                out_h[i] = out[-1]
+            if emit_snr:
+                out_s[i] = out[3]
     _flush_bucket(bucket, g_leaves, mu_leaves, nu_leaves, out_u, out_m, out_v,
-                  interpret=interpret, **kw)
-    return out_u, out_m, out_v
+                  interpret=interpret, out_h=out_h if with_health else None, **kw)
+    out = (out_u, out_m, out_v, out_s)
+    return out + (out_h,) if with_health else out
 
 
 def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequence[jnp.ndarray]],
@@ -581,7 +883,8 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
                      b1: float, b2: float, eps: float, count,
                      use_first_moment: bool = True, interpret: Optional[bool] = None,
                      bucket_min_size: int = DEFAULT_BUCKET_MIN,
-                     mesh=None, spec_leaves=None, emit_snr: bool = False):
+                     mesh=None, spec_leaves=None, emit_snr: bool = False,
+                     with_health: bool = False):
     """SlimAdam over a leaf list with per-leaf reduction-dim tuples.
 
     Each leaf's route comes from one :func:`leaf_plan` lookup: K = () leaves
@@ -606,56 +909,30 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
     leaves whose reduced dims are split run the Pallas partial-stats /
     finalize pair around a ``lax.psum`` over the owning mesh axes (with
     owner-shard moment storage riding the collective), and interleaved-K-
-    after-sharding leaves run the reference jnp math per shard."""
+    after-sharding leaves run the reference jnp math per shard.
+
+    ``with_health=True`` appends a :class:`StepHealth` (always the last
+    element): per-leaf non-finite counts + finite-masked global grad sumsq,
+    accumulated by the update kernels' own strip loops (O(leaves) scalar
+    outputs, no new tensor traffic; under a mesh, one stacked (n, 2) psum).
+
+    Kernel-ineligible or Pallas-failing leaves degrade to the reference jnp
+    math per leaf (see :func:`set_kernel_fault_hook` /
+    :func:`kernel_degraded_leaves`) — a compile regression costs bandwidth,
+    not the run."""
     interpret = default_interpret() if interpret is None else interpret
     if _use_sharded(mesh, spec_leaves) and len(g_leaves):
         return _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves,
                                   spec_leaves, mesh, b1=b1, b2=b2, eps=eps,
                                   count=count, use_first_moment=use_first_moment,
                                   interpret=interpret, bucket_min_size=bucket_min_size,
-                                  emit_snr=emit_snr)
-    kw = dict(b1=b1, b2=b2, eps=eps, count=count)
-    n = len(g_leaves)
-    out_s: List[Any] = [None] * n
-    if not use_first_moment:
-        outs = [jnp_slim_leaf(g, None, v, tuple(d), use_first_moment=False, **kw)
-                for g, v, d in zip(g_leaves, nu_leaves, dims_leaves)]
-        if emit_snr:
-            out_s = [jnp_update_snr_leaf(g, o[2], tuple(d), b2=b2) if tuple(d) else None
-                     for g, o, d in zip(g_leaves, outs, dims_leaves)]
-            return [o[0] for o in outs], None, [o[2] for o in outs], out_s
-        return [o[0] for o in outs], None, [o[2] for o in outs]
-    out_u: List[Any] = [None] * n
-    out_m: List[Any] = [None] * n
-    out_v: List[Any] = [None] * n
-    bucket: List[int] = []
-    # The with_snr kernel variant keeps an extra shifted-g^2 copy live, so
-    # measure steps gate the VMEM fit on its larger working set (a leaf near
-    # the budget may route jnp on measure steps while staying fused on
-    # plain steps — different jitted executables anyway).
-    n_bufs = PRECOND_SNR_BUFS if emit_snr else PRECOND_BUFS
-    for i, (g, v, dims) in enumerate(zip(g_leaves, nu_leaves, dims_leaves)):
-        dims = tuple(dims)
-        plan = leaf_plan(g.shape, g.dtype, dims, n_bufs=n_bufs)
-        if plan.route == "jnp":
-            out_u[i], out_m[i], out_v[i] = jnp_slim_leaf(
-                g, mu_leaves[i], v, dims, use_first_moment=True, **kw)
-            if emit_snr and dims:
-                out_s[i] = jnp_update_snr_leaf(g, out_v[i], dims, b2=b2)
-        elif plan.route == "dense":
-            if bucket_min_size and g.size < bucket_min_size:
-                bucket.append(i)
-            else:
-                out_u[i], out_m[i], out_v[i] = _dense_kernel_leaf(
-                    g, mu_leaves[i], v, interpret=interpret, **kw)
-        else:
-            out = _slim_kernel_leaf(g, mu_leaves[i], v, plan.cn,
-                                    interpret=interpret, with_snr=emit_snr, **kw)
-            out_u[i], out_m[i], out_v[i] = out[:3]
-            if emit_snr:
-                out_s[i] = out[3]
-    _flush_bucket(bucket, g_leaves, mu_leaves, nu_leaves, out_u, out_m, out_v,
-                  interpret=interpret, **kw)
-    if emit_snr:
-        return out_u, out_m, out_v, out_s
-    return out_u, out_m, out_v
+                                  emit_snr=emit_snr, with_health=with_health)
+    res = _slim_tree_local(g_leaves, mu_leaves, nu_leaves, dims_leaves,
+                           b1=b1, b2=b2, eps=eps, count=count,
+                           use_first_moment=use_first_moment, interpret=interpret,
+                           bucket_min_size=bucket_min_size, emit_snr=emit_snr,
+                           with_health=with_health)
+    out = res[:3] + ((res[3],) if emit_snr else ())
+    if with_health:
+        out = out + (_health_from_rows(res[4]),)
+    return out

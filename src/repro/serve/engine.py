@@ -6,6 +6,7 @@ caches (the decode_32k / long_500k dry-run cells lower exactly this step).
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import List, Optional
 
@@ -21,6 +22,10 @@ class ServeConfig:
     max_seq: int = 512
     temperature: float = 0.0   # 0 = greedy
     seed: int = 0
+    # Per-request wall-clock budget (seconds). A pathological decode loop —
+    # a recompile storm, an overloaded host — degrades to a *truncated*
+    # response with a warning instead of hanging the caller. None = no cap.
+    max_wall_s: Optional[float] = None
 
 
 class Engine:
@@ -64,13 +69,27 @@ class Engine:
             dtype=jnp.float32 if self.cfg.dtype == jnp.float32 else jnp.bfloat16)
         key = jax.random.PRNGKey(self.sc.seed)
 
+        t0 = time.monotonic()
+
+        def over_budget() -> bool:
+            return (self.sc.max_wall_s is not None
+                    and time.monotonic() - t0 > self.sc.max_wall_s)
+
         tokens = prompts
         logits = None
         for i in range(s_prompt):                      # prefill
             logits, cache = self._decode(self.params, cache, prompts[:, i:i + 1])
+            if over_budget():
+                # Can't emit anything sensible without a full prefill — the
+                # degraded response is the prompt unchanged.
+                warnings.warn(
+                    f"serve request exceeded wall-clock budget "
+                    f"max_wall_s={self.sc.max_wall_s} during prefill "
+                    f"({i + 1}/{s_prompt} tokens); returning prompt only")
+                return prompts
         out: List[jnp.ndarray] = [tokens]
         done = jnp.zeros((b, 1), bool)
-        for _ in range(max_new):                       # decode
+        for n in range(max_new):                       # decode
             key, sub = jax.random.split(key)
             nxt = self._sample(logits, sub)
             if eos_id is not None:
@@ -79,5 +98,11 @@ class Engine:
             out.append(nxt)
             if eos_id is not None and bool(done.all()):
                 break                                  # every row finished
+            if over_budget():
+                warnings.warn(
+                    f"serve request exceeded wall-clock budget "
+                    f"max_wall_s={self.sc.max_wall_s} after {n + 1}/{max_new} "
+                    f"tokens; returning truncated response")
+                break
             logits, cache = self._decode(self.params, cache, nxt)
         return jnp.concatenate(out, axis=1)

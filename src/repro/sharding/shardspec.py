@@ -280,16 +280,20 @@ def plan_sharded_tree(shapes: Sequence[Tuple[int, ...]], dtypes: Sequence[Any],
             for s, dt, d, sp in zip(shapes, dtypes, dims_leaves, spec_leaves)]
 
 
-def regime_counts(plans: Sequence[ShardLeafPlan]) -> Dict[str, int]:
-    """{'local': n, 'psum': n, 'psum_jnp': n, 'jnp': n} over a planned tree —
-    the report the dispatchers and the sharded roofline print, so a planner
-    regression that silently demotes kernel leaves to a jnp fallback is
-    visible. 'psum' counts only Pallas-resident psum leaves (partial-stats +
-    finalize kernels); 'psum_jnp' counts psum leaves whose local canonical
-    plan the kernel pair cannot serve (interleaved K after sharding,
-    VMEM-exceeding lines) — the CI roofline gate holds this at zero for
-    gpt_small."""
-    out = {"local": 0, "psum": 0, "psum_jnp": 0, "jnp": 0}
+def regime_counts(plans: Sequence[ShardLeafPlan], *, degraded: int = 0) -> Dict[str, int]:
+    """{'local': n, 'psum': n, 'psum_jnp': n, 'jnp': n, 'degraded': n} over a
+    planned tree — the report the dispatchers and the sharded roofline print,
+    so a planner regression that silently demotes kernel leaves to a jnp
+    fallback is visible. 'psum' counts only Pallas-resident psum leaves
+    (partial-stats + finalize kernels); 'psum_jnp' counts psum leaves whose
+    local canonical plan the kernel pair cannot serve (interleaved K after
+    sharding, VMEM-exceeding lines) — the CI roofline gate holds this at zero
+    for gpt_small. 'degraded' is the runtime complement to the static plan:
+    leaf calls that fell from a kernel to the jnp reference because the
+    Pallas path raised (pass
+    ``repro.optim.fused.kernel_degraded_leaves()``); it defaults to 0 so a
+    plain planning report stays purely static."""
+    out = {"local": 0, "psum": 0, "psum_jnp": 0, "jnp": 0, "degraded": int(degraded)}
     for pl in plans:
         if pl.regime == "psum" and pl.finalize != "kernel":
             out["psum_jnp"] += 1

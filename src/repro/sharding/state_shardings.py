@@ -124,11 +124,17 @@ def opt_state_specs(abstract_state: Any, params_abstract: Any, param_spec_tree: 
                                        owner_mesh),
                 # from-update SNR scalars (emit_snr states only): replicated
                 snr=_replicated(node.snr) if node.snr is not None else None,
+                # StepHealth scalars (emit_health states only): replicated
+                health=_replicated(node.health) if node.health is not None else None,
             )
         if isinstance(node, ScaleByAdamState):
             _check_mirrors(node.mu, params_abstract, "ScaleByAdamState.mu")
             _check_mirrors(node.nu, params_abstract, "ScaleByAdamState.nu")
-            return ScaleByAdamState(count=P(), mu=_like_params(param_spec_tree), nu=_like_params(param_spec_tree))
+            return ScaleByAdamState(
+                count=P(), mu=_like_params(param_spec_tree),
+                nu=_like_params(param_spec_tree),
+                health=_replicated(node.health) if node.health is not None else None,
+            )
         if isinstance(node, TraceState):
             _check_mirrors(node.trace, params_abstract, "TraceState.trace")
             return TraceState(trace=_like_params(param_spec_tree))

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -33,6 +34,13 @@ from ..core.baselines import (
 from ..core.slim_adam import slim_adam
 from ..data.pipeline import ZipfLM
 from ..optim.adam import adamw, sgdm
+from .guard import (
+    ROLLBACK,
+    Guard,
+    GuardConfig,
+    find_slim_snr,
+    strip_slim_snr as _strip_slim_snr,
+)
 from .step import make_eval_step, make_train_step
 
 OPTIMIZERS = ("adam", "slim", "slim_snr", "adalayer", "adalayer_ln_tl",
@@ -72,7 +80,8 @@ def slim_rule_dims(name: str, params, meta, rules: Optional[Dict[str, Any]] = No
 def make_optimizer(name: str, lr, params, meta, *, weight_decay: float = 0.1,
                    b1: float = 0.9, b2: float = 0.95, grad_clip: float = 1.0,
                    rules: Optional[Dict[str, Any]] = None, backend: str = "jnp",
-                   mesh=None, param_specs=None, emit_snr: bool = False):
+                   mesh=None, param_specs=None, emit_snr: bool = False,
+                   emit_health: bool = False):
     """Build any of the paper's optimizers. ``rules`` overrides the rule set
     for 'slim_snr' (derived from a measured SNR pass). ``backend`` selects
     the execution path for the Adam/SlimAdam family ('jnp' | 'fused' |
@@ -81,18 +90,25 @@ def make_optimizer(name: str, lr, params, meta, *, weight_decay: float = 0.1,
     update runs under shard_map on the local shards); only the Adam/SlimAdam
     family consumes them. ``emit_snr`` (slim family only) builds the
     measure-step variant whose update publishes from-update SNR scalars on
-    the optimizer state (see ``repro.core.slim_adam.scale_by_slim_adam``)."""
+    the optimizer state (see ``repro.core.slim_adam.scale_by_slim_adam``).
+    ``emit_health`` (Adam/slim family) publishes the in-pass StepHealth
+    anomaly stats the guarded train step consumes (``repro.train.guard``)."""
     if emit_snr and name not in _SLIM_FAMILY:
         raise ValueError(f"emit_snr is only supported by the slim family "
                          f"{_SLIM_FAMILY}, not {name!r}")
+    if emit_health and name not in ("adam",) + _SLIM_FAMILY:
+        raise ValueError(f"emit_health is only supported by the Adam/slim "
+                         f"family {('adam',) + _SLIM_FAMILY}, not {name!r}")
     if name == "adam":
         return adamw(lr, b1=b1, b2=b2, weight_decay=weight_decay, grad_clip=grad_clip,
-                     backend=backend, mesh=mesh, param_specs=param_specs)
+                     backend=backend, mesh=mesh, param_specs=param_specs,
+                     emit_health=emit_health)
     if name in _SLIM_FAMILY:
         dims = slim_rule_dims(name, params, meta, rules)
         return slim_adam(lr, dims, b1=b1, b2=b2, weight_decay=weight_decay,
                          grad_clip=grad_clip, backend=backend, mesh=mesh,
-                         param_specs=param_specs, emit_snr=emit_snr)
+                         param_specs=param_specs, emit_snr=emit_snr,
+                         emit_health=emit_health)
     if name == "adafactor":
         return adafactor(lr, weight_decay=weight_decay, grad_clip=grad_clip)
     if name == "adafactor_v2":
@@ -128,47 +144,6 @@ def find_adam_nu(opt_state) -> Optional[Any]:
     return walk(opt_state)
 
 
-def _strip_slim_snr(opt_state):
-    """Return ``opt_state`` with any published from-update SNR snapshot
-    cleared — restores the snr-less pytree layout after the trainer has
-    consumed a measure step's snapshot (checkpoint templates and the normal
-    step's jit signature both expect it)."""
-    from ..core.slim_adam import ScaleBySlimAdamState
-    from ..optim.base import ChainState, MultiStepsState
-
-    def walk(node):
-        if isinstance(node, ScaleBySlimAdamState):
-            return node._replace(snr=None) if node.snr is not None else node
-        if isinstance(node, ChainState):
-            return ChainState(tuple(walk(s) for s in node.inner_states))
-        if isinstance(node, MultiStepsState):
-            return node._replace(inner_state=walk(node.inner_state))
-        return node
-
-    return walk(opt_state)
-
-
-def find_slim_snr(opt_state) -> Optional[Any]:
-    """Extract the from-update SNR pytree a measure-step ``emit_snr``
-    update published on the (possibly chained) SlimAdam state, if any."""
-    from ..core.slim_adam import ScaleBySlimAdamState
-    from ..optim.base import ChainState, MultiStepsState
-
-    def walk(node):
-        if isinstance(node, ScaleBySlimAdamState):
-            return node.snr
-        if isinstance(node, ChainState):
-            for s in node.inner_states:
-                out = walk(s)
-                if out is not None:
-                    return out
-        if isinstance(node, MultiStepsState):
-            return walk(node.inner_state)
-        return None
-
-    return walk(opt_state)
-
-
 @dataclasses.dataclass
 class TrainerConfig:
     total_steps: int = 1000
@@ -190,15 +165,23 @@ class TrainerConfig:
     # pass: 'jnp' | 'fused' | 'auto' (fused kernels on TPU, jnp elsewhere).
     # An explicit optimizer_kw['backend'] passed to Trainer wins.
     backend: str = "jnp"
+    # Fault-tolerance policy: a GuardConfig turns on the guarded train step
+    # (in-pass anomaly health + skip/backoff/rollback, see repro.train.guard);
+    # None keeps the plain step with an unchanged jit signature.
+    guard: Optional[GuardConfig] = None
 
 
 class Trainer:
     def __init__(self, model_cfg, optimizer_name: str, lr, data: ZipfLM,
                  tc: TrainerConfig = TrainerConfig(), *, optimizer_kw: Optional[dict] = None,
-                 rules: Optional[dict] = None, grad_accum: int = 1):
+                 rules: Optional[dict] = None, grad_accum: int = 1, faults=None):
         self.model_cfg = model_cfg
         self.tc = tc
         self.data = data
+        # Host-side anomaly policy + (test/drill-only) fault injection plan.
+        self.guard = Guard(tc.guard) if tc.guard is not None else None
+        self.faults = faults
+        self.ckpt_failures = 0
         key = jax.random.PRNGKey(tc.seed)
         self.params, self.meta = model_cfg.init(key)
         okw = dict(optimizer_kw or {})
@@ -215,13 +198,18 @@ class Trainer:
         self.param_specs = param_specs(self.meta, self.params) if ctx is not None else None
         okw.setdefault("mesh", self.mesh)
         okw.setdefault("param_specs", self.param_specs)
+        guarded = self.guard is not None
+        # In-pass kernel health only exists on the Adam/slim family; other
+        # optimizers still run guarded via the step's grad-norm fallback.
+        emit_health = guarded and optimizer_name in ("adam",) + _SLIM_FAMILY
         self.tx = make_optimizer(optimizer_name, lr, self.params, self.meta,
-                                 rules=rules, **okw)
+                                 rules=rules, emit_health=emit_health, **okw)
         self.opt_state = self.tx.init(self.params)
         self.step = 0
         self.snr = SNRTracker()
         self.metrics_log: list = []
-        self._train_step = jax.jit(make_train_step(model_cfg, self.tx, grad_accum=grad_accum))
+        self._train_step = jax.jit(make_train_step(
+            model_cfg, self.tx, grad_accum=grad_accum, guard=guarded))
         # Measure-step variant: same optimizer built with emit_snr=True, so
         # on SNR cadence steps the update pass itself measures SNR_K along
         # each compressed leaf's own K (state.snr) and maybe_measure_snr
@@ -232,9 +220,10 @@ class Trainer:
             self._update_dims = slim_rule_dims(optimizer_name, self.params,
                                                self.meta, rules)
             tx_snr = make_optimizer(optimizer_name, lr, self.params, self.meta,
-                                    rules=rules, emit_snr=True, **okw)
-            self._train_step_snr = jax.jit(
-                make_train_step(model_cfg, tx_snr, grad_accum=grad_accum))
+                                    rules=rules, emit_snr=True,
+                                    emit_health=emit_health, **okw)
+            self._train_step_snr = jax.jit(make_train_step(
+                model_cfg, tx_snr, grad_accum=grad_accum, guard=guarded))
         self._restored = False
         if tc.ckpt_dir and store.latest_step(tc.ckpt_dir) is not None:
             self.restore()
@@ -251,8 +240,36 @@ class Trainer:
     def checkpoint(self):
         if not self.tc.ckpt_dir:
             return
-        store.save(self.tc.ckpt_dir, self.step, {"params": self.params, "opt": self.opt_state},
-                   extra={"step": self.step}, keep=self.tc.ckpt_keep)
+        try:
+            store.save(self.tc.ckpt_dir, self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       extra={"step": self.step}, keep=self.tc.ckpt_keep)
+        except OSError as e:
+            # A failed save must not kill the run — the atomic tmp-dir
+            # protocol guarantees no torn step_* dir was left behind, so we
+            # log, count, and train on to the next checkpoint cadence.
+            self.ckpt_failures += 1
+            warnings.warn(f"checkpoint save failed at step {self.step} "
+                          f"({e}); continuing without it")
+
+    def _rollback(self):
+        """Guard escalation: restore the last *valid* checkpoint and re-seed
+        the data pipeline so the restored trajectory doesn't replay the
+        exact batch sequence that diverged."""
+        self.guard.note_rollback()
+        restored = False
+        if self.tc.ckpt_dir and store.latest_step(self.tc.ckpt_dir) is not None:
+            try:
+                self.restore()
+                restored = True
+            except FileNotFoundError:
+                pass
+        if not restored:
+            warnings.warn("guard requested rollback but no valid checkpoint "
+                          "is available; continuing with backed-off lr")
+        bump = self.guard.counters["rollbacks"] * self.tc.guard.reseed_bump
+        self.data = ZipfLM(dataclasses.replace(
+            self.data.cfg, seed=self.data.cfg.seed + bump))
 
     # -- SNR hook ------------------------------------------------------------
 
@@ -306,13 +323,43 @@ class Trainer:
             if self._train_step_snr is not None and SNRTracker.should_measure(
                     self.step + 1, self.tc.snr_early_every, self.tc.snr_late_every):
                 step_fn = self._train_step_snr
-            self.params, self.opt_state, metrics = step_fn(
-                self.params, self.opt_state, batch)
-            self.step += 1
-            self.maybe_measure_snr()
+            if self.guard is not None:
+                # Controls are traced jnp scalars: host policy (lr backoff)
+                # and fault injection change them without a recompile.
+                g_scale = (self.faults.grad_scale(self.step)
+                           if self.faults is not None else 1.0)
+                controls = {"lr_scale": jnp.asarray(self.guard.lr_scale, jnp.float32),
+                            "grad_scale": jnp.asarray(g_scale, jnp.float32)}
+                self.params, self.opt_state, metrics = step_fn(
+                    self.params, self.opt_state, batch, controls)
+                self.step += 1
+                loss = float(metrics["loss"])
+                if self.faults is not None:
+                    loss = self.faults.corrupt_loss(self.step - 1, loss)
+                skipped = bool(metrics["step_skipped"] > 0)
+                action = self.guard.observe(
+                    loss, skipped=skipped,
+                    nonfinite=float(metrics["nonfinite_count"]))
+                if skipped:
+                    # A measure step that got skipped published SNR from the
+                    # discarded update — drop it without consuming.
+                    self.opt_state = _strip_slim_snr(self.opt_state)
+                else:
+                    self.maybe_measure_snr()
+                if action == ROLLBACK:
+                    self._rollback()
+                    continue
+            else:
+                self.params, self.opt_state, metrics = step_fn(
+                    self.params, self.opt_state, batch)
+                self.step += 1
+                self.maybe_measure_snr()
             if self.step % self.tc.log_every == 0 or self.step == steps:
                 last = {k: float(v) for k, v in metrics.items()}
                 last.update(step=self.step, wall_s=round(time.time() - t0, 2))
+                if self.guard is not None:
+                    last.update(self.guard.stats(),
+                                ckpt_failures=float(self.ckpt_failures))
                 self.metrics_log.append(last)
             if self.tc.ckpt_every and self.step % self.tc.ckpt_every == 0:
                 self.checkpoint()

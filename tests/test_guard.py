@@ -1,0 +1,365 @@
+"""Fault-tolerance substrate: in-pass health, guarded step, guard policy,
+fault injection, graceful kernel degradation."""
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.slim_adam import scale_by_slim_adam, slim_adam
+from repro.data import DataConfig, ZipfLM
+from repro.kernels.fused_adam import adam_precond, health_terms
+from repro.kernels.slim_update import (slim_partial_stats_batched,
+                                       slim_precond_batched)
+from repro.optim import fused
+from repro.optim.adam import scale_by_adam
+from repro.train import (FaultPlan, Guard, GuardConfig, Trainer,
+                         TrainerConfig, inject_kernel_failure)
+from repro.train.guard import BACKOFF, OK, ROLLBACK, SKIP
+from repro.train.step import make_train_step
+from repro.train.trainer import slim_rule_dims
+
+
+def _poisoned(key, shape, n_nan=2, n_inf=1):
+    g = jax.random.normal(key, shape, jnp.float32)
+    flat = g.ravel()
+    flat = flat.at[:n_nan].set(jnp.nan).at[n_nan:n_nan + n_inf].set(jnp.inf)
+    return flat.reshape(shape)
+
+
+class TestKernelHealth:
+    """The with_health kernel outputs vs the jnp oracle (health_terms)."""
+
+    def test_adam_precond_health_counts_and_sumsq(self):
+        g = _poisoned(jax.random.PRNGKey(0), (48, 96), n_nan=3, n_inf=2)
+        m = jnp.zeros_like(g)
+        v = jnp.zeros_like(g)
+        u, m2, v2, h = adam_precond(g, m, v, with_health=True, interpret=True)
+        ref = health_terms(g)
+        assert float(h[0]) == 5.0
+        np.testing.assert_allclose(np.asarray(h), np.asarray(ref), rtol=1e-6)
+        # the 3 tensor outputs are identical with and without health
+        u0, m0, v0 = adam_precond(g, m, v, interpret=True)
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(u0))
+        np.testing.assert_array_equal(np.asarray(m2), np.asarray(m0))
+        np.testing.assert_array_equal(np.asarray(v2), np.asarray(v0))
+
+    def test_adam_precond_health_padded_shapes(self):
+        """Pad-and-recurse must pass the accumulator through untrimmed —
+        zero padding contributes nothing to either health term."""
+        g = _poisoned(jax.random.PRNGKey(1), (37, 101), n_nan=1, n_inf=1)
+        z = jnp.zeros_like(g)
+        *_, h = adam_precond(g, z, z, with_health=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(health_terms(g)),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("axis", [0, 1])
+    def test_slim_kernels_health_both_axes(self, axis):
+        g = _poisoned(jax.random.PRNGKey(2), (2, 16, 64), n_nan=2, n_inf=0)
+        m = jnp.zeros_like(g)
+        red_shape = (2, 1, 64) if axis == 0 else (2, 16, 1)
+        v = jnp.zeros((2,) + red_shape[1:], jnp.float32)
+        ref = health_terms(g)
+        outs = slim_precond_batched(g, m, v, axis=axis, with_health=True,
+                                    interpret=True)
+        np.testing.assert_allclose(np.asarray(outs[-1]), np.asarray(ref), rtol=1e-6)
+        outs = slim_partial_stats_batched(g, m, axis=axis, with_health=True,
+                                          interpret=True)
+        np.testing.assert_allclose(np.asarray(outs[-1]), np.asarray(ref), rtol=1e-6)
+
+    def test_health_with_snr_combined(self):
+        """health is always the LAST output, after any snr stats."""
+        g = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 64))
+        m = jnp.zeros_like(g)
+        v = jnp.zeros((2, 16, 1), jnp.float32)
+        base = slim_precond_batched(g, m, v, axis=1, interpret=True)
+        both = slim_precond_batched(g, m, v, axis=1, with_snr=True,
+                                    with_health=True, interpret=True)
+        assert len(both) == len(base) + 3   # 2 snr stats + 1 health
+        assert both[-1].shape == (2,)
+        np.testing.assert_allclose(np.asarray(both[-1]),
+                                   np.asarray(health_terms(g)), rtol=1e-6)
+
+
+class TestStepHealthState:
+    """emit_health on the transformations: StepHealth on state, jnp/fused
+    parity, and None-field layout stability."""
+
+    def _grads_params(self):
+        params = {"w": jnp.ones((8, 16)), "b": jnp.ones((16,))}
+        grads = {"w": jnp.ones((8, 16)).at[0, 0].set(jnp.nan),
+                 "b": jnp.ones((16,))}
+        return params, grads
+
+    @pytest.mark.parametrize("backend", ["jnp", "fused"])
+    def test_scale_by_adam_health(self, backend):
+        params, grads = self._grads_params()
+        tx = scale_by_adam(backend=backend, emit_health=True)
+        _, st = jax.jit(tx.update)(grads, tx.init(params))
+        h = st.health
+        assert isinstance(h, fused.StepHealth)
+        # leaf order is the flatten order: "b" (clean) before "w" (poisoned)
+        np.testing.assert_array_equal(np.asarray(h.nonfinite), [0.0, 1.0])
+        assert bool(h.bad)
+        # finite-masked norm: sqrt(sum of the finite squares)
+        expect = np.sqrt(8 * 16 - 1 + 16)
+        np.testing.assert_allclose(float(h.grad_norm), expect, rtol=1e-6)
+
+    @pytest.mark.parametrize("backend", ["jnp", "fused"])
+    def test_scale_by_slim_adam_health(self, backend):
+        params, grads = self._grads_params()
+        dims = {"w": (1,), "b": ()}
+        tx = scale_by_slim_adam(dims, backend=backend, emit_health=True)
+        _, st = jax.jit(tx.update)(grads, tx.init(params))
+        np.testing.assert_array_equal(np.asarray(st.health.nonfinite), [0.0, 1.0])
+        assert bool(st.health.bad)
+
+    def test_plain_state_has_no_health_leaves(self):
+        """health=None must contribute no pytree leaves: checkpoints and jit
+        signatures of non-guarded states are byte-identical to before."""
+        params, _ = self._grads_params()
+        st = scale_by_adam().init(params)
+        assert st.health is None
+        assert len(jax.tree_util.tree_leaves(st)) == 5  # count + 2mu + 2nu
+
+    def test_clean_grads_not_bad(self):
+        params, _ = self._grads_params()
+        grads = jax.tree.map(jnp.ones_like, params)
+        tx = scale_by_adam(backend="fused", emit_health=True)
+        _, st = tx.update(grads, tx.init(params))
+        assert not bool(st.health.bad)
+        assert float(jnp.sum(st.health.nonfinite)) == 0.0
+
+
+class TestGuardedStep:
+    def _setup(self, emit_health=True):
+        cfg = get_reduced("smollm_135m")
+        params, meta = cfg.init(jax.random.PRNGKey(0))
+        dims = slim_rule_dims("slim", params, meta)
+        tx = slim_adam(1e-3, dims, backend="fused", emit_health=emit_health)
+        data = ZipfLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                 global_batch=4))
+        batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        step = jax.jit(make_train_step(cfg, tx, guard=True))
+        return step, params, tx.init(params), batch
+
+    @staticmethod
+    def _ctl(lr=1.0, gs=1.0):
+        return {"lr_scale": jnp.asarray(lr, jnp.float32),
+                "grad_scale": jnp.asarray(gs, jnp.float32)}
+
+    def test_nan_step_skipped_bit_identical(self):
+        """A poisoned step must leave params, moments, and count exactly
+        (bit-for-bit) at their pre-step values."""
+        step, params, opt_state, batch = self._setup()
+        p1, s1, m1 = step(params, opt_state, batch, self._ctl())
+        assert float(m1["step_skipped"]) == 0.0
+        p2, s2, m2 = step(p1, s1, batch, self._ctl(gs=float("nan")))
+        assert float(m2["step_skipped"]) == 1.0
+        assert float(m2["nonfinite_count"]) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(s1),
+                        jax.tree_util.tree_leaves(s2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # and training continues cleanly afterwards
+        _, _, m3 = step(p2, s2, batch, self._ctl())
+        assert float(m3["step_skipped"]) == 0.0
+
+    def test_lr_scale_scales_update(self):
+        step, params, opt_state, batch = self._setup()
+        p_full, _, _ = step(params, opt_state, batch, self._ctl(lr=1.0))
+        p_half, _, _ = step(params, opt_state, batch, self._ctl(lr=0.5))
+        d = lambda a, b: np.sqrt(sum(
+            float(jnp.sum((x - y) ** 2)) for x, y in
+            zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))))
+        np.testing.assert_allclose(d(p_half, params) / d(p_full, params),
+                                   0.5, rtol=1e-4)
+
+    def test_grad_norm_fallback_without_emit_health(self):
+        """Optimizers without in-pass health still get guarded via the
+        finiteness of the global grad norm."""
+        step, params, opt_state, batch = self._setup(emit_health=False)
+        _, _, m = step(params, opt_state, batch, self._ctl(gs=float("nan")))
+        assert float(m["step_skipped"]) == 1.0
+
+
+class TestGuardPolicy:
+    def test_spike_backoff_and_recovery(self):
+        g = Guard(GuardConfig(min_history=4, spike_z=4.0, lr_backoff=0.5,
+                              lr_recover=2.0))
+        for i in range(8):
+            assert g.observe(1.0 + 0.01 * (i % 3)) == OK
+        assert g.observe(100.0) == BACKOFF
+        assert g.lr_scale == 0.5
+        assert g.counters["spikes"] == 1
+        assert g.observe(1.0) == OK              # good step recovers lr
+        assert g.lr_scale == 1.0                  # capped at 1
+        # the spike never entered the window: the next normal loss is OK
+        assert g.observe(1.01) == OK
+
+    def test_no_spike_verdict_before_min_history(self):
+        g = Guard(GuardConfig(min_history=8))
+        assert g.observe(1.0) == OK
+        assert g.observe(1000.0) == OK           # too little history
+
+    def test_skip_escalates_to_rollback(self):
+        g = Guard(GuardConfig(max_bad_steps=3, max_rollbacks=2))
+        assert g.observe(float("nan"), skipped=True, nonfinite=10) == SKIP
+        assert g.observe(float("nan"), skipped=True, nonfinite=10) == SKIP
+        assert g.observe(float("nan"), skipped=True, nonfinite=10) == ROLLBACK
+        assert g.counters["skipped"] == 3
+        assert g.counters["nonfinite_total"] == 30
+        g.note_rollback()
+        assert g.consecutive_bad == 0
+
+    def test_rollbacks_capped(self):
+        g = Guard(GuardConfig(max_bad_steps=1, max_rollbacks=1))
+        assert g.observe(0.0, skipped=True) == ROLLBACK
+        g.note_rollback()
+        # past the rollback budget the guard degrades to plain skips
+        assert g.observe(0.0, skipped=True) == SKIP
+
+    def test_nonfinite_loss_is_spike(self):
+        g = Guard(GuardConfig(min_history=2, max_bad_steps=99))
+        g.observe(1.0), g.observe(1.0)
+        assert g.observe(float("inf")) == BACKOFF
+
+    def test_stats_keys(self):
+        s = Guard().stats()
+        for k in ("guard_skipped", "guard_spikes", "guard_backoffs",
+                  "guard_rollbacks", "guard_nonfinite_total", "guard_lr_scale"):
+            assert k in s
+
+
+class TestFaultPlan:
+    def test_deterministic_schedule(self):
+        fp = FaultPlan(nan_grad_steps=(3,), inf_grad_steps=(5,),
+                       spike_steps=(7,), spike_scale=10.0)
+        assert np.isnan(fp.grad_scale(3))
+        assert np.isinf(fp.grad_scale(5))
+        assert fp.grad_scale(4) == 1.0
+        assert fp.corrupt_loss(7, 2.0) == 20.0
+        assert fp.corrupt_loss(8, 2.0) == 2.0
+        assert fp.fault_steps == (3, 5, 7)
+
+
+class TestKernelDegradation:
+    def test_degraded_leaves_counted_and_jnp_parity(self):
+        """An injected pallas failure must degrade per-leaf to the jnp
+        reference path — same numbers, counted, one warning."""
+        gs = [jax.random.normal(jax.random.PRNGKey(i), (32, 64)) for i in range(2)]
+        ms = [jnp.zeros_like(g) for g in gs]
+        vs = [jnp.zeros_like(g) for g in gs]
+        ref = fused.adam_tree_update(gs, list(ms), list(vs), b1=0.9, b2=0.99,
+                                     eps=1e-8, count=1)
+        with inject_kernel_failure():
+            with pytest.warns(UserWarning, match="degrading leaf"):
+                out = fused.adam_tree_update(gs, list(ms), list(vs), b1=0.9,
+                                             b2=0.99, eps=1e-8, count=1)
+            assert fused.kernel_degraded_leaves() >= 1
+        fused.reset_kernel_degradation()
+        for a, b in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(out)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    def test_regime_counts_has_degraded_key(self):
+        from repro.sharding.shardspec import regime_counts
+        counts = regime_counts([], degraded=2)
+        assert counts["degraded"] == 2
+        assert set(counts) == {"local", "psum", "psum_jnp", "jnp", "degraded"}
+
+
+@pytest.mark.slow
+class TestTrainerGuardE2E:
+    def test_injected_run_completes_with_counters(self, tmp_path):
+        cfg = get_reduced("smollm_135m")
+        data = ZipfLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                 global_batch=4))
+        tc = TrainerConfig(total_steps=24, log_every=6, ckpt_every=4,
+                           ckpt_dir=str(tmp_path), backend="fused",
+                           guard=GuardConfig(max_bad_steps=2, min_history=4))
+        faults = FaultPlan(nan_grad_steps=(5,), spike_steps=(13, 14),
+                           spike_scale=100.0)
+        tr = Trainer(cfg, "slim", 1e-3, data, tc, faults=faults)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            last = tr.run()
+        assert tr.step == 24
+        assert tr.guard.counters["skipped"] >= 1
+        assert tr.guard.counters["spikes"] >= 1
+        assert tr.guard.counters["rollbacks"] >= 1
+        assert np.isfinite(last["loss"])
+        assert "guard_rollbacks" in last
+
+    def test_unguarded_trainer_unchanged(self):
+        """guard=None keeps the plain 3-arg step and no guard attributes in
+        metrics — the default path is untouched."""
+        cfg = get_reduced("smollm_135m")
+        data = ZipfLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                 global_batch=4))
+        tr = Trainer(cfg, "adam", 1e-3, data,
+                     TrainerConfig(total_steps=3, log_every=3))
+        last = tr.run()
+        assert tr.guard is None
+        assert "guard_skipped" not in last
+        assert "step_skipped" not in last
+
+
+_MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.optim import fused
+
+    assert jax.device_count() == 8
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    shapes = [(8, 64), (16, 32), (64,), (4, 8, 16)]
+    dims = [(1,), (0,), (), (2,)]
+    specs = [P(None, "model"), P("model", None), P(None), P(None, None, "model")]
+    gs = []
+    for i, s in enumerate(shapes):
+        g = jax.random.normal(jax.random.PRNGKey(i), s, jnp.float32)
+        flat = g.ravel().at[:i].set(jnp.nan)   # leaf i gets i nonfinite entries
+        gs.append(flat.reshape(s))
+    ms = [jnp.zeros_like(g) for g in gs]
+    vs = [jnp.zeros(tuple(1 if j in set(d) else n for j, n in enumerate(s)),
+                    jnp.float32) for s, d in zip(shapes, dims)]
+    u, m, v, h = fused.slim_tree_update(
+        gs, ms, vs, dims, b1=0.9, b2=0.95, eps=1e-8, count=1,
+        mesh=mesh, spec_leaves=specs, with_health=True)
+    # psum-leaf nonfinite flags vs the jnp oracle: exact per-leaf counts
+    np.testing.assert_array_equal(np.asarray(h.nonfinite), [0., 1., 2., 3.])
+    ss_ref = sum(float(jnp.sum(jnp.where(jnp.isfinite(g), g * g, 0.0)))
+                 for g in gs)
+    np.testing.assert_allclose(float(h.grad_sumsq), ss_ref, rtol=1e-5)
+    u2, m2, v2, h2 = fused.slim_tree_update(
+        [jnp.nan_to_num(g, nan=0.0) for g in gs], ms, vs, dims,
+        b1=0.9, b2=0.95, eps=1e-8, count=1,
+        mesh=mesh, spec_leaves=specs, with_health=True)
+    assert float(jnp.sum(h2.nonfinite)) == 0.0
+    print("MULTIDEV_HEALTH_OK")
+""")
+
+
+@pytest.mark.slow
+class TestShardedHealth:
+    def test_8device_psum_health_parity(self):
+        """Sharded health under shard_map on 8 host devices: per-leaf
+        nonfinite counts and the global sumsq must be exact (replication
+        de-duplicated before the psum) vs the jnp oracle."""
+        r = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
+                           capture_output=True, text=True, timeout=600)
+        assert r.returncode == 0, r.stderr[-3000:]
+        assert "MULTIDEV_HEALTH_OK" in r.stdout

@@ -256,6 +256,7 @@ class TestOwnerPlans:
             assert pl.regime == "psum" and pl.finalize == "kernel", (shape, pl)
             assert owner_factor(pl, self.PROD) == want, (shape, pl.owner)
         assert regime_counts(plans) == {"local": 0, "psum": 3, "psum_jnp": 0,
+                                        "degraded": 0,
                                         "jnp": 0}
 
     def test_psum_jnp_counted(self):
@@ -363,7 +364,8 @@ def test_owner_write_psum_parity(tmp_path):
     assert proc.returncode == 0, proc.stderr[-3000:]
     out = json.loads(proc.stdout.strip().splitlines()[-1])
 
-    assert out["regimes"] == {"local": 3, "psum": 3, "psum_jnp": 0, "jnp": 1}
+    assert out["regimes"] == {"local": 3, "psum": 3, "psum_jnp": 0, "jnp": 1,
+                              "degraded": 0}
     # owner dedupe engaged where the psum group divides a kept dim; psumw's
     # 2-axis group finds no placement (6 % 4) and must stay replicated —
     # the partial-placement regression (an unplaced psum axis would inflate

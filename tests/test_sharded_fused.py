@@ -82,6 +82,7 @@ class TestRegimePlans:
             plan_sharded_leaf((4, 6, 8, 10), jnp.float32, (0, 2), P(), MESH, n_bufs=5),
         ]
         assert regime_counts(plans) == {"local": 1, "psum": 1, "psum_jnp": 0,
+                                        "degraded": 0,
                                         "jnp": 1}
 
     def test_normalize_spec_leaves_validates_structure(self):
@@ -245,7 +246,7 @@ def test_sharded_fused_parity(tmp_path):
     # fanin + dense + vec run the unchanged kernels on local shards; psum and
     # interleaved-K leaves take the cross-shard / per-shard jnp paths.
     assert out["regimes"] == {"local": 3, "psum": 1, "psum_jnp": 0,
-                              "jnp": 1}, out["regimes"]
+                              "jnp": 1, "degraded": 0}, out["regimes"]
 
     for group in ("slim_u", "slim_nu", "adam_u"):
         for leaf, r in out[group].items():

@@ -1,4 +1,6 @@
 """Data pipeline, checkpointing (incl. resharding restore), trainer, serving."""
+import dataclasses
+import json
 import time
 
 import jax
@@ -10,7 +12,8 @@ from repro.checkpoint import store
 from repro.configs import get_reduced
 from repro.data import DataConfig, ZipfLM
 from repro.serve import Engine, ServeConfig
-from repro.train import Trainer, TrainerConfig
+from repro.train import (Trainer, TrainerConfig, inject_checkpoint_io_failure,
+                         tear_checkpoint)
 
 
 class TestData:
@@ -108,6 +111,107 @@ class TestCheckpoint:
         assert (tmp_path / "step_00000009" / "manifest.json").exists()
         assert store.latest_step(tmp_path) in (7, 9)
         acp.wait()                      # idempotent after pruning
+
+
+class TestHardenedCheckpoint:
+    _tree = TestCheckpoint._tree
+
+    def test_torn_newest_falls_back_to_previous(self, tmp_path):
+        """A checkpoint torn mid-write (truncated arrays, wrong checksums)
+        must be skipped with a warning and the previous valid step restored."""
+        t = self._tree()
+        store.save(tmp_path, 1, t, extra={"step": 1})
+        store.save(tmp_path, 2, t, extra={"step": 2})
+        torn = tear_checkpoint(tmp_path)
+        assert torn == 2
+        with pytest.warns(UserWarning, match="falling back"):
+            _, extra = store.restore(tmp_path, t)
+        assert extra["step"] == 1
+
+    def test_explicit_step_checksum_mismatch_raises(self, tmp_path):
+        """step=... is a demand for *that* checkpoint: a checksum mismatch
+        raises (naming the bad leaf) instead of silently falling back."""
+        t = self._tree()
+        store.save(tmp_path, 3, t)
+        mpath = tmp_path / "step_00000003" / "manifest.json"
+        manifest = json.loads(mpath.read_text())
+        leaf = next(iter(manifest["leaves"]))
+        manifest["leaves"][leaf]["crc32"] = (
+            manifest["leaves"][leaf]["crc32"] + 1) % (1 << 32)
+        mpath.write_text(json.dumps(manifest))
+        with pytest.raises(store.ChecksumError, match=f"leaf '{leaf}' crc32"):
+            store.restore(tmp_path, t, step=3)
+        # ChecksumError is a ValueError: strict callers keep working
+        assert issubclass(store.ChecksumError, ValueError)
+
+    def test_no_valid_checkpoint_raises_filenotfound(self, tmp_path):
+        t = self._tree()
+        store.save(tmp_path, 1, t)
+        tear_checkpoint(tmp_path)
+        with pytest.warns(UserWarning, match="falling back"):
+            with pytest.raises(FileNotFoundError):
+                store.restore(tmp_path, t)
+
+    def test_stale_tmp_dir_invisible(self, tmp_path):
+        """`step-<n>.tmp` staging dirs never match the `step_*` glob, so a
+        crash mid-save can't surface a half-written checkpoint; the next
+        save of that step clears the stale staging dir."""
+        t = self._tree()
+        store.save(tmp_path, 5, t, extra={"step": 5})
+        stale = tmp_path / "step-00000006.tmp"
+        stale.mkdir()
+        (stale / "manifest.json").write_text("{not json")
+        assert store.latest_step(tmp_path) == 5
+        _, extra = store.restore(tmp_path, t)
+        assert extra["step"] == 5
+        store.save(tmp_path, 6, t)          # clears + replaces the stale tmp
+        assert store.latest_step(tmp_path) == 6
+        assert not stale.exists()
+
+    def test_async_failure_reraised_with_step(self, tmp_path, monkeypatch):
+        """A worker-thread save failure must not vanish: the first failure is
+        re-raised (naming the step) on the next wait()/save()."""
+        def boom(ckpt_dir, step, tree, **kw):
+            raise RuntimeError("disk on fire")
+
+        monkeypatch.setattr(store, "save", boom)
+        acp = store.AsyncCheckpointer(max_retries=0, backoff_s=0.01)
+        acp.save(tmp_path, 7, self._tree())
+        with pytest.raises(RuntimeError, match="step 7"):
+            acp.wait()
+        monkeypatch.undo()
+        acp.save(tmp_path, 8, self._tree())  # failure cleared: next save works
+        acp.wait()
+        assert store.latest_step(tmp_path) == 8
+
+    def test_async_retries_transient_io_error(self, tmp_path):
+        """One injected OSError on the first write attempt: the worker
+        retries with backoff and the checkpoint still lands."""
+        acp = store.AsyncCheckpointer(max_retries=2, backoff_s=0.01)
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("ignore")
+            with inject_checkpoint_io_failure(fail_on=(1,)) as io_state:
+                acp.save(tmp_path, 11, self._tree())
+                acp.wait()                   # must not raise: retry succeeded
+        assert io_state["failed"] == 1
+        assert io_state["calls"] >= 2
+        assert store.latest_step(tmp_path) == 11
+
+    def test_pre_checksum_checkpoints_still_restore(self, tmp_path):
+        """Checkpoints written before the crc32 field existed (no "crc32" in
+        the manifest leaves) must restore without checksum verification."""
+        t = self._tree()
+        store.save(tmp_path, 4, t, extra={"step": 4})
+        mpath = tmp_path / "step_00000004" / "manifest.json"
+        manifest = json.loads(mpath.read_text())
+        for leaf in manifest["leaves"].values():
+            leaf.pop("crc32")
+        mpath.write_text(json.dumps(manifest))
+        restored, extra = store.restore(tmp_path, t)
+        assert extra["step"] == 4
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 class TestTrainerFaultTolerance:
@@ -209,3 +313,36 @@ class TestServe:
         out = eng.generate(prompts, eos_id=eos)
         assert out.shape[1] == 4                 # stopped right after eos
         assert int(out[0, -1]) == eos
+
+    def test_wall_clock_budget_prefill_degrades_to_prompt(self):
+        """max_wall_s exhausted during prefill: the engine can't emit
+        anything sensible, so it returns the prompt unchanged (with a
+        warning) instead of hanging past its latency budget."""
+        cfg = get_reduced("smollm_135m")
+        params, _ = cfg.init(jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, ServeConfig(max_new_tokens=8, max_seq=32,
+                                              max_wall_s=0.0))
+        prompts = jnp.array([[1, 2, 3, 4]], dtype=jnp.int32)
+        with pytest.warns(UserWarning, match="wall-clock budget.*prefill"):
+            out = eng.generate(prompts)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(prompts))
+
+    def test_wall_clock_budget_truncates_decode(self):
+        """Budget exhausted mid-decode: return what was generated so far
+        (truncated, warned) rather than the full max_new_tokens."""
+        cfg = get_reduced("smollm_135m")
+        params, _ = cfg.init(jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, ServeConfig(max_new_tokens=32, max_seq=64))
+        prompts = jnp.array([[1, 2]], dtype=jnp.int32)
+        eng.generate(prompts)                    # warm the jit caches
+        real_decode = eng._decode
+
+        def slow_decode(params, cache, tok):
+            time.sleep(0.05)
+            return real_decode(params, cache, tok)
+
+        eng._decode = slow_decode
+        eng.sc = dataclasses.replace(eng.sc, max_wall_s=0.5)
+        with pytest.warns(UserWarning, match="truncated response"):
+            out = eng.generate(prompts)
+        assert 2 < out.shape[1] < 2 + 32         # some tokens, not all
