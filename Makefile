@@ -1,10 +1,17 @@
 # Every target delegates to scripts/ci.sh — the single source of truth the
 # GitHub workflow calls too, so `make ci` and hosted CI cannot drift.
 
-.PHONY: lint test test-fast bench-quick bench bench-roofline fault-drill ci
+.PHONY: lint analyze test test-fast bench-quick bench bench-roofline fault-drill ci
 
 lint:
 	bash scripts/ci.sh lint
+
+# Static contract checker (repro.analysis): kernel buffer/VMEM/dtype and
+# golden-signature checks, grid-race detection, sharding-plan geometry over
+# the config zoo, guarded-step trace stability, and the RPR lint rules —
+# device-free and fast, the gate between lint and the test tiers.
+analyze:
+	bash scripts/ci.sh analyze
 
 test:
 	bash scripts/ci.sh test-full

@@ -277,83 +277,32 @@ def roofline_check() -> int:
 _SHARDED_PASSES = {"local": 5, "psum": 5, "jnp": 7}
 
 def _snr_stat_lines():
-    """Per-regime extra-output counts of the with_snr kernel variants,
-    derived from the kernels themselves (``jax.eval_shape`` of a small
-    canonical leaf with and without ``with_snr``), plus a structural check
-    that every extra output is line-shaped — the fused-SNR claim is
-    precisely that a measure step adds O(kept) stat lines and zero
-    full-size passes, so the gate must observe the kernels' actual output
-    signatures, not a constant that restates the model's own assumption.
+    """Per-regime extra-output counts of the with_snr kernel variants, read
+    from the analysis registry's eval_shape signature matrix — the same
+    signatures ``python -m repro.analysis`` diffs against
+    ``golden_signatures.json``, so the roofline gate and the static checker
+    observe one source of truth.
 
     Returns ({'psum': n, 'local': n, 'jnp': n}, full_size_outputs) where a
     non-empty second element means a with_snr variant grew a full-size
     output (the gate fails on it)."""
-    import math
+    from repro.analysis.registry import snr_stat_lines
 
-    from repro.kernels.slim_update import (slim_partial_stats_batched,
-                                           slim_precond_batched)
-
-    g = jax.ShapeDtypeStruct((2, 8, 128), jnp.float32)
-    v = jax.ShapeDtypeStruct((2, 8, 1), jnp.float32)
-    full = math.prod(g.shape)
-
-    def extra(base_fn, snr_fn):
-        base = jax.tree.leaves(jax.eval_shape(base_fn))
-        snr = jax.tree.leaves(jax.eval_shape(snr_fn))
-        return snr[len(base):]
-
-    partial = extra(
-        lambda: slim_partial_stats_batched(g, g, axis=1, interpret=True),
-        lambda: slim_partial_stats_batched(g, g, axis=1, with_snr=True,
-                                           interpret=True))
-    precond = extra(
-        lambda: slim_precond_batched(g, g, v, axis=1, interpret=True),
-        lambda: slim_precond_batched(g, g, v, axis=1, with_snr=True,
-                                     interpret=True))
-    oversize = [tuple(o.shape) for o in partial + precond
-                if math.prod(o.shape) >= full]
-    # jnp-fallback leaves fuse the same centered sums into the XLA pass —
-    # charge them like the single-kernel (local) form.
-    return ({"psum": len(partial), "local": len(precond),
-             "jnp": len(precond)}, oversize)
+    return snr_stat_lines()
 
 
 def _health_stat_outputs():
-    """Extra-output shapes of every kernel's ``with_health`` variant,
-    observed from the kernels' own signatures (``jax.eval_shape`` with and
-    without the flag) — the anomaly-guard claim is that health stats ride
-    the existing update pass for **O(1) scalars per leaf**, zero new tensor
-    traffic, so the gate must see exactly one tiny accumulator per kernel.
+    """Extra-output shapes of every kernel's ``with_health`` variant, read
+    from the analysis registry (one tiny accumulator per kernel is the
+    anomaly-guard O(1) claim; see ``repro.analysis.kernelcheck``'s okept
+    check, which enforces the same bound across the whole case matrix).
 
     Returns a list of (kernel_name, extra_output_shapes); the gate fails if
     any kernel adds more than one extra output or any extra output holds
     more than the 2 health scalars."""
-    from repro.kernels.fused_adam import adam_precond
-    from repro.kernels.slim_update import (slim_partial_stats_batched,
-                                           slim_precond_batched)
+    from repro.analysis.registry import health_stat_outputs
 
-    g2 = jax.ShapeDtypeStruct((8, 128), jnp.float32)
-    g3 = jax.ShapeDtypeStruct((2, 8, 128), jnp.float32)
-    v3 = jax.ShapeDtypeStruct((2, 8, 1), jnp.float32)
-
-    def extra(base_fn, health_fn):
-        base = jax.tree.leaves(jax.eval_shape(base_fn))
-        health = jax.tree.leaves(jax.eval_shape(health_fn))
-        return [tuple(o.shape) for o in health[len(base):]]
-
-    return [
-        ("adam_precond", extra(
-            lambda: adam_precond(g2, g2, g2, interpret=True),
-            lambda: adam_precond(g2, g2, g2, with_health=True, interpret=True))),
-        ("slim_precond_batched", extra(
-            lambda: slim_precond_batched(g3, g3, v3, axis=1, interpret=True),
-            lambda: slim_precond_batched(g3, g3, v3, axis=1, with_health=True,
-                                         interpret=True))),
-        ("slim_partial_stats_batched", extra(
-            lambda: slim_partial_stats_batched(g3, g3, axis=1, interpret=True),
-            lambda: slim_partial_stats_batched(g3, g3, axis=1, with_health=True,
-                                               interpret=True))),
-    ]
+    return health_stat_outputs()
 
 # CI gate ceilings (tightened for the owner-write scheme; see ROADMAP's
 # sharded roofline record for the decomposition):

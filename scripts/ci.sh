@@ -5,6 +5,16 @@
 #   scripts/ci.sh lint            ruff check (skipped with a notice if ruff
 #                                 is not installed — the container image does
 #                                 not ship it; the GitHub lint job does)
+#   scripts/ci.sh analyze         static contract checker (repro.analysis):
+#                                 kernel buffer/VMEM/dtype/signature checks
+#                                 against golden_signatures.json, the grid-
+#                                 race detector, sharding-plan geometry over
+#                                 the config zoo x mesh matrix, trace-
+#                                 stability of the guarded step, and the
+#                                 repo lint rules (RPR001-004) — all device-
+#                                 free (eval_shape / jaxpr / AST), seconds
+#                                 not minutes, so it gates before the test
+#                                 tiers
 #   scripts/ci.sh test-fast       pytest -m "not slow" (quick tier)
 #   scripts/ci.sh test-full       full pytest suite
 #   scripts/ci.sh bench-roofline  analytic roofline gates: transpose-free
@@ -27,8 +37,9 @@
 #                                 clean run's eval loss, every injection
 #                                 visible in the guard counters; appends
 #                                 BENCH_stability.json)
-#   scripts/ci.sh all  (default)  lint + test-full + bench-roofline + the
-#                                 quick optimizer benches (the tier-1 gate)
+#   scripts/ci.sh all  (default)  lint + analyze + test-full + bench-roofline
+#                                 + the quick optimizer benches (the tier-1
+#                                 gate)
 #
 # The suite is embarrassingly parallel, so when pytest-xdist is available
 # (requirements-dev.txt) the run fans out across cores (-n auto), cutting
@@ -70,6 +81,15 @@ run_lint() {
   else
     echo "ruff not installed: skipping lint (the GitHub 'lint' job installs it; pip install ruff to run locally)"
   fi
+}
+
+run_analyze() {
+  require_jax
+  # On a golden-signature mismatch the checker writes the freshly computed
+  # matrix to golden_signatures.diff.json (uploaded as a CI artifact) so the
+  # drift is inspectable without re-running; intentional changes are accepted
+  # with `python -m repro.analysis --update-golden` + committing the golden.
+  python -m repro.analysis --diff-out golden_signatures.diff.json
 }
 
 run_test_fast() {
@@ -116,14 +136,15 @@ run_fault_drill() {
 
 case "$stage" in
   lint)           run_lint ;;
+  analyze)        run_analyze ;;
   test-fast)      run_test_fast ;;
   test-full)      run_test_full ;;
   bench-roofline) run_bench_roofline ;;
   bench-quick)    run_bench_quick ;;
   bench)          run_bench ;;
   fault-drill)    run_fault_drill ;;
-  all)            run_lint; run_test_full; run_bench_roofline; run_bench_quick ;;
+  all)            run_lint; run_analyze; run_test_full; run_bench_roofline; run_bench_quick ;;
   *)
-    echo "usage: scripts/ci.sh [lint|test-fast|test-full|bench-roofline|bench-quick|bench|fault-drill|all]" >&2
+    echo "usage: scripts/ci.sh [lint|analyze|test-fast|test-full|bench-roofline|bench-quick|bench|fault-drill|all]" >&2
     exit 2 ;;
 esac

@@ -1,0 +1,34 @@
+"""slimcheck — static contract checking for kernels, sharding plans, traces.
+
+Four device-free passes (eval_shape / jaxpr / AST only; no kernel ever
+executes, no accelerator is touched):
+
+  * :mod:`repro.analysis.kernelcheck` — every registered kernel entry point
+    abstractly evaluated over a shape x dtype x orientation matrix: declared
+    ``*_BUFS`` constants vs live full-size blocks in the jaxpr, the
+    ``strip_fits`` gate implying the real per-instance block footprint fits
+    ``VMEM_BUDGET``, bf16/f16 inputs computing in f32 (and casting back to
+    the stored dtype), and output signatures pinned to
+    ``golden_signatures.json`` so a kernel silently growing a full-size
+    output fails statically.
+  * :mod:`repro.analysis.races` — grid-race detection: output blocks whose
+    index_map is non-injective across the grid (the shared ``(2,)`` health
+    accumulator, line/stat rows) must ride only sequential grid dims and be
+    read-modify-write.
+  * :mod:`repro.analysis.shardcheck` — ``ShardLeafPlan`` geometry over the
+    entire config zoo x mesh matrix on a device-free ``SpecMesh``: owner
+    placement all-or-nothing, ``owner_factor`` dividing the line evenly,
+    ``psum_jnp == 0`` on the production 16x16 mesh, opt state mirroring
+    params.
+  * :mod:`repro.analysis.tracecheck` + :mod:`repro.analysis.lint` — the
+    guarded 4-arg train step traces identically across differing control
+    values (the no-recompile promise), plus AST lint rules RPR001-RPR004.
+
+Entry point: ``python -m repro.analysis`` (see ``__main__``), wired into CI
+as ``scripts/ci.sh analyze`` between lint and test-fast.
+"""
+from __future__ import annotations
+
+from .report import Finding, PassResult  # noqa: F401
+
+PASS_NAMES = ("kernelcheck", "races", "shardcheck", "tracecheck", "lint")

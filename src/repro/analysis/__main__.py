@@ -1,0 +1,102 @@
+"""``python -m repro.analysis`` — run the static contract passes as a gate.
+
+Prints one table row per pass and exits non-zero if any pass reports a
+finding (or crashes — a crashed pass is a failed pass, not a skipped one).
+On a golden-signature mismatch the freshly computed matrix is written to
+``--diff-out`` so CI can upload it as an artifact; to accept an intentional
+signature change, run with ``--update-golden`` and commit the new
+``golden_signatures.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from . import PASS_NAMES
+from .report import PassResult
+
+
+def _run_pass(name: str, update_golden: bool, diff_out: Path) -> PassResult:
+    t0 = time.monotonic()
+    try:
+        if name == "kernelcheck":
+            from . import kernelcheck
+            result, computed = kernelcheck.run(update_golden=update_golden)
+            if any(f.check == "golden" for f in result.findings):
+                diff_out.write_text(json.dumps(computed, indent=1,
+                                               sort_keys=True) + "\n")
+                result.detail = ((result.detail + "; ") if result.detail
+                                 else "") + f"computed matrix -> {diff_out}"
+            return result
+        if name == "races":
+            from . import races
+            return races.run()
+        if name == "shardcheck":
+            from . import shardcheck
+            return shardcheck.run()
+        if name == "tracecheck":
+            from . import tracecheck
+            return tracecheck.run()
+        if name == "lint":
+            from . import lint
+            return lint.run()
+        raise ValueError(f"unknown pass {name!r}")
+    except Exception as e:  # noqa: BLE001 - a crashed pass is a failed pass
+        result = PassResult(name, seconds=time.monotonic() - t0)
+        result.checks += 1
+        result.add("crash", name, f"{type(e).__name__}: {e}")
+        return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                 description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of passes "
+                         f"(default: all of {', '.join(PASS_NAMES)})")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="rewrite golden_signatures.json from this run")
+    ap.add_argument("--diff-out", type=Path,
+                    default=Path("golden_signatures.diff.json"),
+                    help="where to dump the computed signature matrix on a "
+                         "golden mismatch")
+    args = ap.parse_args(argv)
+
+    names = list(PASS_NAMES)
+    if args.only:
+        chosen = [p.strip() for p in args.only.split(",") if p.strip()]
+        bad = [p for p in chosen if p not in PASS_NAMES]
+        if bad:
+            ap.error(f"unknown pass(es) {bad}; valid: {', '.join(PASS_NAMES)}")
+        names = chosen
+
+    results = [_run_pass(n, args.update_golden, args.diff_out) for n in names]
+
+    widths = (12, 8, 9, 8, 6)
+    header = ("pass", "checks", "findings", "time", "status")
+    print(" ".join(h.ljust(w) for h, w in zip(header, widths)))
+    print(" ".join("-" * w for w in widths))
+    for r in results:
+        status = "PASS" if r.ok else "FAIL"
+        row = (r.name, str(r.checks), str(len(r.findings)),
+               f"{r.seconds:.1f}s", status)
+        print(" ".join(c.ljust(w) for c, w in zip(row, widths)))
+        if r.detail:
+            print(f"{'':12} {r.detail}")
+    total = sum(len(r.findings) for r in results)
+    if total:
+        print(f"\n{total} finding(s):")
+        for r in results:
+            for f in r.findings:
+                print(f"  {f}")
+        return 1
+    print(f"\nall {sum(r.checks for r in results)} checks green "
+          f"in {sum(r.seconds for r in results):.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,198 @@
+"""kernelcheck — abstract evaluation of every registered kernel entry.
+
+For each (entry, case, variant) in :mod:`repro.analysis.registry`, traces
+the entry over ``ShapeDtypeStruct`` args (device-free) and verifies:
+
+  * **bufs** — the declared ``*_BUFS`` constant brackets the live full-size
+    blocks actually present in the pallas jaxpr: ``full + 1 <= declared <=
+    full + 2`` (the +1/+2 window is cast/shift headroom, the documented
+    meaning of every constant). A kernel gaining a full-size operand without
+    bumping its constant — or a constant silently inflated — both fail.
+  * **vmem** — whenever the ``strip_fits`` gate admits the case, the *real*
+    per-instance block footprint (every block charged at the f32 compute
+    itemsize) fits ``VMEM_BUDGET``; 2-D tile kernels must fit
+    unconditionally.
+  * **dtype** — bf16/f16 input blocks are only ever read into an immediate
+    ``convert_element_type`` to f32, and writes into low-precision output
+    blocks come from a convert back to the stored dtype: the f32-compute
+    contract (a real PR-5 bug class) checked in the jaxpr, not at runtime.
+  * **okept** — variant extra outputs (SNR stat lines, health accumulators)
+    stay O(kept)/O(1); a variant growing a full-size output fails.
+  * **golden** — the full output signature matrix matches
+    ``golden_signatures.json`` (regenerate with
+    ``python -m repro.analysis --update-golden``).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.tiling import VMEM_BUDGET, strip_fits
+
+from . import registry
+from .jaxpr_tools import (PallasInfo, find_pallas_eqns, pallas_info,
+                          ref_ops_for, trace_entry, var_consumers,
+                          var_producer)
+from .report import PassResult
+
+GOLDEN_PATH = Path(__file__).parent / "golden_signatures.json"
+
+_LOW_PRECISION = (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16))
+# Documented headroom window of the *_BUFS constants: +1 for the cast copy,
+# +2 when the body also holds a g^2 / shifted line copy.
+_BUFS_HEADROOM = (1, 2)
+
+
+def trace_infos(fn, args, kwargs) -> List[PallasInfo]:
+    cj = trace_entry(fn, *args, **kwargs)
+    return [pallas_info(e) for e in find_pallas_eqns(cj.jaxpr)]
+
+
+def check_bufs(info: PallasInfo, declared: int, bufs_name: str,
+               result: PassResult, where: str) -> None:
+    """Declared full-size buffer budget vs live full-size blocks."""
+    result.checks += 1
+    full = info.full_block_count()
+    lo, hi = full + _BUFS_HEADROOM[0], full + _BUFS_HEADROOM[1]
+    if not (lo <= declared <= hi):
+        result.add("bufs", where,
+                   f"{bufs_name}={declared} but the jaxpr holds {full} live "
+                   f"full-size blocks (expected declared in [{lo}, {hi}])")
+
+
+def check_vmem(info: PallasInfo, result: PassResult, where: str,
+               *, gated: bool = True) -> None:
+    """Per-instance block footprint vs the VMEM budget (when admitted)."""
+    result.checks += 1
+    if not gated:
+        return
+    fp = info.footprint_bytes(itemsize=4)
+    if fp > VMEM_BUDGET:
+        result.add("vmem", where,
+                   f"per-instance block footprint {fp} B exceeds "
+                   f"VMEM_BUDGET {VMEM_BUDGET} B despite the fits-gate "
+                   f"admitting the case")
+
+
+def check_compute_dtype(info: PallasInfo, result: PassResult, where: str) -> None:
+    """bf16/f16 blocks must be read into f32 and written from a cast back."""
+    ops = ref_ops_for(info)
+    by_root: Dict = {}
+    for op in ops:
+        by_root.setdefault(op.root, []).append(op)
+    for block in info.blocks:
+        if jnp.dtype(block.array_dtype) not in _LOW_PRECISION:
+            continue
+        result.checks += 1
+        ref = info.body_ref(block)
+        for op in by_root.get(ref, []):
+            if op.kind == "get" and block.role == "in":
+                out = op.eqn.outvars[0]
+                consumers = var_consumers(op.jaxpr, out)
+                bad = [c for c in consumers
+                       if not (c.primitive.name == "convert_element_type"
+                               and jnp.dtype(c.params.get("new_dtype"))
+                               == jnp.dtype(jnp.float32))]
+                if bad or not consumers:
+                    result.add("dtype", where,
+                               f"{block.role}[{block.slot}] is "
+                               f"{jnp.dtype(block.array_dtype).name} but a read "
+                               f"is consumed by {[c.primitive.name for c in bad] or 'nothing'} "
+                               f"instead of an immediate cast to float32")
+            elif op.kind == "swap" and block.role == "out":
+                val = op.eqn.invars[1]
+                prod_eqn = var_producer(op.jaxpr, val)
+                ok = (prod_eqn is not None
+                      and prod_eqn.primitive.name == "convert_element_type"
+                      and jnp.dtype(prod_eqn.params.get("new_dtype"))
+                      == jnp.dtype(block.array_dtype))
+                if not ok:
+                    result.add("dtype", where,
+                               f"out[{block.slot}] is "
+                               f"{jnp.dtype(block.array_dtype).name} but a write "
+                               f"is not produced by a cast back to the stored "
+                               f"dtype (f32 compute contract)")
+
+
+def check_extra_outputs(entry: registry.KernelEntry, case: registry.Case,
+                        variant: registry.Variant, result: PassResult,
+                        where: str) -> None:
+    """Variant extras must be O(kept) lines or the O(1) accumulator."""
+    if variant is entry.variants[0]:
+        return
+    extras = registry.variant_extra_outputs(entry.name, case.label, variant.name)
+    b = case.shape[0] if entry.kind == "strip" else 1
+    bound = max(b * case.kept, 2)
+    for sds in extras:
+        result.checks += 1
+        elems = 1
+        for d in sds.shape:
+            elems *= d
+        if elems > bound:
+            result.add("okept", where,
+                       f"variant '{variant.name}' extra output {tuple(sds.shape)} "
+                       f"has {elems} elems > O(kept) bound {bound} — a "
+                       f"signature silently grew a full-size output")
+
+
+def load_golden(path: Path = GOLDEN_PATH) -> Optional[Dict[str, List[List[str]]]]:
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def run(update_golden: bool = False,
+        golden_path: Path = GOLDEN_PATH) -> Tuple[PassResult, Dict[str, List[List[str]]]]:
+    """Run the full kernelcheck pass. Returns (result, computed signatures);
+    the runner writes the computed dict out as the golden diff on mismatch."""
+    t0 = time.monotonic()
+    result = PassResult("kernelcheck")
+    computed: Dict[str, List[List[str]]] = {}
+
+    for entry in registry.ENTRIES:
+        for case in entry.cases:
+            for variant in entry.variants:
+                where = registry.signature_key(entry, case, variant)
+                computed[where] = registry.encode_signature(
+                    registry.signature(entry, case, variant))
+
+                infos = registry.traced_infos(entry, case, variant)
+                result.checks += 1
+                if not infos:
+                    result.add("trace", where, "no pallas_call in the trace")
+                    continue
+                gated = (entry.kind == "tile2d"
+                         or strip_fits(case.red, variant.bufs))
+                for info in infos:
+                    if variant.bufs is not None:
+                        check_bufs(info, variant.bufs, variant.bufs_name,
+                                   result, where)
+                    check_vmem(info, result, where, gated=gated)
+                    check_compute_dtype(info, result, where)
+                check_extra_outputs(entry, case, variant, result, where)
+
+    golden = load_golden(golden_path)
+    if update_golden or golden is None:
+        golden_path.write_text(json.dumps(computed, indent=1, sort_keys=True)
+                               + "\n")
+        result.detail = f"golden signatures written to {golden_path}"
+    else:
+        for key in sorted(set(computed) | set(golden)):
+            result.checks += 1
+            if key not in golden:
+                result.add("golden", key, "signature missing from golden file "
+                           "(regenerate with --update-golden)")
+            elif key not in computed:
+                result.add("golden", key, "stale golden entry: case no longer "
+                           "in the registry (regenerate with --update-golden)")
+            elif computed[key] != golden[key]:
+                result.add("golden", key,
+                           f"signature drifted: golden {golden[key]} != "
+                           f"computed {computed[key]}")
+
+    result.seconds = time.monotonic() - t0
+    return result, computed

@@ -1,0 +1,221 @@
+"""Repo lint — AST rules for the contracts grep can't check.
+
+Four rules, each an invariant some earlier PR paid for in debugging time:
+
+  * **RPR001** — ``pallas_call`` is referenced only under
+    ``src/repro/kernels/``. Every call site outside the kernel package would
+    dodge the registry (and so kernelcheck, the race detector, and the
+    golden signature matrix).
+  * **RPR002** — no host-side ``np.`` and no Python branching on traced
+    values where a tracer would hit them: inside kernel bodies (functions
+    taking ``*_ref``/``*_out`` refs) and inside ``@jax.jit``-decorated
+    functions. Static mode flags (``if with_snr:``) stay legal — only
+    ``If``/``While`` tests tainted by a ref read are flagged.
+  * **RPR003** — optional fields of ``*State`` NamedTuples must default to
+    ``None``: a None leaf contributes nothing to the pytree, so plain
+    states keep their checkpoint layout and jit cache keys (the contract
+    ``ScaleBySlimAdamState.snr``/``health`` rely on).
+  * **RPR004** — checkpoint modules publish atomically: ``os.rename`` and
+    ``shutil.move`` are banned, ``os.replace`` must move *from* a staged
+    tmp path, and nothing writes the ``LATEST`` pointer in place.
+
+``lint_source(text, path)`` lints one buffer (used by the seeded-regression
+tests); ``run()`` walks ``src/repro``.
+"""
+from __future__ import annotations
+
+import ast
+import time
+from pathlib import Path
+from typing import List, Optional, Set, Tuple
+
+from .report import PassResult
+
+SRC_ROOT = Path(__file__).resolve().parents[2]  # .../src
+
+LintHit = Tuple[str, int, str]  # (rule, lineno, message)
+
+
+def _is_kernel_path(path: str) -> bool:
+    return "kernels" in Path(path).parts
+
+
+def _is_checkpoint_path(path: str) -> bool:
+    return "checkpoint" in Path(path).parts or "checkpoint" in Path(path).stem
+
+
+def _call_name(node: ast.Call) -> str:
+    return ast.unparse(node.func)
+
+
+def _jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        src = ast.unparse(dec)
+        if "jit" in src.split("(")[0].split(".")[-1] or "jax.jit" in src:
+            return True
+    return False
+
+
+def _kernel_refs(fn: ast.FunctionDef) -> Set[str]:
+    names = {a.arg for a in fn.args.args + fn.args.posonlyargs}
+    return {n for n in names if n.endswith("_ref") or n.endswith("_out")}
+
+
+def _ref_read(node: ast.AST, refs: Set[str]) -> bool:
+    """True for a subscript read out of a ref (``g_ref[...]``, ``h_out[0]``).
+    A *bare* ref name is not a read — ``if h_out:`` on a varargs ref tuple
+    is static arity, not traced data."""
+    return (isinstance(node, ast.Subscript)
+            and any(isinstance(n, ast.Name) and n.id in refs
+                    for n in ast.walk(node.value)))
+
+
+def _tainted_names(fn: ast.FunctionDef, refs: Set[str]) -> Set[str]:
+    """Names holding values read out of a ref (one propagation pass per
+    assignment, in source order — enough for straight-line kernel bodies)."""
+    tainted: Set[str] = set()
+
+    def expr_tainted(e: ast.AST) -> bool:
+        return any(_ref_read(n, refs)
+                   or (isinstance(n, ast.Name) and n.id in tainted)
+                   for n in ast.walk(e))
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and expr_tainted(node.value):
+            # Only plain-name bindings: a subscripted target is a store INTO
+            # a ref, not a host binding of traced data.
+            for tgt in node.targets:
+                elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+                for n in elts:
+                    if isinstance(n, ast.Name):
+                        tainted.add(n.id)
+    return tainted
+
+
+def _check_traced_host_code(fn: ast.FunctionDef, refs: Set[str],
+                            ctx: str) -> List[LintHit]:
+    hits: List[LintHit] = []
+    tainted = _tainted_names(fn, refs) if refs else set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+                and node.value.id == "np"):
+            hits.append(("RPR002", node.lineno,
+                         f"host `np.{node.attr}` inside {ctx} `{fn.name}` — "
+                         f"numpy ops on traced values concretize the tracer; "
+                         f"use jnp"))
+        elif isinstance(node, (ast.If, ast.While)) and refs:
+            test_names = {n.id for n in ast.walk(node.test)
+                          if isinstance(n, ast.Name)}
+            reads = any(_ref_read(n, refs) for n in ast.walk(node.test))
+            if reads or test_names & tainted:
+                hits.append(("RPR002", node.lineno,
+                             f"Python `{type(node).__name__.lower()}` on a "
+                             f"ref-derived value in kernel body `{fn.name}` — "
+                             f"branch with jnp.where/pl.when, not host control "
+                             f"flow"))
+    return hits
+
+
+def _check_state_defaults(cls: ast.ClassDef) -> List[LintHit]:
+    hits: List[LintHit] = []
+    for st in cls.body:
+        if not isinstance(st, ast.AnnAssign):
+            continue
+        ann = ast.unparse(st.annotation)
+        if "Optional" not in ann:
+            continue
+        ok = (st.value is not None
+              and isinstance(st.value, ast.Constant) and st.value.value is None)
+        if not ok:
+            hits.append(("RPR003", st.lineno,
+                         f"optional field `{ast.unparse(st.target)}` of "
+                         f"`{cls.name}` must default to None so plain states "
+                         f"keep their pytree layout"))
+    return hits
+
+
+def _check_checkpoint_calls(tree: ast.AST) -> List[LintHit]:
+    hits: List[LintHit] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        if name == "os.rename":
+            hits.append(("RPR004", node.lineno,
+                         "os.rename in a checkpoint module — publish with "
+                         "os.replace (atomic overwrite semantics)"))
+        elif name == "shutil.move":
+            hits.append(("RPR004", node.lineno,
+                         "shutil.move in a checkpoint module — can degrade to "
+                         "copy+delete across filesystems; stage and "
+                         "os.replace instead"))
+        elif name == "os.replace" and node.args:
+            src = ast.unparse(node.args[0])
+            if "tmp" not in src.lower():
+                hits.append(("RPR004", node.lineno,
+                             f"os.replace from `{src}` — the source of a "
+                             f"publish must be a staged tmp path"))
+        elif name == "open" or name.endswith((".write_text", ".write_bytes")):
+            src = ast.unparse(node)
+            writes = name != "open" or any(
+                isinstance(a, ast.Constant) and isinstance(a.value, str)
+                and any(m in a.value for m in "wax")
+                for a in list(node.args[1:2]) + [
+                    kw.value for kw in node.keywords if kw.arg == "mode"])
+            if writes and "'LATEST'" in src.replace('"', "'") \
+                    and "tmp" not in src.lower():
+                hits.append(("RPR004", node.lineno,
+                             "in-place write to the LATEST pointer — write a "
+                             ".tmp sibling and os.replace it into place"))
+    return hits
+
+
+def lint_source(text: str, path: str) -> List[LintHit]:
+    """Lint one source buffer; returns (rule, lineno, message) hits."""
+    tree = ast.parse(text, filename=path)
+    hits: List[LintHit] = []
+    in_kernels = _is_kernel_path(path)
+
+    for node in ast.walk(tree):
+        if (not in_kernels
+                and ((isinstance(node, ast.Attribute)
+                      and node.attr == "pallas_call")
+                     or (isinstance(node, ast.Name)
+                         and node.id == "pallas_call"))):
+            hits.append(("RPR001", node.lineno,
+                         "pallas_call referenced outside repro/kernels/ — "
+                         "kernels live in the kernel package so the analysis "
+                         "registry covers them"))
+        elif isinstance(node, ast.FunctionDef):
+            refs = _kernel_refs(node)
+            if refs:
+                hits.extend(_check_traced_host_code(node, refs, "kernel body"))
+            elif _jit_decorated(node):
+                hits.extend(_check_traced_host_code(node, set(),
+                                                    "jitted function"))
+        elif isinstance(node, ast.ClassDef) and node.name.endswith("State"):
+            hits.extend(_check_state_defaults(node))
+
+    if _is_checkpoint_path(path):
+        hits.extend(_check_checkpoint_calls(tree))
+    return hits
+
+
+def run(root: Optional[Path] = None) -> PassResult:
+    t0 = time.monotonic()
+    result = PassResult("lint")
+    root = root or (SRC_ROOT / "repro")
+    files = sorted(root.rglob("*.py"))
+    for f in files:
+        result.checks += 1
+        rel = f.relative_to(root.parent)
+        try:
+            hits = lint_source(f.read_text(), str(rel))
+        except SyntaxError as e:
+            result.add("parse", str(rel), f"does not parse: {e}")
+            continue
+        for rule, lineno, message in hits:
+            result.add(rule, f"{rel}:{lineno}", message)
+    result.detail = f"{len(files)} files"
+    result.seconds = time.monotonic() - t0
+    return result

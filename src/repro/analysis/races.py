@@ -1,0 +1,67 @@
+"""Grid-race detector for pallas outputs with non-injective index maps.
+
+A pallas output whose index_map sends multiple grid points to the same
+block (the shared ``(2,)`` health accumulator; any future cross-strip
+reduction output) is only correct when
+
+  * every grid dim the aliasing rides is *sequential* — ``mosaic``
+    ``dimension_semantics`` must not mark an aliased dim ``parallel``
+    (absent semantics means all dims are sequential/"arbitrary"); and
+  * the kernel body treats the block as read-modify-write: at least one
+    ``get`` of the output ref must exist (the zero-on-first-instance +
+    accumulate pattern), since a blind overwrite would drop every earlier
+    instance's contribution even on a sequential grid.
+
+Both conditions are decidable from the jaxpr alone: the index maps are
+evaluated symbolically over (a sample of) the grid, and ref reads are
+collected through nested sub-jaxprs (``pl.when`` lowers to ``cond``).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from . import registry
+from .jaxpr_tools import PallasInfo, aliased_grid_dims, ref_ops_for
+from .report import PassResult
+
+
+def check_output_races(info: PallasInfo, result: PassResult, where: str) -> None:
+    """Apply both race rules to every output block of one pallas_call."""
+    ops = ref_ops_for(info)
+    for block in info.blocks_out:
+        result.checks += 1
+        dims = aliased_grid_dims(block, info.grid)
+        if not dims:
+            continue  # injective: one block per grid point, nothing to race
+        bad = [d for d in sorted(dims)
+               if d < len(info.dimension_semantics)
+               and info.dimension_semantics[d] == "parallel"]
+        if bad:
+            result.add("race-parallel", where,
+                       f"out[{block.slot}] block {block.block_shape} is shared "
+                       f"across grid dim(s) {bad} marked 'parallel' in "
+                       f"dimension_semantics — concurrent instances would "
+                       f"race on the block")
+        ref = info.body_ref(block)
+        reads = [op for op in ops if op.root is ref and op.kind == "get"]
+        if not reads:
+            result.add("race-rmw", where,
+                       f"out[{block.slot}] block {block.block_shape} is shared "
+                       f"across grid dim(s) {sorted(dims)} but the body never "
+                       f"reads the ref — a blind overwrite drops earlier "
+                       f"instances' contributions")
+
+
+def run() -> PassResult:
+    """Race-check every registered (entry, case, variant) trace."""
+    t0 = time.monotonic()
+    result = PassResult("races")
+    for entry in registry.ENTRIES:
+        for case in entry.cases:
+            for variant in entry.variants:
+                where = registry.signature_key(entry, case, variant)
+                for info in registry.traced_infos(entry, case, variant):
+                    check_output_races(info, result, where)
+    result.seconds = time.monotonic() - t0
+    return result

@@ -1,0 +1,191 @@
+"""shardcheck — ShardLeafPlan geometry over the config zoo x mesh matrix.
+
+All on the device-free :class:`repro.sharding.shardspec.SpecMesh`: every
+arch in the zoo is abstracted (``cfg.abstract()`` — no materialization),
+its Table-3 dims and logical param specs derived, and every leaf planned on
+every mesh in the matrix. Checked contracts:
+
+  * **owner-all-or-nothing** — a psum leaf's owner placement either covers
+    every non-trivial psum axis or is empty. A partial placement is *wrong*
+    (shards along an unplaced axis each add an identical ``b2 * v`` copy
+    into the all-reduce, inflating the moment), so this is the invariant
+    that keeps the owner-write dedupe correct, not a preference.
+  * **owner-even** — each placed axis divides its target dim's remaining
+    local extent evenly, replayed step-by-step in placement order, and
+    ``nu_spec`` actually realizes the full ``owner_factor`` (an entry that
+    silently dropped to replicated would claim dedupe bytes it doesn't
+    save).
+  * **psum-jnp-zero** — ``regime_counts(...)['psum_jnp'] == 0`` on the
+    production (data=16, model=16) mesh for *every* arch: no leaf's local
+    canonical plan falls off the Pallas partial-stats/finalize pair.
+  * **plan-cn** — ``finalize == 'kernel'`` iff the plan carries the local
+    ``CanonND`` the dispatcher replays (the planner/dispatcher handshake).
+  * **state-mirror** — ``opt_state_specs`` accepts the (opt state, params,
+    specs) triple with owner-mesh resolution on, i.e. optimizer state
+    mirrors params on every mesh (it raises on any structural mismatch).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import rules_as_tree, table3_rules
+from repro.core.slim_adam import slim_adam
+from repro.kernels.slim_update import PRECOND_BUFS
+from repro.sharding.logical import ShardingContext, param_specs, use_sharding
+from repro.sharding.shardspec import (ShardLeafPlan, SpecMesh,
+                                      normalize_spec_leaves, owner_factor,
+                                      plan_sharded_leaf, regime_counts,
+                                      spec_entries)
+from repro.sharding.state_shardings import opt_state_specs
+
+from .report import PassResult
+
+# Device-free mesh matrix: the production 16x16 mesh (the psum_jnp == 0
+# promise), pure FSDP, and an asymmetric FSDP x TP shape that exercises
+# non-square owner factors.
+MESHES: Tuple[Tuple[str, Dict[str, int]], ...] = (
+    ("prod-16x16", {"data": 16, "model": 16}),
+    ("fsdp-8", {"data": 8}),
+    ("asym-4x8", {"data": 4, "model": 8}),
+)
+
+PROD_MESH = MESHES[0][0]
+
+
+def arch_leaves(arch: str):
+    """(named abstract leaves, spec leaves, dims leaves, params_abs, meta,
+    cfg) for one arch — abstract() only, no arrays."""
+    cfg = get_config(arch, param_dtype=jnp.bfloat16)
+    params_abs, meta = cfg.abstract()
+    rules = table3_rules(meta)
+    dims_tree = rules_as_tree(rules, params_abs, meta)
+    p_leaves, treedef = jax.tree_util.tree_flatten(params_abs)
+    dims_flat = jax.tree_util.tree_leaves(
+        dims_tree, is_leaf=lambda x: isinstance(x, tuple))
+    return cfg, params_abs, meta, treedef, p_leaves, dims_flat
+
+
+def check_leaf_plan(plan: ShardLeafPlan, shape, dims, mesh,
+                    result: PassResult, where: str) -> None:
+    """The per-leaf geometry contracts (reusable on hand-built plans in the
+    seeded regression tests)."""
+    sizes = dict(mesh.shape)
+    dset = {d % len(shape) for d in dims}
+    red_shape = tuple(1 if i in dset else s for i, s in enumerate(shape))
+
+    # finalize == 'kernel' iff the local CanonND rode along.
+    result.checks += 1
+    if plan.regime == "psum" and (plan.finalize == "kernel") != (plan.cn is not None):
+        result.add("plan-cn", where,
+                   f"finalize={plan.finalize!r} but cn is "
+                   f"{'set' if plan.cn is not None else 'missing'} — the "
+                   f"dispatcher would replay a plan the gate never approved")
+
+    if plan.regime != "psum":
+        return
+
+    nontrivial = {a for a in plan.psum_axes if int(sizes.get(a, 1)) > 1}
+    placed = {a for a, _ in plan.owner}
+
+    # All-or-nothing: cover every non-trivial psum axis, or place nothing.
+    result.checks += 1
+    if plan.owner and placed != nontrivial:
+        result.add("owner-all-or-nothing", where,
+                   f"owner placement covers axes {sorted(placed)} but the "
+                   f"psum group is {sorted(nontrivial)} — a partial placement "
+                   f"inflates the moment by each unplaced axis's size")
+
+    if not plan.owner:
+        return
+
+    # Even division, replayed in placement order over the local extents.
+    result.checks += 1
+    entries = spec_entries(plan.red_spec, len(red_shape))
+    local = [s // math.prod(int(sizes.get(a, 1)) for a in e)
+             for s, e in zip(red_shape, entries)]
+    for a, d in plan.owner:
+        f = int(sizes.get(a, 1))
+        if local[d] <= 1 or local[d] % f:
+            result.add("owner-even", where,
+                       f"owner axis {a!r} (size {f}) placed on dim {d} whose "
+                       f"remaining local extent {local[d]} it does not divide")
+            return
+        local[d] //= f
+
+    # nu_spec must realize the whole claimed factor: the owner-sharded local
+    # nu shape is the replicated red line shrunk by exactly owner_factor.
+    result.checks += 1
+    from repro.sharding.shardspec import local_shape
+
+    a_factor = owner_factor(plan, mesh)
+    red_local = local_shape(red_shape, plan.red_spec, mesh)
+    nu_local = local_shape(red_shape, plan.nu_spec, mesh)
+    if math.prod(nu_local) * a_factor != math.prod(red_local):
+        result.add("owner-even", where,
+                   f"nu_spec realizes a {math.prod(red_local) // max(1, math.prod(nu_local))}x "
+                   f"dedupe but owner placement claims {a_factor}x — a spec "
+                   f"entry silently fell back to replicated")
+
+
+def run() -> PassResult:
+    t0 = time.monotonic()
+    result = PassResult("shardcheck")
+    counts_by_mesh: Dict[str, Dict[str, int]] = {}
+
+    for arch in ARCH_IDS:
+        cfg, params_abs, meta, treedef, p_leaves, dims_flat = arch_leaves(arch)
+        names = [str(jax.tree_util.keystr(kp)) for kp, _ in
+                 jax.tree_util.tree_flatten_with_path(params_abs)[0]]
+        dims_tree = rules_as_tree(table3_rules(meta), params_abs, meta)
+        tx = slim_adam(3e-4, dims_tree)
+        opt_abs = jax.eval_shape(tx.init, params_abs)
+
+        for mesh_name, mesh_shape in MESHES:
+            mesh = SpecMesh(mesh_shape)
+            ctx = ShardingContext(mesh, rules=dict(cfg.sharding_overrides) or None)
+            with use_sharding(ctx):
+                p_specs = param_specs(meta, params_abs)
+            spec_flat = normalize_spec_leaves(p_specs, treedef, "shardcheck")
+
+            plans: List[ShardLeafPlan] = []
+            for name, leaf, spec, dims in zip(names, p_leaves, spec_flat,
+                                              dims_flat):
+                where = f"{arch}/{mesh_name}{name}"
+                plan = plan_sharded_leaf(tuple(leaf.shape), leaf.dtype,
+                                         tuple(dims), spec, mesh,
+                                         n_bufs=PRECOND_BUFS)
+                plans.append(plan)
+                check_leaf_plan(plan, tuple(leaf.shape), tuple(dims), mesh,
+                                result, where)
+
+            counts = regime_counts(plans)
+            agg = counts_by_mesh.setdefault(mesh_name, {})
+            for k, v in counts.items():
+                agg[k] = agg.get(k, 0) + v
+            result.checks += 1
+            if mesh_name == PROD_MESH and counts["psum_jnp"]:
+                result.add("psum-jnp-zero", f"{arch}/{mesh_name}",
+                           f"{counts['psum_jnp']} psum leaf/leaves fell off "
+                           f"the Pallas partial-stats/finalize pair on the "
+                           f"production mesh (counts: {counts})")
+
+            # Opt state mirrors params (opt_state_specs raises on mismatch).
+            result.checks += 1
+            try:
+                opt_state_specs(opt_abs, params_abs, p_specs, owner_mesh=mesh)
+            except Exception as e:  # noqa: BLE001 - any failure is a finding
+                result.add("state-mirror", f"{arch}/{mesh_name}",
+                           f"opt_state_specs rejected the state/param/spec "
+                           f"triple: {e}")
+
+    result.detail = "; ".join(
+        f"{m}: " + " ".join(f"{k}={v}" for k, v in sorted(c.items()) if v)
+        for m, c in counts_by_mesh.items())
+    result.seconds = time.monotonic() - t0
+    return result

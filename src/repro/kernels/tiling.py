@@ -32,23 +32,36 @@ from jax.experimental import pallas as pl
 # leaving room for double buffering.
 VMEM_BUDGET = 8 << 20
 
+# In-VMEM itemsize the fit math charges per element. The strip kernels cast
+# every operand to f32 on load and do all arithmetic in f32 (bf16/f16 inputs
+# included — the stored dtype only matters at the final cast-back), so 4 bytes
+# is the *actual* working-set cost per element, not a guess: gating bf16
+# strips on their 2-byte storage width would under-count VMEM by 2x. Callers
+# that ever keep a genuinely wider compute copy must pass ``itemsize``
+# explicitly; `repro.analysis.kernelcheck` verifies the f32-compute contract
+# (and the resulting footprint bound) statically for every registered kernel.
+COMPUTE_ITEMSIZE = 4
 
-def fit_strip_block(red_size: int, block: int, kept_size: int, n_bufs: int) -> int:
-    """Shrink a strip tile so ``n_bufs`` fp32 (tile, red_size) buffers fit in
-    :data:`VMEM_BUDGET`. Callers must gate on :func:`strip_fits` first — when
-    a single reduction line already exceeds the budget (full-reduction K on a
-    big tensor), no tile count can enforce it."""
-    cap = max(1, VMEM_BUDGET // (red_size * 4 * n_bufs))
+
+def fit_strip_block(red_size: int, block: int, kept_size: int, n_bufs: int,
+                    *, itemsize: int = COMPUTE_ITEMSIZE) -> int:
+    """Shrink a strip tile so ``n_bufs`` (tile, red_size) compute buffers of
+    ``itemsize`` bytes/element fit in :data:`VMEM_BUDGET`. Callers must gate
+    on :func:`strip_fits` first — when a single reduction line already
+    exceeds the budget (full-reduction K on a big tensor), no tile count can
+    enforce it."""
+    cap = max(1, VMEM_BUDGET // (red_size * itemsize * n_bufs))
     return max(1, min(block, cap, kept_size))
 
 
-def strip_fits(red_size: int, n_bufs: int) -> bool:
-    """Whether a single reduction line's working set (``n_bufs`` fp32 copies)
-    fits the budget. When it doesn't, the strip kernels can't serve the
-    tensor on a real TPU (interpret mode wouldn't notice) — dispatchers fall
-    back to jnp. Independent of the batch extent: batch rides on the grid,
-    not in VMEM."""
-    return red_size * 4 * n_bufs <= VMEM_BUDGET
+def strip_fits(red_size: int, n_bufs: int, *, itemsize: int = COMPUTE_ITEMSIZE) -> bool:
+    """Whether a single reduction line's working set (``n_bufs`` compute
+    copies at ``itemsize`` bytes/element — f32 by default, see
+    :data:`COMPUTE_ITEMSIZE`) fits the budget. When it doesn't, the strip
+    kernels can't serve the tensor on a real TPU (interpret mode wouldn't
+    notice) — dispatchers fall back to jnp. Independent of the batch extent:
+    batch rides on the grid, not in VMEM."""
+    return red_size * itemsize * n_bufs <= VMEM_BUDGET
 
 
 class StripGrid(NamedTuple):
@@ -71,27 +84,30 @@ class StripGrid(NamedTuple):
     stat: Any               # BlockSpec for (B, kept) per-line stat outputs
 
 
-def strip_grid(b: int, r: int, c: int, *, axis: int, n_bufs: int, block: int) -> StripGrid:
+def strip_grid(b: int, r: int, c: int, *, axis: int, n_bufs: int, block: int,
+               itemsize: int = COMPUTE_ITEMSIZE) -> StripGrid:
     """Plan the grid and BlockSpecs for a (B, R, C) strip kernel.
 
     ``axis=1`` reduces the trailing axis (minor): grid over row strips, each
     instance holds a (1, tile, C) block. ``axis=0`` reduces the middle axis
     (major): grid over column strips, each instance holds a (1, R, tile)
-    block. ``n_bufs`` is the caller's live full-size fp32 buffer count per
-    instance; the tile shrinks until they fit :data:`VMEM_BUDGET`. The kept
-    extent must already be a multiple of the returned tile — callers pad
-    first (see the kernel modules' pad-and-recurse entries).
+    block. ``n_bufs`` is the caller's live full-size compute buffer count per
+    instance (``itemsize`` bytes/element, f32 by default — see
+    :data:`COMPUTE_ITEMSIZE`); the tile shrinks until they fit
+    :data:`VMEM_BUDGET`. The kept extent must already be a multiple of the
+    returned tile — callers pad first (see the kernel modules'
+    pad-and-recurse entries).
     """
     assert axis in (0, 1)
     if axis == 1:
         n_red, kept = c, r
-        tile = fit_strip_block(n_red, block, kept, n_bufs)
+        tile = fit_strip_block(n_red, block, kept, n_bufs, itemsize=itemsize)
         full = pl.BlockSpec((1, tile, c), lambda bi, i: (bi, i, 0))
         line = pl.BlockSpec((1, tile, 1), lambda bi, i: (bi, i, 0))
         red_axis, kept_axis = 2, 1
     else:
         n_red, kept = r, c
-        tile = fit_strip_block(n_red, block, kept, n_bufs)
+        tile = fit_strip_block(n_red, block, kept, n_bufs, itemsize=itemsize)
         full = pl.BlockSpec((1, r, tile), lambda bi, j: (bi, 0, j))
         line = pl.BlockSpec((1, 1, tile), lambda bi, j: (bi, 0, j))
         red_axis, kept_axis = 1, 2

@@ -186,6 +186,44 @@ checkpoints) and ``benchmarks/fault_drill.py`` is the CI gate: an injected
 gpt_small run must complete within 2% of the clean run's eval loss with
 every injection visible in the counters (``scripts/ci.sh fault-drill``).
 
+Static contracts (``repro.analysis`` — the device-free CI gate)
+---------------------------------------------------------------
+Everything above rests on invariants that only fail visibly on real TPUs —
+where CI has none. ``python -m repro.analysis`` (``scripts/ci.sh analyze``,
+between lint and test-fast) re-derives them from jaxprs, ``eval_shape``
+signatures, and source ASTs in a few seconds with zero devices:
+
+  * **kernelcheck** — every registered kernel entry
+    (``repro.analysis.registry``: the dense/slim/partial/finalize/snr
+    families over a shape x dtype x K-pattern matrix) is abstractly traced;
+    the declared ``*_BUFS`` constants must bracket the live full-size blocks
+    in the jaxpr, cases admitted by the ``strip_fits`` gate must fit
+    ``VMEM_BUDGET`` at the f32 compute itemsize, bf16/f16 blocks must be
+    read through an immediate cast to f32 and written through a cast back
+    (the f32-compute contract behind ``COMPUTE_ITEMSIZE``), variant extras
+    must stay O(kept), and the full output-signature matrix must match
+    ``analysis/golden_signatures.json`` (accept intentional changes with
+    ``python -m repro.analysis --update-golden`` and commit the file).
+  * **races** — any output block shared across grid instances (the (2,)
+    health accumulators) must ride only sequential grid dims and be
+    read-modify-write in the kernel body.
+  * **shardcheck** — ``plan_sharded_leaf`` geometry over the whole config
+    zoo x mesh matrix: owner placements all-or-nothing and evenly dividing,
+    ``nu_spec`` realizing the claimed dedupe factor, ``psum_jnp == 0`` on
+    the production mesh, and ``opt_state_specs`` accepting every triple.
+  * **tracecheck** — the guarded 4-arg step traces identically across
+    differing control values and actually consumes them, and the
+    Guard/trainer controls keep stable avals across a backoff: the
+    "no recompiles" promise, checked without compiling.
+  * **lint** — AST rules: kernels only under ``repro/kernels`` (RPR001), no
+    host numpy / traced-value branching in kernel bodies or jitted
+    functions (RPR002), optional ``*State`` fields default ``None``
+    (RPR003), checkpoint publishes stay atomic (RPR004).
+
+The roofline gates in ``benchmarks/opt_speed.py`` read their kernel
+signature facts (``snr_stat_lines`` / ``health_stat_outputs``) from the
+same registry, so the byte model and the static checker cannot drift apart.
+
 Why fused is the hot path (bytes-streamed model)
 ------------------------------------------------
 The optimizer step is pure HBM bandwidth. Per leaf of n fp32 elements and r

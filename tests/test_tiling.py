@@ -1,0 +1,121 @@
+"""Edge cases of the strip tiling policy (`repro.kernels.tiling`).
+
+The fit math is the load-bearing half of the VMEM contract the static
+analyzer (`repro.analysis.kernelcheck`) re-derives from jaxprs, so the
+boundary behavior — exact-budget reductions, the max(1, ...) cap, itemsize
+threading, pad/trim round-trips — gets pinned here rather than observed
+incidentally through the kernel tests.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.tiling import (COMPUTE_ITEMSIZE, VMEM_BUDGET,
+                                  fit_strip_block, pad_kept, strip_fits,
+                                  strip_grid, trim_kept)
+
+
+class TestStripFits:
+    def test_exact_budget_fits(self):
+        n_bufs = 4  # divides the power-of-two budget exactly
+        red = VMEM_BUDGET // (COMPUTE_ITEMSIZE * n_bufs)
+        assert red * COMPUTE_ITEMSIZE * n_bufs == VMEM_BUDGET
+        assert strip_fits(red, n_bufs)
+
+    def test_one_past_budget_does_not_fit(self):
+        n_bufs = 4
+        red = VMEM_BUDGET // (COMPUTE_ITEMSIZE * n_bufs)
+        assert not strip_fits(red + 1, n_bufs)
+
+    def test_charges_compute_itemsize_not_storage(self):
+        # A reduction that fits at bf16 storage width but not at the f32
+        # compute width must NOT fit: kernels cast to f32 on load.
+        n_bufs = 4
+        red = VMEM_BUDGET // (2 * n_bufs)  # fits at itemsize=2 exactly
+        assert strip_fits(red, n_bufs, itemsize=2)
+        assert not strip_fits(red, n_bufs)
+
+    def test_batch_extent_is_irrelevant(self):
+        # Fitting is per-instance: only the reduction extent matters, the
+        # batch dim rides on the grid. (Guards against someone "fixing" the
+        # signature to take shapes.)
+        assert strip_fits(1024, 6) == strip_fits(1024, 6)
+
+
+class TestFitStripBlock:
+    def test_exact_boundary_keeps_requested_block(self):
+        # cap = VMEM_BUDGET / (red * 4 * n_bufs) lands exactly on the
+        # requested block: no shrink.
+        n_bufs, block = 4, 8
+        red = VMEM_BUDGET // (COMPUTE_ITEMSIZE * n_bufs * block)
+        assert fit_strip_block(red, block, kept_size=1024, n_bufs=n_bufs) == block
+
+    def test_one_past_boundary_shrinks(self):
+        n_bufs, block = 4, 8
+        red = VMEM_BUDGET // (COMPUTE_ITEMSIZE * n_bufs * block)
+        got = fit_strip_block(red + 1, block, kept_size=1024, n_bufs=n_bufs)
+        assert got < block
+        # and the shrunk tile actually fits
+        assert got * (red + 1) * COMPUTE_ITEMSIZE * n_bufs <= VMEM_BUDGET
+
+    def test_oversized_reduction_caps_at_one(self):
+        # A single line over budget: cap = max(1, 0) = 1 — the function
+        # never returns 0 (callers gate on strip_fits for the fallback).
+        red = VMEM_BUDGET  # 4 * n_bufs * red >> budget
+        assert fit_strip_block(red, 256, kept_size=1024, n_bufs=5) == 1
+
+    def test_never_exceeds_kept(self):
+        assert fit_strip_block(8, 256, kept_size=3, n_bufs=2) == 3
+
+    def test_itemsize_threading(self):
+        # Halving the itemsize doubles the admissible tile (until the
+        # requested block caps it).
+        n_bufs = 4
+        red = VMEM_BUDGET // (COMPUTE_ITEMSIZE * n_bufs * 4)
+        at4 = fit_strip_block(red, 1024, 1 << 20, n_bufs)
+        at2 = fit_strip_block(red, 1024, 1 << 20, n_bufs, itemsize=2)
+        assert at2 == 2 * at4
+
+
+class TestStripGrid:
+    @pytest.mark.parametrize("axis", [0, 1])
+    def test_itemsize_reaches_fit(self, axis):
+        # Same shape, wider itemsize -> no wider tile than the f32 plan.
+        sg4 = strip_grid(2, 512, 2048, axis=axis, n_bufs=5, block=256)
+        sg8 = strip_grid(2, 512, 2048, axis=axis, n_bufs=5, block=256,
+                         itemsize=8)
+        assert sg8.tile <= sg4.tile
+        assert sg8.tile * sg8.n_red * 8 * 5 <= VMEM_BUDGET
+
+    def test_minor_exact_boundary(self):
+        n_bufs, block = 5, 4
+        c = VMEM_BUDGET // (COMPUTE_ITEMSIZE * n_bufs * block)
+        sg = strip_grid(1, 16, c, axis=1, n_bufs=n_bufs, block=block)
+        assert sg.tile == block
+        assert sg.grid == (1, 16 // block)
+
+    @pytest.mark.parametrize("axis,shape", [(1, (2, 8, 128)), (0, (2, 128, 8))])
+    def test_pad_trim_roundtrip_aligned(self, axis, shape):
+        # Already tile-aligned kept axis: pad must be a no-op (same object
+        # shape, identical values) and trim the exact inverse.
+        sg = strip_grid(*shape, axis=axis, n_bufs=5, block=4)
+        assert sg.kept % sg.tile == 0
+        x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
+        padded = pad_kept(x, sg)
+        assert padded.shape == x.shape
+        np.testing.assert_array_equal(np.asarray(padded), np.asarray(x))
+        np.testing.assert_array_equal(np.asarray(trim_kept(padded, sg)),
+                                      np.asarray(x))
+
+    @pytest.mark.parametrize("axis", [0, 1])
+    def test_pad_trim_roundtrip_ragged(self, axis):
+        shape = (1, 13, 128) if axis == 1 else (1, 128, 13)
+        sg = strip_grid(*shape, axis=axis, n_bufs=5, block=4)
+        x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
+        padded = pad_kept(x, sg)
+        assert padded.shape[sg.kept_axis] % sg.tile == 0
+        # reduction axis untouched
+        red_ax = 2 if axis == 1 else 1
+        assert padded.shape[red_ax] == x.shape[red_ax]
+        np.testing.assert_array_equal(np.asarray(trim_kept(padded, sg)),
+                                      np.asarray(x))
