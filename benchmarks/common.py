@@ -75,7 +75,14 @@ def append_bench_history(bench: str, metrics: Dict[str, Any],
     this file is the *history* `make bench` accretes, so a perf regression
     shows up as a trajectory, not a diff someone has to remember to take.
     A corrupt or missing file starts a fresh list rather than failing the
-    bench."""
+    bench.
+
+    Schema 2: entries carry a ``"schema"`` version field, and an entry
+    whose metrics are byte-identical to the file's previous entry for the
+    same bench is dropped (re-running an analytic gate in a loop must not
+    grow the history with copies — a flat trajectory is one point). The
+    deterministic-metrics benches (roofline models, launch counts) rely on
+    this; wall-clock benches always differ and always append."""
     import json
     import time
 
@@ -87,7 +94,11 @@ def append_bench_history(bench: str, metrics: Dict[str, Any],
             raise ValueError("history root must be a list")
     except (OSError, ValueError):
         history = []
+    if history and history[-1].get("bench") == bench and \
+            json.dumps(history[-1].get("metrics"), sort_keys=True) \
+            == json.dumps(metrics, sort_keys=True):
+        return path
     history.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
-                    "bench": bench, "metrics": metrics})
+                    "bench": bench, "schema": 2, "metrics": metrics})
     path.write_text(json.dumps(history, indent=1) + "\n")
     return path

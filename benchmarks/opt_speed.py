@@ -14,6 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.jaxpr_tools import count_pallas_launches
 from repro.core import rules_as_tree, table3_rules
 from repro.core.slim_adam import scale_by_slim_adam
 from repro.kernels import fused_adam_op, slim_update_op
@@ -161,13 +162,24 @@ def tree_main(preset: str = "quick"):
     dims_leaves = [tuple(d) for d in
                    jax.tree_util.tree_flatten(params)[1].flatten_up_to(dims)]
 
+    # The per-leaf fused setups pin megakernel=False — they measure the
+    # O(leaves) dispatch the megaplan replaced; *_fused_mega is the default
+    # grouped path (O(groups) launches, see the `launches` column).
     setups = [
         ("adam_jnp", scale_by_adam(0.9, 0.95, 1e-8)),
-        ("adam_fused", scale_by_adam(0.9, 0.95, 1e-8, backend="fused", bucket_min_size=0)),
-        ("adam_fused_bucketed", scale_by_adam(0.9, 0.95, 1e-8, backend="fused")),
+        ("adam_fused", scale_by_adam(0.9, 0.95, 1e-8, backend="fused",
+                                     bucket_min_size=0, megakernel=False)),
+        ("adam_fused_bucketed", scale_by_adam(0.9, 0.95, 1e-8, backend="fused",
+                                              megakernel=False)),
+        ("adam_fused_mega", scale_by_adam(0.9, 0.95, 1e-8, backend="fused")),
         ("slim_jnp", scale_by_slim_adam(dims, 0.9, 0.95, 1e-8)),
-        ("slim_fused", scale_by_slim_adam(dims, 0.9, 0.95, 1e-8, backend="fused", bucket_min_size=0)),
-        ("slim_fused_bucketed", scale_by_slim_adam(dims, 0.9, 0.95, 1e-8, backend="fused")),
+        ("slim_fused", scale_by_slim_adam(dims, 0.9, 0.95, 1e-8, backend="fused",
+                                          bucket_min_size=0, megakernel=False)),
+        ("slim_fused_bucketed", scale_by_slim_adam(dims, 0.9, 0.95, 1e-8,
+                                                   backend="fused",
+                                                   megakernel=False)),
+        ("slim_fused_mega", scale_by_slim_adam(dims, 0.9, 0.95, 1e-8,
+                                               backend="fused")),
     ]
 
     # The timed op is tx.update — the GradientTransformation form (update
@@ -186,6 +198,7 @@ def tree_main(preset: str = "quick"):
         t_mean, t_min = timeit(step, grads, state, iters=3)
         b = adam_bytes if name.startswith("adam") else slim_bytes
         rows.append({"impl": name, "us": round(t_mean, 1), "min_us": round(t_min, 1),
+                     "launches": count_pallas_launches(step, grads, state),
                      "bytes": b, "tpu_proj_us": round(b / HBM_BW * 1e6, 1)})
     write_csv("opt_speed_tree.csv", rows)
 
@@ -197,9 +210,10 @@ def tree_main(preset: str = "quick"):
     f_adam = 7 * sum(int(p.size) for p in jax.tree.leaves(params_full)) * 4
     f_slim = fdense_b + fcomp_b
     tf_ratio = ftf_b / ftf_dense if ftf_dense else 1.0
-    # Track the implementation this benchmark exists for: the bucketed fused
-    # slim step (a fused-path regression must move the trajectory metric).
-    fused_us = next(r["us"] for r in rows if r["impl"] == "slim_fused_bucketed")
+    # Track the implementation this benchmark exists for: the default fused
+    # slim step — the megaplan-grouped path since the O(1)-launch rework (a
+    # fused-path regression must move the trajectory metric).
+    fused_us = next(r["us"] for r in rows if r["impl"] == "slim_fused_mega")
     emit("opt_speed_tree", fused_us,
          f"{full.name} full-apply form: fused tree step streams {f_slim/f_adam:.2f}x "
          f"of dense-Adam bytes (re-layout traffic charged only for genuinely "
@@ -248,6 +262,134 @@ def roofline_check() -> int:
               f"materialized transpose: {regressed}")
         return 1
     print("roofline OK: every compressed GPT-small leaf is transpose-free")
+    return 0
+
+
+# The megakernel launch gate: GPT-small's whole-tree update must run in at
+# most this many pallas launches (the O(leaves) -> O(groups) claim; both the
+# reduced and the full config plan well under it — 1 adam group, 4 slim).
+_GATE_MAX_LAUNCHES = 8
+
+
+def launch_check() -> int:
+    """CI gate (`scripts/ci.sh bench-roofline`): the megakernel O(1)-launch
+    claim, decided on the jaxpr (``count_pallas_launches``) rather than
+    interp-mode wall clocks. Fails when the default fused tree update emits
+    more pallas launches than its megaplan has groups, when it exceeds
+    ``_GATE_MAX_LAUNCHES``, or when grouping stops strictly beating the
+    per-leaf dispatch. Wall clock is gated only on a real TPU backend
+    (fused step must not be slower than jnp); interp runs record the
+    roofline-projected TPU step times instead. On failure the megaplan
+    group tables are dumped to ``results/megaplan_groups.csv`` as the CI
+    artifact."""
+    from repro.configs import gpt_small
+    from repro.kernels.megaplan import plan_megagroups
+    from repro.kernels.slim_update import PRECOND_BUFS
+
+    cfg = gpt_small.reduced()
+    params, meta = cfg.init(jax.random.PRNGKey(0))
+    dims = rules_as_tree(table3_rules(meta), params, meta)
+    treedef = jax.tree_util.tree_flatten(params)[1]
+    dims_leaves = [tuple(d) for d in treedef.flatten_up_to(dims)]
+    grads = jax.tree.map(lambda p: 0.1 * jnp.ones(p.shape, p.dtype), params)
+    leaves = jax.tree.leaves(params)
+    shapes = tuple(tuple(p.shape) for p in leaves)
+    dts = tuple(str(p.dtype) for p in leaves)
+    plans = {
+        "adam": plan_megagroups(shapes, dts, tuple(() for _ in leaves),
+                                n_bufs=PRECOND_BUFS),
+        "slim": plan_megagroups(shapes, dts, tuple(dims_leaves),
+                                n_bufs=PRECOND_BUFS),
+    }
+
+    txs = {
+        "adam_mega": scale_by_adam(0.9, 0.95, 1e-8, backend="fused"),
+        "adam_perleaf": scale_by_adam(0.9, 0.95, 1e-8, backend="fused",
+                                      megakernel=False, bucket_min_size=0),
+        "adam_jnp": scale_by_adam(0.9, 0.95, 1e-8),
+        "slim_mega": scale_by_slim_adam(dims, 0.9, 0.95, 1e-8, backend="fused"),
+        "slim_perleaf": scale_by_slim_adam(dims, 0.9, 0.95, 1e-8,
+                                           backend="fused", megakernel=False,
+                                           bucket_min_size=0),
+        "slim_jnp": scale_by_slim_adam(dims, 0.9, 0.95, 1e-8),
+    }
+    counts = {}
+    for name, tx in txs.items():
+        state = tx.init(params)
+        counts[name] = count_pallas_launches(
+            lambda g, s, tx=tx: tx.update(g, s), grads, state)
+
+    bad = []
+    for opt in ("adam", "slim"):
+        mega, per = counts[f"{opt}_mega"], counts[f"{opt}_perleaf"]
+        bound = len(plans[opt].groups)
+        print(f"  {opt}: megakernel {mega} launches (megaplan groups {bound}),"
+              f" per-leaf {per}, leaves {len(leaves)}, jnp {counts[opt + '_jnp']}")
+        if counts[opt + "_jnp"]:
+            bad.append(f"{opt}_jnp traces {counts[opt + '_jnp']} pallas "
+                       f"launches — the jnp baseline must stay kernel-free")
+        if mega > bound:
+            bad.append(f"{opt} megakernel step emits {mega} launches > its "
+                       f"megaplan's {bound} groups — a group degraded or the "
+                       f"dispatcher double-launches")
+        if mega > _GATE_MAX_LAUNCHES:
+            bad.append(f"{opt} megakernel step emits {mega} launches > the "
+                       f"GPT-small bound {_GATE_MAX_LAUNCHES}")
+        if per > bound and mega >= per:
+            bad.append(f"{opt} megakernel step ({mega} launches) no longer "
+                       f"beats the per-leaf dispatch ({per})")
+
+    # Wall-clock gate: only meaningful where kernels compile (interp-mode
+    # pallas on CPU is a correctness harness, orders of magnitude off).
+    n_total = sum(int(p.size) for p in leaves) * 4
+    dense_b, comp_b, *_ = _tree_bytes(params, dims_leaves,
+                                      dense_passes=6, slim_passes=4)
+    proj = {"adam": 6 * n_total / HBM_BW * 1e6,
+            "slim": (dense_b + comp_b) / HBM_BW * 1e6}
+    measured = {}
+    if jax.default_backend() == "tpu":
+        for opt in ("adam", "slim"):
+            t_fused = t_jnp = None
+            for kind in ("mega", "jnp"):
+                tx = txs[f"{opt}_{kind}"]
+                state = tx.init(params)
+                step = jax.jit(lambda g, s, tx=tx: tx.update(g, s))
+                t = timeit(step, grads, state, iters=3)[1]
+                measured[f"{opt}_{kind}_min_us"] = round(t, 1)
+                t_fused, t_jnp = (t, t_jnp) if kind == "mega" else (t_fused, t)
+            print(f"  {opt}: fused {t_fused:.1f}us vs jnp {t_jnp:.1f}us "
+                  f"(projected {proj[opt]:.1f}us)")
+            if t_fused > t_jnp:
+                bad.append(f"{opt} fused step ({t_fused:.1f}us) slower than "
+                           f"jnp ({t_jnp:.1f}us) on the TPU backend")
+    else:
+        print(f"  backend '{jax.default_backend()}': wall-clock gate skipped "
+              f"(interp-mode kernels); projected v5e step times "
+              f"adam {proj['adam']:.1f}us, slim {proj['slim']:.1f}us")
+
+    append_bench_history("opt_speed_launches", {
+        "config": cfg.name, "leaves": len(leaves), "launches": counts,
+        "groups": {opt: len(p.groups) for opt, p in plans.items()},
+        "max_launches_gate": _GATE_MAX_LAUNCHES,
+        "proj_us": {k: round(v, 1) for k, v in proj.items()},
+        **({"measured": measured} if measured else {}),
+    })
+    if bad:
+        art = write_csv("megaplan_groups.csv", [
+            {"plan": opt, "group": gi, "kind": g.kind, "batch": g.batch,
+             "rows": g.rows, "cols": g.cols, "axis": g.axis,
+             "leaf": seg.index, "shape": str(seg.shape), "K": str(seg.dims),
+             "offset": seg.offset, "length": seg.length}
+            for opt, p in plans.items()
+            for gi, g in enumerate(p.groups) for seg in g.segments])
+        print("LAUNCH GATE FAILURE (megaplan group tables dumped to "
+              f"{art}):")
+        for b in bad:
+            print(f"  {b}")
+        return 1
+    print(f"launch check OK: megakernel tree update is O(groups) — "
+          f"adam {counts['adam_mega']}, slim {counts['slim_mega']} launches "
+          f"(<= {_GATE_MAX_LAUNCHES}) vs {len(leaves)} leaves per-leaf")
     return 0
 
 
@@ -522,7 +664,13 @@ if __name__ == "__main__":
     ap.add_argument("--sharded", action="store_true",
                     help="per-shard HBM + ICI byte model under shard_map on the "
                          "production (data=16, model=16) mesh")
+    ap.add_argument("--check-launches", action="store_true",
+                    help="megakernel gate: GPT-small tree update must run in "
+                         "O(groups) pallas launches (and beat jnp wall-clock "
+                         "on a real TPU backend)")
     args = ap.parse_args()
+    if args.check_launches:
+        sys.exit(launch_check())
     if args.check_roofline:
         sys.exit(sharded_roofline(check=True) if args.sharded else roofline_check())
     if args.sharded:

@@ -22,7 +22,10 @@
 #                                 bound, zero psum-finalize jnp fallbacks,
 #                                 compressed-leaf ratio <= 0.716 under the
 #                                 owner-write scheme, fused-SNR measure-step
-#                                 delta O(kept))
+#                                 delta O(kept)) + the megakernel launch gate
+#                                 (GPT-small tree update in O(groups) <= 8
+#                                 pallas launches; wall-clock fused <= jnp on
+#                                 real TPU backends)
 #   scripts/ci.sh bench-quick     just the optimizer benches (opt_speed,
 #                                 opt_speed_tree, opt_speed_sharded)
 #   scripts/ci.sh bench           full quick-preset benchmark sweep
@@ -111,6 +114,11 @@ run_bench_roofline() {
   # compressed-leaf ratio <= 0.716 (owner-shard moment writes), and the
   # fused-SNR measure-step delta bounded to O(kept) stat lines.
   python -m benchmarks.opt_speed --check-roofline --sharded
+  # Megakernel launch gate: the default fused tree update must trace to
+  # O(groups) pallas launches (<= 8 for GPT-small; wall-clock fused <= jnp
+  # gated only on a real TPU backend, interp runs record projected times;
+  # on failure the megaplan group tables land in results/megaplan_groups.csv).
+  python -m benchmarks.opt_speed --check-launches
 }
 
 run_bench_quick() {

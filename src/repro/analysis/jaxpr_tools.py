@@ -40,6 +40,15 @@ def trace_entry(fn: Callable, *args, **kwargs) -> ClosedJaxpr:
     return jax.make_jaxpr(functools.partial(fn, **kwargs))(*args)
 
 
+def count_pallas_launches(fn: Callable, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations in one trace of ``fn`` — the
+    launch count a jitted call pays per step. Device-free (make_jaxpr over
+    whatever abstract/concrete args are given); the megakernel benches gate
+    on this so the O(leaves) -> O(groups) claim doesn't ride on interp-mode
+    wall clocks."""
+    return len(find_pallas_eqns(trace_entry(fn, *args, **kwargs).jaxpr))
+
+
 def entry_signature(fn: Callable, *args, **kwargs) -> List[Any]:
     """Flat list of output ``ShapeDtypeStruct``s of an entry (eval_shape)."""
     out = jax.eval_shape(functools.partial(fn, **kwargs), *args)

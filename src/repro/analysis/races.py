@@ -53,8 +53,124 @@ def check_output_races(info: PallasInfo, result: PassResult, where: str) -> None
                        f"instances' contributions")
 
 
+def _gpt_small_leaf_geometry():
+    """(shapes, dtype names, dims) of the full GPT-small param tree — shapes
+    via eval_shape (no 124M materialization), dims from the production rule
+    table, the same derivation the opt_speed roofline gates use."""
+    import jax
+
+    from repro.configs import gpt_small
+    from repro.core import rules_as_tree, table3_rules
+
+    _, meta = gpt_small.reduced().init(jax.random.PRNGKey(0))
+    full = gpt_small.config()
+    params = jax.eval_shape(lambda k: full.init(k)[0], jax.random.PRNGKey(0))
+    dims = rules_as_tree(table3_rules(meta), params, meta)
+    treedef = jax.tree_util.tree_flatten(params)[1]
+    dfl = tuple(tuple(d) for d in treedef.flatten_up_to(dims))
+    leaves = jax.tree.leaves(params)
+    return (tuple(tuple(p.shape) for p in leaves),
+            tuple(str(p.dtype) for p in leaves), dfl)
+
+
+# Synthetic mixed tree: every regime (minor/major/batched/dense), ragged +
+# size-1 + full-reduce leaves, a bf16 leaf sharing a group with an f32 one.
+_SYNTH_TREE = (
+    ((128, 256), "float32", (1,)),
+    ((64, 256), "bfloat16", (1,)),       # same cols -> same minor group
+    ((256, 96), "float32", (0,)),
+    ((4, 32, 64, 16), "float32", (1,)),  # middle-K -> batched major
+    ((7,), "float32", ()),
+    ((33, 5), "float32", ()),
+    ((3, 3), "float32", (0, 1)),         # AdaLayer-style full reduce
+    ((1, 2), "float32", (1,)),
+)
+
+# The launch bound the CI --check-launches gate enforces for GPT-small.
+_GPT_SMALL_GROUPS_BOUND = 8
+
+
+def check_segment_tables(result: PassResult) -> None:
+    """Megaplan segment-table invariants — the grouped launches' correctness
+    rests on the tables tiling each super-tensor injectively (offsets
+    contiguous, every leaf in exactly one slot, uniform line geometry per
+    group), which is static metadata this pass can decide without running a
+    kernel. Also pins the GPT-small group count under the CI launch bound,
+    so a planner regression fails here before the bench gate sees it."""
+    import numpy as np
+
+    from repro.kernels.megaplan import (_slim_key, plan_megagroups,
+                                        segment_table)
+    from repro.kernels.slim_update import PRECOND_BUFS
+
+    shapes_g, dts_g, dims_g = _gpt_small_leaf_geometry()
+    suites = [
+        ("gpt_small[slim]", shapes_g, dts_g, dims_g),
+        ("gpt_small[adam]", shapes_g, dts_g, tuple(() for _ in shapes_g)),
+        ("synthetic", tuple(s for s, _, _ in _SYNTH_TREE),
+         tuple(d for _, d, _ in _SYNTH_TREE),
+         tuple(k for _, _, k in _SYNTH_TREE)),
+    ]
+    for name, shapes, dts, dims_leaves in suites:
+        plan = plan_megagroups(shapes, dts, dims_leaves, n_bufs=PRECOND_BUFS)
+        covered = list(plan.jnp_idx)
+        for gi, group in enumerate(plan.groups):
+            where = f"megaplan::{name}::group{gi}[{group.kind}]"
+            result.checks += 1
+            bad = []
+            if not group.segments:
+                bad.append("group holds no segments")
+            off = 0
+            for seg in group.segments:
+                if seg.length <= 0:
+                    bad.append(f"leaf {seg.index} has non-positive kept "
+                               f"extent {seg.length}")
+                if seg.offset != off:
+                    bad.append(f"leaf {seg.index} offset {seg.offset} != "
+                               f"running offset {off} — segments overlap or "
+                               f"leave a gap")
+                off += seg.length
+                if group.kind != "dense" and _slim_key(seg.cn) != (
+                        group.kind, group.batch, group.red):
+                    bad.append(f"leaf {seg.index} line geometry "
+                               f"{_slim_key(seg.cn)} differs from the "
+                               f"group's {(group.kind, group.batch, group.red)}")
+            if off != group.extent:
+                bad.append(f"segment lengths sum to {off} != group extent "
+                           f"{group.extent}")
+            tbl = segment_table(group)
+            if tbl.shape != (group.extent, 4):
+                bad.append(f"segment table shape {tbl.shape} != "
+                           f"({group.extent}, 4)")
+            elif group.segments:
+                exp = np.repeat(np.asarray([s.index for s in group.segments]),
+                                np.asarray([s.length for s in group.segments]))
+                if not np.array_equal(tbl[:, 0], exp):
+                    bad.append("table leaf-index column does not tile the "
+                               "segments in offset order")
+                if (tbl[:, 2] <= 0).any():
+                    bad.append("table holds a non-positive line extent")
+            covered.extend(seg.index for seg in group.segments)
+            for msg in bad:
+                result.add("segment-table", where, msg)
+        result.checks += 1
+        if sorted(covered) != list(range(len(shapes))):
+            result.add("segment-table", f"megaplan::{name}",
+                       f"groups + jnp fallback do not partition the "
+                       f"{len(shapes)} leaves exactly once "
+                       f"(covered {sorted(covered)})")
+        result.checks += 1
+        if name.startswith("gpt_small") and \
+                len(plan.groups) > _GPT_SMALL_GROUPS_BOUND:
+            result.add("segment-table", f"megaplan::{name}",
+                       f"{len(plan.groups)} groups > the GPT-small launch "
+                       f"bound {_GPT_SMALL_GROUPS_BOUND} gated in CI")
+
+
 def run() -> PassResult:
-    """Race-check every registered (entry, case, variant) trace."""
+    """Race-check every registered (entry, case, variant) trace, then the
+    megaplan segment tables (grouped launches are race-free only if the
+    tables tile each super-tensor injectively)."""
     t0 = time.monotonic()
     result = PassResult("races")
     for entry in registry.ENTRIES:
@@ -63,5 +179,6 @@ def run() -> PassResult:
                 where = registry.signature_key(entry, case, variant)
                 for info in registry.traced_infos(entry, case, variant):
                     check_output_races(info, result, where)
+    check_segment_tables(result)
     result.seconds = time.monotonic() - t0
     return result

@@ -22,8 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_adam as _fa
+from repro.kernels import megaplan as _mp
 from repro.kernels import slim_update as _su
 from repro.kernels import snr_stats as _ss
+from repro.kernels.megaplan import (MEGA_ADAM_BUFS, MEGA_FINALIZE_BUFS,
+                                    MEGA_PARTIAL_BUFS, MEGA_PRECOND_BUFS,
+                                    MEGA_PRECOND_SNR_BUFS)
 from repro.kernels.slim_update import (FINALIZE_BUFS, PARTIAL_BUFS,
                                        PRECOND_BUFS, PRECOND_SNR_BUFS,
                                        UPDATE_BUFS)
@@ -100,6 +104,10 @@ def _finalize_with_ek(m_new, v_line, ek, **kw):
     return _su.slim_finalize_batched(m_new, v_line, ek=ek, **kw)
 
 
+def _mega_finalize_with_ek(m_new, v_line, bc1, bc2, ek, **kw):
+    return _mp.mega_slim_finalize_batched(m_new, v_line, bc1, bc2, ek=ek, **kw)
+
+
 _TILE2D_CASES = (
     Case("aligned", (256, 512), None, _dts(4), {}, kept=256, red=512),
     Case("ragged-bf16", (300, 700), None, _dts(4, s0=bf16, s1=bf16), {},
@@ -158,6 +166,56 @@ ENTRIES: Tuple[KernelEntry, ...] = (
         (Variant("base", {"ek": None}, FINALIZE_BUFS, "FINALIZE_BUFS"),),
         _strip_cases(2, bf16_slots=()),
     ),
+    # Megaplan entries: inputs are always f32 (gather_group casts every
+    # segment to the compute dtype before concatenation), so there are no
+    # bf16 cases — the f32-compute contract is enforced structurally at the
+    # gather, not inside the kernel body.
+    KernelEntry(
+        "mega_adam_update", _mp.mega_adam_update, "tile2d",
+        ("full2d", "full2d", "full2d", "line2d", "line2d"),
+        (Variant("base", {}, MEGA_ADAM_BUFS, "MEGA_ADAM_BUFS"),
+         Variant("health", {"with_health": True}, MEGA_ADAM_BUFS,
+                 "MEGA_ADAM_BUFS")),
+        (Case("aligned", (256, 512), None, _dts(5), {}, kept=256, red=512),
+         Case("ragged", (300, 512), None, _dts(5), {}, kept=300, red=512)),
+    ),
+    KernelEntry(
+        "mega_slim_update_batched", _mp.mega_slim_update_batched, "strip",
+        ("full", "full", "line", "line", "line"),
+        (Variant("base", {}, MEGA_PRECOND_BUFS, "MEGA_PRECOND_BUFS"),
+         Variant("snr", {"with_snr": True}, MEGA_PRECOND_SNR_BUFS,
+                 "MEGA_PRECOND_SNR_BUFS"),
+         Variant("health", {"with_health": True}, MEGA_PRECOND_BUFS,
+                 "MEGA_PRECOND_BUFS"),
+         Variant("snr+health", {"with_snr": True, "with_health": True},
+                 MEGA_PRECOND_SNR_BUFS, "MEGA_PRECOND_SNR_BUFS")),
+        _strip_cases(5, bf16_slots=(), fit_edge_bufs=MEGA_PRECOND_BUFS),
+    ),
+    KernelEntry(
+        "mega_slim_partial_stats_batched", _mp.mega_slim_partial_stats_batched,
+        "strip", ("full", "full"),
+        (Variant("base", {}, MEGA_PARTIAL_BUFS, "MEGA_PARTIAL_BUFS"),
+         Variant("snr", {"with_snr": True}, MEGA_PARTIAL_BUFS,
+                 "MEGA_PARTIAL_BUFS"),
+         Variant("health", {"with_health": True}, MEGA_PARTIAL_BUFS,
+                 "MEGA_PARTIAL_BUFS"),
+         Variant("snr+health", {"with_snr": True, "with_health": True},
+                 MEGA_PARTIAL_BUFS, "MEGA_PARTIAL_BUFS")),
+        _strip_cases(2, bf16_slots=()),
+    ),
+    KernelEntry(
+        "mega_slim_finalize_batched[ek]", _mega_finalize_with_ek, "strip",
+        ("full", "line", "line", "line", "line"),
+        (Variant("base", {}, MEGA_FINALIZE_BUFS, "MEGA_FINALIZE_BUFS"),),
+        _strip_cases(5, bf16_slots=()),
+    ),
+    KernelEntry(
+        "mega_slim_finalize_batched[owner]", _mp.mega_slim_finalize_batched,
+        "strip", ("full", "line", "line", "line"),
+        (Variant("base", {"ek": None}, MEGA_FINALIZE_BUFS,
+                 "MEGA_FINALIZE_BUFS"),),
+        _strip_cases(4, bf16_slots=()),
+    ),
     KernelEntry(
         "snr_stats_batched", _ss.snr_stats_batched, "strip", ("full",),
         (Variant("base", {}, STATS_BUFS, "STATS_BUFS"),),
@@ -186,6 +244,8 @@ def case_args(entry: KernelEntry, case: Case) -> Tuple[jax.ShapeDtypeStruct, ...
         if role == "line":
             b, r, c = case.shape
             shape = (b, r, 1) if case.axis == 1 else (b, 1, c)
+        elif role == "line2d":   # per-row operand of a 2-D tile entry
+            shape = (case.shape[0], 1)
         else:  # "full" (B, R, C) or "full2d" (R, C)
             shape = case.shape
         out.append(jax.ShapeDtypeStruct(shape, dt))

@@ -77,6 +77,7 @@ def scale_by_slim_adam(
     param_specs=None,
     emit_snr: bool = False,
     emit_health: bool = False,
+    megakernel: bool = True,
 ) -> GradientTransformation:
     """Adam preconditioner with mean-shared second moments along per-leaf dims.
 
@@ -94,10 +95,12 @@ def scale_by_slim_adam(
     functions share state layout apart from ``snr``.
 
     ``backend`` selects the execution path (``repro.optim.base.BACKENDS``):
-    'fused' routes K != () leaves through the slim Pallas kernel (any
-    dims-subset, canonicalized to a minor-axis reduction) and K = () leaves
-    through the dense kernel with small-leaf bucketing; the jnp path remains
-    the per-leaf fallback. State layout is backend-independent.
+    'fused' routes K != () leaves through the slim Pallas kernels (any
+    dims-subset, canonicalized transpose-free) and K = () leaves through the
+    dense kernel — by default grouped into megaplan super-tensors so a whole
+    tree update costs O(groups) ≈ O(1) launches (``megakernel=False``
+    restores the per-leaf dispatch with small-leaf bucketing); the jnp path
+    remains the per-leaf fallback. State layout is backend-independent.
 
     ``mesh`` + ``param_specs`` (PartitionSpec pytree mirroring params) make
     the fused backend shard-aware: the tree update runs under ``shard_map``
@@ -150,7 +153,7 @@ def scale_by_slim_adam(
                 eps=eps, count=count, use_first_moment=use_first_moment,
                 bucket_min_size=bucket_min_size, mesh=mesh,
                 spec_leaves=spec_leaves, emit_snr=emit_snr,
-                with_health=emit_health)
+                with_health=emit_health, megakernel=megakernel)
             u, mu_l, nu_l = out[:3]
             return unflat(u), ScaleBySlimAdamState(
                 count=count, mu=unflat(mu_l) if use_first_moment else None,
@@ -194,21 +197,24 @@ def slim_adam(
     param_specs=None,
     emit_snr: bool = False,
     emit_health: bool = False,
+    megakernel: bool = True,
 ) -> GradientTransformation:
     """Drop-in AdamW recipe with SlimAdam's compressed preconditioner.
 
     Uses the *same* hyperparameters as Adam — the paper's requirement that
     users can swap optimizers without re-tuning. ``mesh``/``param_specs``/
-    ``emit_snr``/``emit_health`` thread to :func:`scale_by_slim_adam` for the
-    shard-aware fused backend, the from-update SNR measurement, and the
-    in-pass anomaly stats.
+    ``emit_snr``/``emit_health``/``megakernel`` thread to
+    :func:`scale_by_slim_adam` for the shard-aware fused backend, the
+    from-update SNR measurement, the in-pass anomaly stats, and the grouped
+    launch plan.
     """
     parts = []
     if grad_clip is not None:
         parts.append(clip_by_global_norm(grad_clip))
     parts.append(scale_by_slim_adam(dims_tree, b1=b1, b2=b2, eps=eps, backend=backend,
                                     mesh=mesh, param_specs=param_specs,
-                                    emit_snr=emit_snr, emit_health=emit_health))
+                                    emit_snr=emit_snr, emit_health=emit_health,
+                                    megakernel=megakernel))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
     parts.append(scale_by_learning_rate(learning_rate))

@@ -53,6 +53,38 @@ layer via ``TrainerConfig.backend`` / ``make_optimizer(backend=...)``:
     not a speedup); state layout and results match ``"jnp"`` to fp32
     rounding (tests assert 1e-5 over a full GPT-small param tree).
 
+    **Megakernel (the default dispatch).** Per-leaf launches price the tree
+    update at O(leaves) kernel dispatches — grid setup, operand plumbing,
+    and an XLA fusion barrier per leaf, on a step whose arithmetic is pure
+    bandwidth. ``repro.kernels.megaplan`` collapses that to O(groups) ≈
+    O(1): every kernel-served leaf is keyed by regime and line geometry
+    (``dense`` lane-folds any shape flat; ``minor``/``major``/``batched``
+    key on the canonical reduced extent), same-key leaves are concatenated
+    along the *kept* axis into one padded super-tensor (so no reduction
+    line ever crosses a leaf boundary — per-line arithmetic is unchanged),
+    and one segment-aware kernel (``mega_adam_update``,
+    ``mega_slim_update_batched``, the partial/finalize pair for the psum
+    regime) updates the whole group in a single launch. dtype never splits
+    a group: the gather casts to the f32 compute type, so a bf16 leaf
+    rides with its f32 neighbours. Per-leaf scalars (bias corrections)
+    enter as O(kept) line operands expanded from the static segment table
+    (``segment_table``: one ``[leaf, position, line_extent, bc_slot]`` row
+    per kept line, checked injective by ``repro.analysis`` races pass);
+    updates scatter back by segment offset. GPT-small's whole tree updates
+    in 1 dense-Adam launch or 4 SlimAdam group launches (vs 11 per-leaf) —
+    the ``--check-launches`` CI gate holds it ≤ 8 on the traced jaxpr, and
+    on real TPU backends additionally requires fused wall-clock ≤ jnp.
+    Excluded from grouping: the per-leaf jnp fallbacks (0-d, non-float,
+    VMEM-outrun leaves) — unchanged; and the health/SNR stats, which the
+    mega kernels emit per *line* (injective outputs, no shared
+    accumulator) and the caller sums per segment, trading the per-leaf
+    kernels' O(1) accumulator for race-freedom across segments.
+    ``megakernel=False`` on any transformation restores the per-leaf
+    dispatch (with small-leaf bucketing) as the parity oracle — state
+    matches the grouped path bit-for-bit; updates to a couple of fp32 ULP
+    (XLA clones the moment recurrences into the update fusion and makes
+    per-fusion FMA contraction choices that differ across shapes).
+
 ``backend="auto"``
     Resolves to ``"fused"`` on TPU and ``"jnp"`` everywhere else, so the
     interpreter is never on a production hot path.
@@ -69,7 +101,11 @@ from ``repro.sharding.logical.param_specs``) to ``scale_by_adam`` /
 ``--backend fused`` in ``repro.launch.train`` / ``repro.launch.dryrun`` —
 wraps the fused tree update in ``shard_map`` so each device streams only its
 local shards. Every leaf is classified by one
-``repro.sharding.shardspec.plan_sharded_leaf`` lookup into three regimes:
+``repro.sharding.shardspec.plan_sharded_leaf`` lookup into three regimes
+(the megaplan grouping composes inside the shard_map body: local and dense
+leaves group on their *local* shard geometry, psum leaves group per
+collective form — owner-placed and replicated-write separately — with the
+per-leaf ``lax.psum`` between the two grouped passes):
 
   * **reduced dims unsharded ('local')** — the reduction line is whole on
     every shard, so the unchanged kernels (dense, slim minor/major/batched,

@@ -40,11 +40,14 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
                   backend: str = "jnp",
                   bucket_min_size: int = fused.DEFAULT_BUCKET_MIN,
                   mesh=None, param_specs=None,
-                  emit_health: bool = False) -> GradientTransformation:
+                  emit_health: bool = False,
+                  megakernel: bool = True) -> GradientTransformation:
     """Adam preconditioner. ``backend`` selects the execution path
-    (see ``repro.optim.base.BACKENDS``): 'fused' streams each eligible leaf
-    through the Pallas kernels with small-leaf bucketing; state layout and
-    results are identical to 'jnp' up to fp32 rounding.
+    (see ``repro.optim.base.BACKENDS``): 'fused' streams eligible leaves
+    through the Pallas kernels — by default grouped into megaplan
+    super-tensors (O(1) launches per tree update; ``megakernel=False``
+    restores the per-leaf dispatch with small-leaf bucketing); state layout
+    and results are identical to 'jnp' up to fp32 rounding.
 
     ``mesh`` + ``param_specs`` (a PartitionSpec pytree mirroring params)
     make the fused backend shard-aware: the tree update runs under
@@ -83,7 +86,8 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
             out = fused.adam_tree_update(
                 g_leaves, mu_leaves, nu_leaves, b1=b1, b2=b2, eps=eps,
                 count=count, bucket_min_size=bucket_min_size,
-                mesh=mesh, spec_leaves=spec_leaves, with_health=emit_health)
+                mesh=mesh, spec_leaves=spec_leaves, with_health=emit_health,
+                megakernel=megakernel)
             u, mu_l, nu_l = out[:3]
             if emit_health:
                 health = out[3]
@@ -116,18 +120,19 @@ def adamw(
     mesh=None,
     param_specs=None,
     emit_health: bool = False,
+    megakernel: bool = True,
 ) -> GradientTransformation:
     """The paper's training recipe: clip(1.0) -> Adam -> decoupled wd -> -lr.
 
     ``mesh``/``param_specs`` thread to :func:`scale_by_adam` so the fused
-    backend runs shard-aware under a production mesh; ``emit_health``
-    threads there too (the guard layer's in-pass anomaly stats)."""
+    backend runs shard-aware under a production mesh; ``emit_health`` and
+    ``megakernel`` thread there too."""
     parts = []
     if grad_clip is not None:
         parts.append(clip_by_global_norm(grad_clip))
     parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps, backend=backend,
                                mesh=mesh, param_specs=param_specs,
-                               emit_health=emit_health))
+                               emit_health=emit_health, megakernel=megakernel))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, mask=lambda p: jax.tree.map(lambda x: x.ndim >= 2, p)))
     parts.append(scale_by_learning_rate(learning_rate))

@@ -41,12 +41,14 @@ path bit-for-bit up to fp32 reassociation.
 """
 from __future__ import annotations
 
+import math
 import warnings
-from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import megaplan
 from ..kernels.fused_adam import LANES, bias_corrections
 from ..kernels.ops import (
     CanonND,
@@ -74,6 +76,15 @@ Dims = Tuple[int, ...]
 # instead of per leaf). 16k elements ~ 64 KiB fp32: far below the per-call
 # tile, so launch/pad overhead dominates any per-leaf call at this size.
 DEFAULT_BUCKET_MIN = 1 << 14
+
+
+def _bucket_eligible(size: int, bucket_min_size: int) -> bool:
+    """Single definition of the small-leaf boundary: strictly below the
+    threshold buckets, exactly at it runs per-leaf. Every site must call
+    this — the bucketing decision and the flush path once disagreed at
+    ``size == bucket_min_size``, splitting threshold-sized leaves between
+    two dispatch shapes."""
+    return bool(bucket_min_size) and size < bucket_min_size
 
 
 class StepHealth(NamedTuple):
@@ -150,13 +161,14 @@ def reset_kernel_degradation() -> None:
     _DEGRADED["warned"] = False
 
 
-def _guarded(label: str, kernel_fn: Callable[[], Any], jnp_fn: Callable[[], Any]):
+def _guarded(label: str, kernel_fn: Callable[[], Any], jnp_fn: Callable[[], Any],
+             *, leaves: int = 1):
     try:
         if _KERNEL_FAULT_HOOK is not None:
             _KERNEL_FAULT_HOOK(label)
         return kernel_fn()
     except Exception as e:  # noqa: BLE001 — any kernel failure degrades
-        _DEGRADED["leaves"] += 1
+        _DEGRADED["leaves"] += leaves
         if not _DEGRADED["warned"]:
             _DEGRADED["warned"] = True
             warnings.warn(
@@ -345,6 +357,189 @@ def _flush_bucket(bucket, gs, ms, vs, out_u, out_m, out_v, *, interpret,
 
 
 # ---------------------------------------------------------------------------
+# Megaplan: whole-tree grouped launches (O(groups) pallas_calls per update)
+# ---------------------------------------------------------------------------
+#
+# The default fused tree path. plan_megagroups buckets every kernel-eligible
+# leaf by regime key (dense / minor / major / batched x line geometry); each
+# group gathers into one f32 super-tensor along its kept axis and runs one
+# mega kernel launch, with per-leaf scatter-back by segment offset. A group
+# degrades as a unit (leaves=len(segments) in the counters); jnp-routed
+# leaves keep their per-leaf reference path. The per-leaf dispatch below
+# stays available behind megakernel=False as the parity oracle.
+
+
+def _mega_dense_group(group, gs, ms, vs, *, b1, b2, eps, count, interpret,
+                      with_health: bool = False):
+    """One launch over a dense group's lane-folded super-tensor. Returns
+    per-segment lists (u, m', v', health_rows) aligned with
+    ``group.segments``."""
+    n = len(group.segments)
+
+    def kernel_fn():
+        bc1, bc2 = bias_corrections(b1, b2, count)
+        l1 = megaplan.segment_lines(group, [bc1] * n)
+        l2 = megaplan.segment_lines(group, [bc2] * n)
+        outs = megaplan.mega_adam_update(
+            megaplan.gather_group(group, gs), megaplan.gather_group(group, ms),
+            megaplan.gather_group(group, vs), l1, l2, b1=b1, b2=b2, eps=eps,
+            with_health=with_health, interpret=interpret)
+        us = megaplan.scatter_group(group, outs[0])
+        mo = megaplan.scatter_group(group, outs[1])
+        vo = megaplan.scatter_group(group, outs[2])
+        if with_health:
+            # per-line rows sum per segment; lane-fold zero padding is
+            # finite and contributes 0 to both terms.
+            hs = [jnp.stack([jnp.sum(nf), jnp.sum(ss)])
+                  for nf, ss in zip(megaplan.scatter_lines(group, outs[3]),
+                                    megaplan.scatter_lines(group, outs[4]))]
+        else:
+            hs = [None] * n
+        return us, mo, vo, hs
+
+    def jnp_fn():
+        outs = [jnp_adam_leaf(gs[seg.index], ms[seg.index], vs[seg.index],
+                              b1=b1, b2=b2, eps=eps, count=count)
+                for seg in group.segments]
+        hs = ([leaf_health(gs[seg.index]) for seg in group.segments]
+              if with_health else [None] * n)
+        return [o[0] for o in outs], [o[1] for o in outs], [o[2] for o in outs], hs
+
+    return _guarded(f"mega:dense[{n}]", kernel_fn, jnp_fn, leaves=n)
+
+
+def _mega_slim_group(group, gs, ms, vs, *, b1, b2, eps, count, interpret,
+                     emit_snr: bool = False, with_health: bool = False):
+    """One launch over a slim group's canonical super-tensor. Returns
+    per-segment lists (u, m', v_red', snr, health_rows)."""
+    n = len(group.segments)
+    batched = group.kind == "batched"
+    to3 = (lambda x: x) if batched else (lambda x: x[None])
+    un3 = (lambda x: x) if batched else (lambda x: x[0])
+
+    def kernel_fn():
+        bc1, bc2 = bias_corrections(b1, b2, count)
+        l1 = megaplan.segment_lines(group, [bc1] * n)
+        l2 = megaplan.segment_lines(group, [bc2] * n)
+        outs = megaplan.mega_slim_update_batched(
+            to3(megaplan.gather_group(group, gs)),
+            to3(megaplan.gather_group(group, ms)),
+            to3(megaplan.gather_group(group, vs, reduced=True)),
+            to3(l1), to3(l2), axis=group.axis, b1=b1, b2=b2, eps=eps,
+            with_snr=emit_snr, with_health=with_health, interpret=interpret)
+        us = megaplan.scatter_group(group, un3(outs[0]))
+        mo = megaplan.scatter_group(group, un3(outs[1]))
+        vo = megaplan.scatter_group(group, un3(outs[2]), reduced=True)
+        k = 3
+        snrs: List[Any] = [None] * n
+        if emit_snr:
+            snrs = [snr_update_stats_finalize(vl, s1, s2, group.red, 1.0 - b2,
+                                              eps=_SNR_EPS)
+                    for vl, s1, s2 in zip(
+                        megaplan.scatter_lines(group, un3(outs[2])),
+                        megaplan.scatter_lines(group, un3(outs[3])),
+                        megaplan.scatter_lines(group, un3(outs[4])))]
+            k = 5
+        hs: List[Any] = [None] * n
+        if with_health:
+            hs = [jnp.stack([jnp.sum(nf), jnp.sum(ss)])
+                  for nf, ss in zip(megaplan.scatter_lines(group, un3(outs[k])),
+                                    megaplan.scatter_lines(group, un3(outs[k + 1])))]
+        return us, mo, vo, snrs, hs
+
+    def jnp_fn():
+        us, mo, vo, snrs, hs = [], [], [], [], []
+        for seg in group.segments:
+            i = seg.index
+            u, m_new, v_new = jnp_slim_leaf(gs[i], ms[i], vs[i], seg.dims,
+                                            b1=b1, b2=b2, eps=eps, count=count,
+                                            use_first_moment=True)
+            us.append(u)
+            mo.append(m_new)
+            vo.append(v_new)
+            snrs.append(jnp_update_snr_leaf(gs[i], v_new, seg.dims, b2=b2)
+                        if emit_snr else None)
+            hs.append(leaf_health(gs[i]) if with_health else None)
+        return us, mo, vo, snrs, hs
+
+    return _guarded(f"mega:{group.kind}[{n}]", kernel_fn, jnp_fn, leaves=n)
+
+
+def _adam_tree_mega(g_leaves, mu_leaves, nu_leaves, *, b1, b2, eps, count,
+                    interpret, with_health: bool = False):
+    """Dense Adam over the whole tree in O(groups) launches (one dense group
+    plus the per-leaf jnp fallbacks). Return shape matches
+    :func:`_adam_tree_local`."""
+    kw = dict(b1=b1, b2=b2, eps=eps, count=count)
+    n = len(g_leaves)
+    plan = megaplan.plan_megagroups([g.shape for g in g_leaves],
+                                    [g.dtype for g in g_leaves], [()] * n)
+    out_u: List[Any] = [None] * n
+    out_m: List[Any] = [None] * n
+    out_v: List[Any] = [None] * n
+    out_h: List[Any] = [None] * n
+    for i in plan.jnp_idx:
+        out_u[i], out_m[i], out_v[i] = jnp_adam_leaf(
+            g_leaves[i], mu_leaves[i], nu_leaves[i], **kw)
+        if with_health:
+            out_h[i] = leaf_health(g_leaves[i])
+    for group in plan.groups:
+        us, mo, vo, hs = _mega_dense_group(group, g_leaves, mu_leaves, nu_leaves,
+                                           interpret=interpret,
+                                           with_health=with_health, **kw)
+        for seg, u, m, v, h in zip(group.segments, us, mo, vo, hs):
+            out_u[seg.index], out_m[seg.index], out_v[seg.index] = u, m, v
+            out_h[seg.index] = h
+    if with_health:
+        return out_u, out_m, out_v, out_h
+    return out_u, out_m, out_v
+
+
+def _slim_tree_mega(g_leaves, mu_leaves, nu_leaves, dims_leaves, *, b1, b2, eps,
+                    count, interpret, emit_snr: bool = False,
+                    with_health: bool = False):
+    """SlimAdam over the whole tree in O(groups) launches. Return shape
+    matches :func:`_slim_tree_local` (``use_first_moment=True`` form — the
+    moment-less variant never reaches the kernels)."""
+    kw = dict(b1=b1, b2=b2, eps=eps, count=count)
+    n = len(g_leaves)
+    n_bufs = PRECOND_SNR_BUFS if emit_snr else PRECOND_BUFS
+    plan = megaplan.plan_megagroups([g.shape for g in g_leaves],
+                                    [g.dtype for g in g_leaves],
+                                    [tuple(d) for d in dims_leaves],
+                                    n_bufs=n_bufs)
+    out_u: List[Any] = [None] * n
+    out_m: List[Any] = [None] * n
+    out_v: List[Any] = [None] * n
+    out_s: List[Any] = [None] * n
+    out_h: List[Any] = [None] * n
+    for i in plan.jnp_idx:
+        dims = tuple(dims_leaves[i])
+        out_u[i], out_m[i], out_v[i] = jnp_slim_leaf(
+            g_leaves[i], mu_leaves[i], nu_leaves[i], dims,
+            use_first_moment=True, **kw)
+        if emit_snr and dims:
+            out_s[i] = jnp_update_snr_leaf(g_leaves[i], out_v[i], dims, b2=b2)
+        if with_health:
+            out_h[i] = leaf_health(g_leaves[i])
+    for group in plan.groups:
+        if group.kind == "dense":
+            us, mo, vo, hs = _mega_dense_group(
+                group, g_leaves, mu_leaves, nu_leaves, interpret=interpret,
+                with_health=with_health, **kw)
+            snrs: List[Any] = [None] * len(group.segments)
+        else:
+            us, mo, vo, snrs, hs = _mega_slim_group(
+                group, g_leaves, mu_leaves, nu_leaves, interpret=interpret,
+                emit_snr=emit_snr, with_health=with_health, **kw)
+        for seg, u, m, v, s, h in zip(group.segments, us, mo, vo, snrs, hs):
+            out_u[seg.index], out_m[seg.index], out_v[seg.index] = u, m, v
+            out_s[seg.index], out_h[seg.index] = s, h
+    out = (out_u, out_m, out_v, out_s)
+    return out + (out_h,) if with_health else out
+
+
+# ---------------------------------------------------------------------------
 # Sharded execution: shard_map wrapping with per-leaf regime plans
 # ---------------------------------------------------------------------------
 
@@ -527,9 +722,148 @@ def _psum_slim_leaf(g, m, v_red, dims: Dims, *, pl, sizes, b1, b2, eps, count,
     # The plan's local CanonND was gated by plan_sharded_leaf on the
     # partial/finalize pair's working sets — run exactly that plan (the
     # moment-less variant streams a discarded m, so it stays on jnp).
-    if use_first_moment and pl.finalize == "kernel" and pl.cn is not None:
+    from ..sharding.shardspec import psum_kernel_eligible
+
+    if psum_kernel_eligible(pl, use_first_moment):
         return _guarded(f"psum:{g.shape}", kernel_branch, jnp_branch)
     return jnp_branch()
+
+
+def _psum_mega_group(group, form: str, plans, gs, ms, vs, *, sizes, b1, b2,
+                     eps, count, interpret, emit_snr: bool,
+                     with_health: bool) -> Dict[int, tuple]:
+    """One partial-stats launch + one finalize launch over a grouped psum
+    super-tensor; the per-leaf cross-shard algebra (psum over each leaf's
+    own ``psum_axes``, owner scatter/slice) runs between the two on the
+    O(kept) lines, exactly as :func:`_psum_slim_leaf` does per leaf. The
+    finalize pass consumes the partial pass's canonical m_new output
+    directly — no re-gather. ``form`` is 'owner' or 'plain': the two
+    finalize kernel signatures differ, so the caller partitions before
+    grouping. Returns ``{leaf_index: _psum_slim_leaf-format tuple}``."""
+    n = len(group.segments)
+    batched = group.kind == "batched"
+    to3 = (lambda x: x) if batched else (lambda x: x[None])
+    un3 = (lambda x: x) if batched else (lambda x: x[0])
+    cat = lambda lines: to3(jnp.concatenate(lines, axis=group.concat_axis))
+
+    outs = megaplan.mega_slim_partial_stats_batched(
+        to3(megaplan.gather_group(group, gs)),
+        to3(megaplan.gather_group(group, ms)),
+        axis=group.axis, b1=b1, with_snr=emit_snr, with_health=with_health,
+        interpret=interpret)
+    parts = megaplan.scatter_group(group, un3(outs[1]), reduced=True)
+
+    v_lines: List[Any] = []
+    ek_lines: List[Any] = []
+    v_news: List[Any] = []   # per-leaf completed full-line moment (SNR)
+    v_outs: List[Any] = [None] * n
+    for j, seg in enumerate(group.segments):
+        i = seg.index
+        pl = plans[i]
+        v32 = vs[i].astype(jnp.float32)
+        scale = (1.0 - b2) / pl.red_total
+        if form == "owner":
+            payload = scale * parts[j] + b2 * _owner_scatter(v32, pl.owner, sizes)
+            v_new = jax.lax.psum(payload, pl.psum_axes)
+            v_lines.append(canon_apply(v_new, seg.cn, reduced_cols=True))
+            v_outs[j] = _owner_slice(v_new, pl.owner, sizes).astype(vs[i].dtype)
+        else:
+            ek = jax.lax.psum(parts[j], pl.psum_axes) / pl.red_total
+            v_lines.append(canon_apply(v32, seg.cn, reduced_cols=True))
+            ek_lines.append(canon_apply(ek, seg.cn, reduced_cols=True))
+            # same elementwise form the finalize kernel applies — kept full-
+            # line for the SNR rebase; the stored slice comes from the kernel.
+            v_new = b2 * v32 + (1 - b2) * ek
+        v_news.append(v_new)
+
+    bc1, bc2 = bias_corrections(b1, b2, count)
+    l1 = to3(megaplan.segment_lines(group, [bc1] * n))
+    l2 = to3(megaplan.segment_lines(group, [bc2] * n))
+    if form == "owner":
+        u_cat = megaplan.mega_slim_finalize_batched(
+            outs[0], cat(v_lines), l1, l2, axis=group.axis, ek=None, b2=b2,
+            eps=eps, interpret=interpret)
+    else:
+        u_cat, v_new_cat = megaplan.mega_slim_finalize_batched(
+            outs[0], cat(v_lines), l1, l2, axis=group.axis, ek=cat(ek_lines),
+            b2=b2, eps=eps, interpret=interpret)
+        for j, (seg, v_red) in enumerate(zip(
+                group.segments, megaplan.scatter_group(group, un3(v_new_cat),
+                                                       reduced=True))):
+            v_outs[j] = v_red.astype(vs[seg.index].dtype)
+    us = megaplan.scatter_group(group, un3(u_cat))
+    m_news = megaplan.scatter_group(group, un3(outs[0]))
+
+    snrs: List[Any] = [None] * n
+    if emit_snr:
+        s1s = megaplan.scatter_group(group, un3(outs[2]), reduced=True)
+        s2s = megaplan.scatter_group(group, un3(outs[3]), reduced=True)
+        firsts = megaplan.scatter_group(group, un3(outs[4]), reduced=True)
+        for j, seg in enumerate(group.segments):
+            pl = plans[seg.index]
+            dset = {d % len(seg.shape) for d in seg.dims}
+            n_loc = math.prod(seg.shape[k] for k in sorted(dset))
+            snrs[j] = _psum_snr(s1s[j], s2s[j], firsts[j], v_news[j], pl,
+                                n_loc=n_loc, red_total=pl.red_total, b2=b2)
+    hs: List[Any] = [None] * n
+    if with_health:
+        k = 5 if emit_snr else 2
+        hs = [jnp.stack([jnp.sum(nf), jnp.sum(ss)])
+              for nf, ss in zip(megaplan.scatter_lines(group, un3(outs[k])),
+                                megaplan.scatter_lines(group, un3(outs[k + 1])))]
+
+    res: Dict[int, tuple] = {}
+    for j, seg in enumerate(group.segments):
+        out = (us[j], m_news[j].astype(ms[seg.index].dtype), v_outs[j])
+        if emit_snr:
+            out = out + (snrs[j],)
+        if with_health:
+            out = out + (hs[j],)
+        res[seg.index] = out
+    return res
+
+
+def _psum_mega_leaves(idx, plans, gs, ms, vs, dims_leaves, *, sizes, b1, b2,
+                      eps, count, interpret, emit_snr: bool,
+                      with_health: bool) -> Dict[int, tuple]:
+    """Group the kernel-eligible psum leaves (``idx``) and run each group
+    through the two-launch :func:`_psum_mega_group` pipeline. Owner-write
+    and plain leaves partition first (different finalize forms); within a
+    form, differing ``psum_axes`` don't split a group — each leaf's
+    collective stays its own between the launches. A failing group degrades
+    to per-leaf :func:`_psum_slim_leaf` calls."""
+    owner_items: List[tuple] = []
+    plain_items: List[tuple] = []
+    for i in idx:
+        pl = plans[i]
+        dims = tuple(dims_leaves[i])
+        shape = tuple(gs[i].shape)
+        dset = {d % len(shape) for d in dims}
+        red_shape = tuple(1 if j in dset else s for j, s in enumerate(shape))
+        item = (i, shape, red_shape, dims, pl.cn)
+        (owner_items if pl.owner else plain_items).append(item)
+    out: Dict[int, tuple] = {}
+    for form, items in (("owner", owner_items), ("plain", plain_items)):
+        for group in megaplan.groups_from_plans(items):
+            n = len(group.segments)
+
+            def per_leaf(group=group):
+                return {seg.index: _psum_slim_leaf(
+                            gs[seg.index], ms[seg.index], vs[seg.index],
+                            seg.dims, pl=plans[seg.index], sizes=sizes, b1=b1,
+                            b2=b2, eps=eps, count=count, use_first_moment=True,
+                            interpret=interpret, emit_snr=emit_snr,
+                            with_health=with_health)
+                        for seg in group.segments}
+
+            out.update(_guarded(
+                f"mega:psum:{group.kind}[{n}]",
+                lambda group=group, form=form: _psum_mega_group(
+                    group, form, plans, gs, ms, vs, sizes=sizes, b1=b1, b2=b2,
+                    eps=eps, count=count, interpret=interpret,
+                    emit_snr=emit_snr, with_health=with_health),
+                per_leaf, leaves=n))
+    return out
 
 
 def _repl_factors(g_leaves, spec_leaves, mesh) -> jnp.ndarray:
@@ -555,7 +889,7 @@ def _psum_health_rows(rows, repl, axes) -> jnp.ndarray:
 
 def _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh, *,
                        b1, b2, eps, count, interpret, bucket_min_size,
-                       with_health: bool = False):
+                       with_health: bool = False, megakernel: bool = True):
     """Dense Adam under shard_map: elementwise math never crosses shards, so
     every device just runs the plain per-leaf path on its local shards (the
     leaf plans and bucketing decisions re-derive from local shapes). With
@@ -572,7 +906,7 @@ def _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh, *,
     def local_fn(count, gs, ms, vs):
         out = _adam_tree_local(gs, ms, vs, b1=b1, b2=b2, eps=eps, count=count,
                                interpret=interpret, bucket_min_size=bucket_min_size,
-                               with_health=with_health)
+                               with_health=with_health, megakernel=megakernel)
         if not with_health:
             return out
         return out[:3] + (_psum_health_rows(out[3], repl, axes),)
@@ -591,7 +925,7 @@ def _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh, *,
 def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves, mesh, *,
                        b1, b2, eps, count, use_first_moment, interpret,
                        bucket_min_size, emit_snr: bool = False,
-                       with_health: bool = False):
+                       with_health: bool = False, megakernel: bool = True):
     """SlimAdam under shard_map, three regimes per leaf (see
     ``repro.sharding.shardspec``): 'local' leaves run the unchanged kernel
     dispatch on their shard (kernels, bucketing, jnp fits-gate fallback all
@@ -627,6 +961,21 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
         out_v: List[Any] = [None] * n
         out_s: List[Any] = [None] * n
         out_h: List[Any] = [None] * n
+        # Grouped psum launches: kernel-eligible psum leaves share one
+        # partial-stats + one finalize launch per (form, regime key) group;
+        # each leaf's cross-shard collective stays its own in between.
+        mega_psum: Dict[int, tuple] = {}
+        if megakernel and use_first_moment:
+            from ..sharding.shardspec import psum_kernel_eligible
+
+            elig = [i for i, pl in enumerate(plans)
+                    if pl.regime == "psum"
+                    and psum_kernel_eligible(pl, use_first_moment)]
+            if elig:
+                mega_psum = _psum_mega_leaves(
+                    elig, plans, gs, ms, vs, dims_leaves, sizes=sizes,
+                    count=count, interpret=interpret, emit_snr=emit_snr,
+                    with_health=with_health, **kw)
         local_idx = [i for i, pl in enumerate(plans) if pl.regime == "local"]
         if local_idx:
             out = _slim_tree_local(
@@ -636,7 +985,8 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
                 [tuple(dims_leaves[i]) for i in local_idx],
                 count=count, use_first_moment=use_first_moment,
                 interpret=interpret, bucket_min_size=bucket_min_size,
-                emit_snr=emit_snr, with_health=with_health, **kw)
+                emit_snr=emit_snr, with_health=with_health,
+                megakernel=megakernel, **kw)
             u, mo, vo = out[:3]
             for j, i in enumerate(local_idx):
                 out_u[i] = u[j]
@@ -656,10 +1006,13 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
             dims = tuple(dims_leaves[i])
             m_i = ms[i] if use_first_moment else None
             if pl.regime == "psum":
-                out = _psum_slim_leaf(gs[i], m_i, vs[i], dims, pl=pl, sizes=sizes,
-                                      count=count, use_first_moment=use_first_moment,
-                                      interpret=interpret, emit_snr=emit_snr,
-                                      with_health=with_health, **kw)
+                if i in mega_psum:
+                    out = mega_psum[i]
+                else:
+                    out = _psum_slim_leaf(gs[i], m_i, vs[i], dims, pl=pl, sizes=sizes,
+                                          count=count, use_first_moment=use_first_moment,
+                                          interpret=interpret, emit_snr=emit_snr,
+                                          with_health=with_health, **kw)
             else:  # 'jnp': reduced dims whole on the shard, reference math
                 out = jnp_slim_leaf(gs[i], m_i, vs[i], dims, count=count,
                                     use_first_moment=use_first_moment, **kw)
@@ -736,10 +1089,18 @@ def _sharded_slim_tree(g_leaves, mu_leaves, nu_leaves, dims_leaves, spec_leaves,
 
 
 def _adam_tree_local(g_leaves, mu_leaves, nu_leaves, *, b1, b2, eps, count,
-                     interpret, bucket_min_size, with_health: bool = False):
-    """Unsharded dense-Adam loop; with ``with_health`` also returns the
+                     interpret, bucket_min_size, with_health: bool = False,
+                     megakernel: bool = True):
+    """Unsharded dense-Adam dispatch; with ``with_health`` also returns the
     per-leaf (2,) health rows (kernel accumulators for kernel leaves, the
-    fused jnp sums otherwise)."""
+    fused jnp sums otherwise). The default is the megaplan path (one grouped
+    launch for the whole tree — ``bucket_min_size`` is moot there, every
+    kernel leaf joins the dense group); ``megakernel=False`` keeps the
+    per-leaf/bucketed loop as the parity oracle."""
+    if megakernel:
+        return _adam_tree_mega(g_leaves, mu_leaves, nu_leaves, b1=b1, b2=b2,
+                               eps=eps, count=count, interpret=interpret,
+                               with_health=with_health)
     kw = dict(b1=b1, b2=b2, eps=eps, count=count)
     n = len(g_leaves)
     out_u: List[Any] = [None] * n
@@ -752,7 +1113,7 @@ def _adam_tree_local(g_leaves, mu_leaves, nu_leaves, *, b1, b2, eps, count,
             out_u[i], out_m[i], out_v[i] = jnp_adam_leaf(g, m, v, **kw)
             if with_health:
                 out_h[i] = leaf_health(g)
-        elif bucket_min_size and g.size < bucket_min_size:
+        elif _bucket_eligible(g.size, bucket_min_size):
             bucket.append(i)
         else:
             out = _guarded(
@@ -775,9 +1136,13 @@ def adam_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Sequence[jnp.nd
                      nu_leaves: Sequence[jnp.ndarray], *, b1: float, b2: float,
                      eps: float, count, interpret: Optional[bool] = None,
                      bucket_min_size: int = DEFAULT_BUCKET_MIN,
-                     mesh=None, spec_leaves=None, with_health: bool = False):
-    """Dense Adam over a leaf list: kernels for eligible leaves (small ones
-    bucketed), jnp fallback otherwise. Returns (updates, new_mu, new_nu).
+                     mesh=None, spec_leaves=None, with_health: bool = False,
+                     megakernel: bool = True):
+    """Dense Adam over a leaf list: by default one megaplan group launch for
+    every kernel-eligible leaf (O(1) pallas_calls per update), jnp fallback
+    per excluded leaf. ``megakernel=False`` restores the per-leaf dispatch
+    (small leaves bucketed) — the parity oracle the megaplan tests diff
+    against. Returns (updates, new_mu, new_nu).
 
     With ``mesh`` + ``spec_leaves`` (one PartitionSpec per leaf) the whole
     update runs under ``shard_map`` — each device updates its local shards —
@@ -793,10 +1158,11 @@ def adam_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Sequence[jnp.nd
         return _sharded_adam_tree(g_leaves, mu_leaves, nu_leaves, spec_leaves, mesh,
                                   b1=b1, b2=b2, eps=eps, count=count,
                                   interpret=interpret, bucket_min_size=bucket_min_size,
-                                  with_health=with_health)
+                                  with_health=with_health, megakernel=megakernel)
     out = _adam_tree_local(g_leaves, mu_leaves, nu_leaves, b1=b1, b2=b2, eps=eps,
                            count=count, interpret=interpret,
-                           bucket_min_size=bucket_min_size, with_health=with_health)
+                           bucket_min_size=bucket_min_size, with_health=with_health,
+                           megakernel=megakernel)
     if with_health:
         return out[:3] + (_health_from_rows(out[3]),)
     return out
@@ -804,9 +1170,13 @@ def adam_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Sequence[jnp.nd
 
 def _slim_tree_local(g_leaves, mu_leaves, nu_leaves, dims_leaves, *, b1, b2, eps,
                      count, use_first_moment, interpret, bucket_min_size,
-                     emit_snr: bool = False, with_health: bool = False):
-    """Unsharded SlimAdam loop. Returns ``(u, m, v, snr_list)`` plus, with
-    ``with_health``, the per-leaf (2,) health rows as a fifth element."""
+                     emit_snr: bool = False, with_health: bool = False,
+                     megakernel: bool = True):
+    """Unsharded SlimAdam dispatch. Returns ``(u, m, v, snr_list)`` plus,
+    with ``with_health``, the per-leaf (2,) health rows as a fifth element.
+    Default is the megaplan path (O(groups) launches); ``megakernel=False``
+    keeps the per-leaf/bucketed loop as the parity oracle. The moment-less
+    variant runs entirely on jnp either way."""
     kw = dict(b1=b1, b2=b2, eps=eps, count=count)
     n = len(g_leaves)
     out_s: List[Any] = [None] * n
@@ -821,6 +1191,10 @@ def _slim_tree_local(g_leaves, mu_leaves, nu_leaves, dims_leaves, *, b1, b2, eps
             out_h = [leaf_health(g) for g in g_leaves]
         out = ([o[0] for o in outs], None, [o[2] for o in outs], out_s)
         return out + (out_h,) if with_health else out
+    if megakernel:
+        return _slim_tree_mega(g_leaves, mu_leaves, nu_leaves, dims_leaves,
+                               interpret=interpret, emit_snr=emit_snr,
+                               with_health=with_health, **kw)
     out_u: List[Any] = [None] * n
     out_m: List[Any] = [None] * n
     out_v: List[Any] = [None] * n
@@ -841,7 +1215,7 @@ def _slim_tree_local(g_leaves, mu_leaves, nu_leaves, dims_leaves, *, b1, b2, eps
             if with_health:
                 out_h[i] = leaf_health(g)
         elif plan.route == "dense":
-            if bucket_min_size and g.size < bucket_min_size:
+            if _bucket_eligible(g.size, bucket_min_size):
                 bucket.append(i)
             else:
                 out = _guarded(
@@ -884,16 +1258,19 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
                      use_first_moment: bool = True, interpret: Optional[bool] = None,
                      bucket_min_size: int = DEFAULT_BUCKET_MIN,
                      mesh=None, spec_leaves=None, emit_snr: bool = False,
-                     with_health: bool = False):
+                     with_health: bool = False, megakernel: bool = True):
     """SlimAdam over a leaf list with per-leaf reduction-dim tuples.
 
     Each leaf's route comes from one :func:`leaf_plan` lookup: K = () leaves
-    take the dense route (and join the dense bucket when small); K != ()
-    leaves dispatch to the slim kernel named by their canonical plan; leaves
-    no kernel can serve fall back to jnp. ``use_first_moment=False`` runs
-    entirely on the jnp path — the kernels read/write a first moment, so
-    serving the moment-less variant would stream a discarded full-size m and
-    forfeit the bandwidth win. Returns (updates, new_mu_or_None, new_nu).
+    take the dense route; K != () leaves the slim kernel named by their
+    canonical plan; leaves no kernel can serve fall back to jnp. By default
+    kernel leaves run through the megaplan (same-regime leaves concatenated,
+    O(groups) launches per tree — see ``repro.kernels.megaplan``);
+    ``megakernel=False`` restores the per-leaf dispatch (small dense leaves
+    bucketed), the parity oracle. ``use_first_moment=False`` runs entirely
+    on the jnp path — the kernels read/write a first moment, so serving the
+    moment-less variant would stream a discarded full-size m and forfeit the
+    bandwidth win. Returns (updates, new_mu_or_None, new_nu).
 
     ``emit_snr=True`` appends a fourth element: a per-leaf list of
     from-update SNR scalars (None for K = () leaves) — SNR_K of the step's
@@ -926,12 +1303,13 @@ def slim_tree_update(g_leaves: Sequence[jnp.ndarray], mu_leaves: Optional[Sequen
                                   spec_leaves, mesh, b1=b1, b2=b2, eps=eps,
                                   count=count, use_first_moment=use_first_moment,
                                   interpret=interpret, bucket_min_size=bucket_min_size,
-                                  emit_snr=emit_snr, with_health=with_health)
+                                  emit_snr=emit_snr, with_health=with_health,
+                                  megakernel=megakernel)
     res = _slim_tree_local(g_leaves, mu_leaves, nu_leaves, dims_leaves,
                            b1=b1, b2=b2, eps=eps, count=count,
                            use_first_moment=use_first_moment, interpret=interpret,
                            bucket_min_size=bucket_min_size, emit_snr=emit_snr,
-                           with_health=with_health)
+                           with_health=with_health, megakernel=megakernel)
     out = res[:3] + ((res[3],) if emit_snr else ())
     if with_health:
         out = out + (_health_from_rows(res[4]),)

@@ -184,6 +184,18 @@ def owner_factor(pl: ShardLeafPlan, mesh: Any) -> int:
     return math.prod(int(sizes.get(a, 1)) for a, _ in pl.owner)
 
 
+def psum_kernel_eligible(pl: ShardLeafPlan, use_first_moment: bool) -> bool:
+    """Whether a psum-regime leaf can run the Pallas partial-stats/finalize
+    pair (vs the jnp reference math on its shard): the planner must have
+    gated the local canonical plan servable (``finalize == 'kernel'``, with
+    the plan recorded in ``cn``), and the caller must carry a first moment —
+    the m-less form has no fused pair. One predicate shared by the per-leaf
+    dispatcher and the megaplan psum grouping so they can never disagree on
+    which leaves the kernels own."""
+    return bool(use_first_moment and pl.finalize == "kernel"
+                and pl.cn is not None)
+
+
 def owner_placement(red_shape: Sequence[int], red_spec: P, psum_axes: Sequence[str],
                     mesh: Any) -> Tuple[Tuple[Tuple[str, int], ...], P]:
     """Greedy owner-shard placement for a psum leaf's reduced moment.

@@ -145,14 +145,18 @@ class TestSlimParity:
 
 
 class TestBucketing:
+    # megakernel=False throughout: bucketing lives on the per-leaf dispatch
+    # path the megaplan supersedes (the default grouped path never buckets).
     def test_roundtrip_preserves_leaf_identity(self):
         """Scatter-back: every bucketed leaf keeps its shape, dtype and its
         own values (no cross-leaf bleed at segment boundaries)."""
         key = jax.random.PRNGKey(5)
         params = {f"p{i}": jax.random.normal(jax.random.fold_in(key, i), (5, 3 + i))
                   for i in range(6)}
-        tx_b = scale_by_adam(backend="fused", bucket_min_size=1 << 20)  # bucket all
-        tx_p = scale_by_adam(backend="fused", bucket_min_size=0)        # none
+        tx_b = scale_by_adam(backend="fused", bucket_min_size=1 << 20,
+                             megakernel=False)  # bucket all
+        tx_p = scale_by_adam(backend="fused", bucket_min_size=0,
+                             megakernel=False)  # none
         sb, sp = tx_b.init(params), tx_p.init(params)
         g = _grads(params, 0)
         ub, sb = jax.jit(tx_b.update)(g, sb)
@@ -165,7 +169,7 @@ class TestBucketing:
 
     def test_single_small_leaf_skips_bucket(self):
         params = {"only": jnp.ones((4, 4))}
-        tx = scale_by_adam(backend="fused")
+        tx = scale_by_adam(backend="fused", megakernel=False)
         s = tx.init(params)
         u, s = tx.update(_grads(params, 0), s)
         assert u["only"].shape == (4, 4)
