@@ -1,7 +1,7 @@
 # Every target delegates to scripts/ci.sh — the single source of truth the
 # GitHub workflow calls too, so `make ci` and hosted CI cannot drift.
 
-.PHONY: lint analyze test test-fast bench-quick bench bench-roofline fault-drill ci
+.PHONY: lint analyze test test-fast bench-quick bench bench-roofline bench-serve fault-drill ci
 
 lint:
 	bash scripts/ci.sh lint
@@ -35,6 +35,13 @@ bench:
 # in interpret mode — nothing executes, only the planners run.
 bench-roofline:
 	bash scripts/ci.sh bench-roofline
+
+# Serving fast-path gate: paged KV pool/scheduler/parity test suite + the
+# engine bench (O(1) pallas launches per decode step, chunked prefill >= 4x
+# fewer device steps than token-by-token, greedy output token-identical to
+# the legacy generate() oracle).
+bench-serve:
+	bash scripts/ci.sh bench-serve
 
 # Resilience gate: fault-injection test suite + the end-to-end drill (an
 # injected gpt_small run must complete within 2% of the clean run's eval

@@ -1,0 +1,130 @@
+"""Serving fast-path bench + static gates (paged KV pool, chunked prefill).
+
+Drives the request-level engine over a batch of gpt_small-reduced requests
+and reports tokens/s, mean TTFT, and page-pool utilization, appending the
+machine-readable trajectory to ``results/BENCH_serve.json``. Two gates run
+regardless of wall clock (interp-mode CPU numbers are not load-bearing):
+
+  * **launch gate** — one paged decode step must trace to O(1) pallas
+    launches per attention slot (the page walk lives in the kernel grid,
+    not the HLO), independent of pool size or request count;
+  * **prefill gate** — chunked prefill must cost ``ceil(S/C)`` device steps
+    per request, >= 4x fewer than the token-by-token loop's ``S``;
+  * **parity gate** — greedy paged output token-identical to the legacy
+    ``generate()`` oracle.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--preset quick|full]
+
+Exit code 1 on any gate failure (CI: scripts/ci.sh bench-serve).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.jaxpr_tools import count_pallas_launches
+from repro.configs import get_reduced
+from repro.models import transformer
+from repro.serve import Engine, Request, ServeConfig
+
+from .common import append_bench_history, emit
+
+PREFILL_SPEEDUP_FLOOR = 4.0
+
+
+def main(preset: str = "quick") -> None:
+    n_requests = 6 if preset == "quick" else 16
+    s_prompt, chunk = 32, 8
+    cfg = get_reduced("gpt_small")
+    params, _ = cfg.init(jax.random.PRNGKey(0))
+    sc = ServeConfig(max_seq=64, max_new_tokens=16, max_slots=4,
+                     page_size=8, prefill_chunk=chunk)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (n_requests, s_prompt), 0, cfg.vocab_size))
+    failures = []
+
+    # -- serving run -------------------------------------------------------
+    eng = Engine(cfg, params, sc)
+    rids = [eng.submit(Request(prompt=p)) for p in prompts]
+    t0 = time.monotonic()
+    done = eng.run_until_drained()
+    wall = time.monotonic() - t0
+    tokens = sum(len(done[r].tokens) for r in rids)
+    ttft = float(np.mean([done[r].ttft_s for r in rids]))
+    tok_s = tokens / max(wall, 1e-9)
+    if set(done) != set(rids):
+        failures.append(f"{len(rids) - len(done)} requests never completed")
+    if eng.pool.used_pages != 0:
+        failures.append(f"page leak: {eng.pool.used_pages} pages still "
+                        f"allocated after drain")
+
+    # -- launch gate -------------------------------------------------------
+    n_attn = sum(1 for s in cfg.pattern if s.mixer == "attn")
+    state = transformer.PagedState(
+        pools=eng._device_pools(),
+        table=jnp.asarray(eng.scheduler.table),
+        lengths=jnp.ones((sc.max_slots,), jnp.int32),
+        active=jnp.ones((sc.max_slots,), bool))
+    launches = count_pallas_launches(
+        lambda p, s, t: transformer.paged_decode_step(cfg, p, s, t),
+        params, state, jnp.zeros((sc.max_slots, 1), jnp.int32))
+    if launches != n_attn:
+        failures.append(
+            f"paged decode traces to {launches} pallas launches, expected "
+            f"O(1) = {n_attn} (one per attention slot; the page walk must "
+            f"live in the kernel grid, not the HLO)")
+
+    # -- prefill gate ------------------------------------------------------
+    expected_chunks = n_requests * (-(-s_prompt // chunk))
+    speedup = (n_requests * s_prompt) / max(eng.prefill_chunks, 1)
+    if eng.prefill_chunks != expected_chunks:
+        failures.append(f"prefill took {eng.prefill_chunks} device steps, "
+                        f"expected {expected_chunks} = n_req * ceil(S/C)")
+    if speedup < PREFILL_SPEEDUP_FLOOR:
+        failures.append(f"chunked prefill only {speedup:.1f}x fewer steps "
+                        f"than token-by-token (< {PREFILL_SPEEDUP_FLOOR}x)")
+
+    # -- parity gate -------------------------------------------------------
+    par_prompts = jnp.asarray(prompts[:2])
+    pg = Engine(cfg, params, sc).generate(par_prompts)
+    lg = Engine(cfg, params, ServeConfig(
+        max_seq=sc.max_seq, max_new_tokens=sc.max_new_tokens,
+        paged=False)).generate(par_prompts)
+    if not np.array_equal(np.asarray(pg), np.asarray(lg)):
+        failures.append("greedy paged output differs from the legacy "
+                        "generate() oracle")
+
+    metrics = {
+        "preset": preset, "n_requests": n_requests,
+        "prompt_len": s_prompt, "max_new": sc.max_new_tokens,
+        "tokens": tokens, "wall_s": round(wall, 4),
+        "tokens_per_s": round(tok_s, 2), "ttft_ms": round(ttft * 1e3, 3),
+        "prefill_chunks": eng.prefill_chunks,
+        "prefill_speedup": round(speedup, 2),
+        "decode_steps": eng.decode_steps,
+        "pallas_launches_per_decode": launches,
+        "page_high_water": eng.pool.high_water,
+        "preempted": eng.scheduler.preempted,
+        "greedy_parity": not any("oracle" in f for f in failures),
+        "ok": not failures,
+    }
+    append_bench_history("serve", metrics, name="BENCH_serve.json")
+    emit("serve_decode", wall * 1e6 / max(tokens, 1),
+         f"tok_s={tok_s:.1f};ttft_ms={ttft * 1e3:.1f};"
+         f"prefill_x={speedup:.1f};launches={launches};"
+         f"high_water={eng.pool.high_water}")
+    for f in failures:
+        print(f"SERVE BENCH FAILURE: {f}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=("quick", "full"), default="quick")
+    main(ap.parse_args().preset)

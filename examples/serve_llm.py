@@ -1,14 +1,20 @@
-"""Batched serving demo: prefill + decode with KV/SSM caches across
-architecture families (dense GQA, pure-SSM, hybrid MoE).
+"""Serving demo: the request-level engine over the paged fast path.
 
-    PYTHONPATH=src python examples/serve_llm.py --arch jamba_v01_52b
+Attention-only architectures decode through the paged KV pool (continuous
+batching, chunked prefill, per-request sampling); SSM/hybrid archs fall
+back to the legacy batch loop behind the same Engine.
+
+    PYTHONPATH=src python examples/serve_llm.py --arch smollm_135m
+    PYTHONPATH=src python examples/serve_llm.py --arch jamba_v01_52b  # legacy path
 """
 import argparse
 
 import jax
+import numpy as np
 
 from repro.configs import get_reduced
-from repro.serve import Engine, ServeConfig
+from repro.models.transformer import supports_paged
+from repro.serve import Engine, Request, ServeConfig
 
 
 def main():
@@ -21,14 +27,35 @@ def main():
 
     cfg = get_reduced(args.arch)
     params, _ = cfg.init(jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.new_tokens,
-                                          max_seq=64, temperature=args.temperature))
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, 8), 0, cfg.vocab_size)
-    out = eng.generate(prompts)
-    print(f"arch={args.arch} cache slots={list(cfg.pattern)}")
-    for i, row in enumerate(out):
-        toks = list(map(int, row))
-        print(f"  req{i}: prompt={toks[:8]} -> generated={toks[8:]}")
+    eng = Engine(cfg, params, ServeConfig(max_seq=64, page_size=8,
+                                          max_slots=4, prefill_chunk=8))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, 8), 0, cfg.vocab_size))
+
+    if not supports_paged(cfg):
+        # legacy fallback keeps the old batch surface working
+        eng.sc.max_new_tokens = args.new_tokens
+        eng.sc.temperature = args.temperature
+        out = eng.generate(prompts)
+        print(f"arch={args.arch} path=legacy slots={list(cfg.pattern)}")
+        for i, row in enumerate(out):
+            toks = list(map(int, row))
+            print(f"  req{i}: prompt={toks[:8]} -> generated={toks[8:]}")
+        return
+
+    # request-level API: per-request sampling, ragged completions, metrics
+    rids = [eng.submit(Request(prompt=p, max_new_tokens=args.new_tokens,
+                               temperature=args.temperature, seed=i))
+            for i, p in enumerate(prompts)]
+    done = eng.run_until_drained()
+    print(f"arch={args.arch} path=paged pool={eng.pool.n_pages}x"
+          f"{eng.pool.page_size} high_water={eng.pool.high_water} "
+          f"prefill_chunks={eng.prefill_chunks} decode_steps={eng.decode_steps}")
+    for i, rid in enumerate(rids):
+        c = done[rid]
+        print(f"  req{i}: prompt={list(map(int, c.prompt))} -> "
+              f"generated={list(map(int, c.tokens))} "
+              f"[{c.finish_reason}, ttft={c.ttft_s * 1e3:.0f}ms]")
 
 
 if __name__ == "__main__":

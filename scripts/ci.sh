@@ -32,6 +32,14 @@
 #                                 (writes benchmarks/results/*.csv and
 #                                 appends the machine-readable perf
 #                                 trajectory BENCH_opt_speed.json)
+#   scripts/ci.sh bench-serve     serving fast-path gate: the paged KV
+#                                 pool/scheduler test suite, then the
+#                                 engine bench (benchmarks/serve_bench.py:
+#                                 O(1) pallas launches per decode step,
+#                                 chunked prefill >= 4x fewer device steps
+#                                 than token-by-token, greedy paged output
+#                                 token-identical to the legacy generate()
+#                                 oracle; appends BENCH_serve.json)
 #   scripts/ci.sh fault-drill     resilience gate: the fault-injection test
 #                                 suite (tests/test_guard.py + the hardened
 #                                 checkpoint cases) then the end-to-end drill
@@ -133,6 +141,14 @@ run_bench() {
   python -m benchmarks.run --preset quick
 }
 
+run_bench_serve() {
+  require_jax
+  # Parity/invariant suite first (pinpoints the failing layer), then the
+  # engine bench whose launch/prefill/parity gates run on any backend.
+  python -m pytest -x -q tests/test_serve_paged.py
+  python -m benchmarks.run --preset quick --only serve_bench
+}
+
 run_fault_drill() {
   require_jax
   # Injection suite first (fast, pinpoints the failing layer), then the
@@ -150,9 +166,10 @@ case "$stage" in
   bench-roofline) run_bench_roofline ;;
   bench-quick)    run_bench_quick ;;
   bench)          run_bench ;;
+  bench-serve)    run_bench_serve ;;
   fault-drill)    run_fault_drill ;;
   all)            run_lint; run_analyze; run_test_full; run_bench_roofline; run_bench_quick ;;
   *)
-    echo "usage: scripts/ci.sh [lint|analyze|test-fast|test-full|bench-roofline|bench-quick|bench|fault-drill|all]" >&2
+    echo "usage: scripts/ci.sh [lint|analyze|test-fast|test-full|bench-roofline|bench-quick|bench|bench-serve|fault-drill|all]" >&2
     exit 2 ;;
 esac

@@ -143,16 +143,47 @@ def _norm_block_shape(shape) -> Tuple[int, ...]:
     return tuple(1 if d is None else int(d) for d in tuple(shape))
 
 
-def _index_map_fn(index_map_jaxpr: ClosedJaxpr) -> Callable[..., Tuple[int, ...]]:
-    f = jaxpr_as_fun(index_map_jaxpr)
+def _index_map_fn(index_map_jaxpr: ClosedJaxpr,
+                  scalar_samples: Optional[Sequence[Any]] = None
+                  ) -> Callable[..., Tuple[int, ...]]:
+    """Evaluate an index-map jaxpr at concrete grid indices. Scalar-prefetch
+    kernels (``PrefetchScalarGridSpec``) hand every index map the prefetched
+    operands (page tables, lengths) as extra invars after the grid indices;
+    ``scalar_samples`` supplies concrete sample values for them so the maps
+    stay evaluable device-free. Samples default to zeros of the invar avals
+    — registry entries that alias through a lookup table provide real
+    samples (see ``KernelEntry.scalar_args``) so collision analysis sees
+    representative table contents."""
+    invars = index_map_jaxpr.jaxpr.invars
+    n_out = len(index_map_jaxpr.jaxpr.outvars)
+    try:
+        from jax._src.state.types import AbstractRef as _AbstractRef
+    except ImportError:  # pragma: no cover
+        _AbstractRef = ()
+    if any(isinstance(v.aval, _AbstractRef) for v in invars):
+        # Scalar-prefetch operands arrive as (S)MEM refs whose reads are
+        # stateful `get`s; discharge turns them into plain array inputs
+        # (appending the final ref values to the outputs, truncated below).
+        from jax._src.state.discharge import discharge_state
+        dj, dconsts = discharge_state(index_map_jaxpr.jaxpr,
+                                      index_map_jaxpr.consts)
+        f = jaxpr_as_fun(ClosedJaxpr(dj, dconsts))
+    else:
+        f = jaxpr_as_fun(index_map_jaxpr)
+    extras = tuple(jnp.asarray(s) for s in (scalar_samples or ()))
 
     def call(*idx: int) -> Tuple[int, ...]:
-        return tuple(int(x) for x in f(*(jnp.int32(i) for i in idx)))
+        args = [jnp.int32(i) for i in idx]
+        # invars = [grid indices..., scalar operands...]; fill any operand
+        # slot not covered by a provided sample with aval-shaped zeros
+        for v in invars[len(args):len(invars) - len(extras)]:
+            args.append(jnp.zeros(v.aval.shape, v.aval.dtype))
+        return tuple(int(x) for x in f(*args, *extras)[:n_out])
 
     return call
 
 
-def pallas_info(eqn) -> PallasInfo:
+def pallas_info(eqn, scalar_samples: Optional[Sequence[Any]] = None) -> PallasInfo:
     gm = eqn.params["grid_mapping"]
     body = eqn.params["jaxpr"]
     grid = tuple(int(g) for g in gm.grid)
@@ -179,7 +210,7 @@ def pallas_info(eqn) -> PallasInfo:
             role=role, slot=slot,
             block_shape=_norm_block_shape(bm.block_shape),
             array_shape=tuple(sds.shape), array_dtype=sds.dtype,
-            index_map=_index_map_fn(bm.index_map_jaxpr),
+            index_map=_index_map_fn(bm.index_map_jaxpr, scalar_samples),
         )
 
     blocks_in = [mk("in", i, mappings[i]) for i in range(n_in)]

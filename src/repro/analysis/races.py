@@ -53,6 +53,34 @@ def check_output_races(info: PallasInfo, result: PassResult, where: str) -> None
                        f"instances' contributions")
 
 
+def check_page_table_maps(entry, case, info: PallasInfo, result: PassResult,
+                          where: str) -> None:
+    """Page-table index-map check for the paged-attention family: the pool
+    operand's block index must be *exactly* the scalar-prefetched table
+    lookup ``tbl[b, p]`` (rest of the block index pinned at 0) — anything
+    else (an off-by-one on the page dim, reading the wrong scalar operand,
+    dropping the batch row) silently serves another request's KV pages.
+    Decided by evaluating the map's jaxpr over the full grid against a
+    distinct-valued sample table, the same binding the aliasing analysis
+    uses."""
+    import itertools
+
+    import numpy as np
+
+    table = np.asarray(entry.scalar_args(case)[0])
+    block = info.blocks_in[1]   # arg order: q, pool (scalars precede both)
+    result.checks += 1
+    for pt in itertools.product(*(range(g) for g in info.grid)):
+        got = block.index_map(*pt)
+        want = (int(table[pt[0], pt[1]]),) + (0,) * (len(got) - 1)
+        if got != want:
+            result.add("page-table", where,
+                       f"pool block index at grid {pt} is {got}, expected "
+                       f"the page-table lookup {want} — the kernel would "
+                       f"stream the wrong page")
+            return
+
+
 def _gpt_small_leaf_geometry():
     """(shapes, dtype names, dims) of the full GPT-small param tree — shapes
     via eval_shape (no 124M materialization), dims from the production rule
@@ -179,6 +207,8 @@ def run() -> PassResult:
                 where = registry.signature_key(entry, case, variant)
                 for info in registry.traced_infos(entry, case, variant):
                     check_output_races(info, result, where)
+                    if entry.kind == "paged" and entry.scalar_args:
+                        check_page_table_maps(entry, case, info, result, where)
     check_segment_tables(result)
     result.seconds = time.monotonic() - t0
     return result

@@ -23,11 +23,13 @@ import jax.numpy as jnp
 
 from repro.kernels import fused_adam as _fa
 from repro.kernels import megaplan as _mp
+from repro.kernels import paged_attention as _pa
 from repro.kernels import slim_update as _su
 from repro.kernels import snr_stats as _ss
 from repro.kernels.megaplan import (MEGA_ADAM_BUFS, MEGA_FINALIZE_BUFS,
                                     MEGA_PARTIAL_BUFS, MEGA_PRECOND_BUFS,
                                     MEGA_PRECOND_SNR_BUFS)
+from repro.kernels.paged_attention import PAGED_ATTN_BUFS
 from repro.kernels.slim_update import (FINALIZE_BUFS, PARTIAL_BUFS,
                                        PRECOND_BUFS, PRECOND_SNR_BUFS,
                                        UPDATE_BUFS)
@@ -38,6 +40,7 @@ from .jaxpr_tools import (entry_signature, find_pallas_eqns, pallas_info,
 
 f32 = jnp.float32
 bf16 = jnp.bfloat16
+i32 = jnp.int32
 
 
 class Case(NamedTuple):
@@ -64,10 +67,15 @@ class Variant(NamedTuple):
 class KernelEntry(NamedTuple):
     name: str
     fn: Callable
-    kind: str                       # "strip" | "tile2d"
-    arg_roles: Tuple[str, ...]      # "full" | "line" (strip), "full2d" (tile)
+    kind: str                       # "strip" | "tile2d" | "paged"
+    arg_roles: Tuple[str, ...]      # "full" | "line" (strip), "full2d" (tile),
+                                    # "q" | "pool" | "table" | "lengths" (paged)
     variants: Tuple[Variant, ...]   # variants[0] is the base signature
     cases: Tuple[Case, ...]
+    # Concrete sample values for scalar-prefetch operands (page tables,
+    # lengths) — index maps that read them can't be evaluated from grid
+    # indices alone, so the race/aliasing analysis binds these samples.
+    scalar_args: Optional[Callable[[Case], Tuple]] = None
 
 
 def _dts(n: int, **over):
@@ -112,6 +120,48 @@ _TILE2D_CASES = (
     Case("aligned", (256, 512), None, _dts(4), {}, kept=256, red=512),
     Case("ragged-bf16", (300, 700), None, _dts(4, s0=bf16, s1=bf16), {},
          kept=300, red=700),
+)
+
+# Paged-attention case geometry rides in Case.kwargs (pool pages, page size,
+# kv heads, table width) — static *shape* inputs, not kwargs of the entry;
+# case_kwargs strips them before invocation.
+_PAGED_GEOM = ("pages", "page", "kv", "max_pages")
+
+
+def _paged_case(label: str, b: int, c: int, h: int, kv: int, hd: int,
+                page: int, max_pages: int, *, qdt=f32, pooldt=f32) -> Case:
+    # pool sized so the sample table below can hold b*max_pages distinct
+    # non-null page ids — the page-table index-map check needs injective
+    # samples to be meaningful
+    pages = b * max_pages + 1
+    return Case(label, (b, c, h, hd), None, (qdt, pooldt, i32, i32),
+                {"pages": pages, "page": page, "kv": kv,
+                 "max_pages": max_pages},
+                kept=c * h, red=page * 2 * kv * hd)
+
+
+def _paged_scalar_samples(case: Case):
+    """(table, lengths) samples for the scalar-prefetch index maps: distinct
+    non-null page ids per (row, slot) so aliasing/identity analysis sees a
+    representative table, and ragged lengths including an inactive row."""
+    import numpy as np
+
+    b = case.shape[0]
+    kw = case.kwargs
+    mp, page = kw["max_pages"], kw["page"]
+    table = (1 + np.arange(b * mp, dtype=np.int32)).reshape(b, mp)
+    table %= np.int32(kw["pages"])
+    lengths = np.asarray([(i * (mp * page)) // max(b, 1) for i in range(b)],
+                         np.int32)
+    return table, lengths
+
+
+_PAGED_CASES = (
+    _paged_case("decode", 3, 1, 4, 2, 8, 4, 4),
+    _paged_case("decode-ragged", 2, 1, 4, 2, 8, 4, 5),
+    _paged_case("decode-bf16", 3, 1, 4, 2, 8, 4, 4, qdt=bf16, pooldt=bf16),
+    _paged_case("chunk", 1, 4, 4, 2, 8, 8, 4),
+    _paged_case("chunk-bf16", 1, 4, 4, 2, 8, 8, 4, qdt=bf16, pooldt=bf16),
 )
 
 ENTRIES: Tuple[KernelEntry, ...] = (
@@ -233,6 +283,13 @@ ENTRIES: Tuple[KernelEntry, ...] = (
         (Variant("base", {}, CENTERED_BUFS, "CENTERED_BUFS"),),
         _strip_cases(1, bf16_slots=(0,)),
     ),
+    KernelEntry(
+        "paged_attention", _pa.paged_attention, "paged",
+        ("q", "pool", "table", "lengths"),
+        (Variant("base", {}, PAGED_ATTN_BUFS, "PAGED_ATTN_BUFS"),),
+        _PAGED_CASES,
+        scalar_args=_paged_scalar_samples,
+    ),
 )
 
 ENTRY_MAP: Dict[str, KernelEntry] = {e.name: e for e in ENTRIES}
@@ -246,7 +303,14 @@ def case_args(entry: KernelEntry, case: Case) -> Tuple[jax.ShapeDtypeStruct, ...
             shape = (b, r, 1) if case.axis == 1 else (b, 1, c)
         elif role == "line2d":   # per-row operand of a 2-D tile entry
             shape = (case.shape[0], 1)
-        else:  # "full" (B, R, C) or "full2d" (R, C)
+        elif role == "pool":
+            kw = case.kwargs
+            shape = (kw["pages"], kw["page"], 2 * kw["kv"], case.shape[3])
+        elif role == "table":
+            shape = (case.shape[0], case.kwargs["max_pages"])
+        elif role == "lengths":
+            shape = (case.shape[0],)
+        else:  # "full" (B, R, C), "full2d" (R, C), "q" (B, C, H, hd)
             shape = case.shape
         out.append(jax.ShapeDtypeStruct(shape, dt))
     return tuple(out)
@@ -257,6 +321,9 @@ def case_kwargs(entry: KernelEntry, case: Case, variant: Variant) -> dict:
     kw.update(variant.kwargs)
     if entry.kind == "strip":
         kw["axis"] = case.axis
+    elif entry.kind == "paged":
+        for k in _PAGED_GEOM:
+            kw.pop(k, None)
     return kw
 
 
@@ -296,7 +363,9 @@ def traced_infos(entry: KernelEntry, case: Case, variant: Variant) -> list:
     if key not in _TRACE_CACHE:
         cj = trace_entry(entry.fn, *case_args(entry, case),
                          **case_kwargs(entry, case, variant))
-        _TRACE_CACHE[key] = [pallas_info(e) for e in find_pallas_eqns(cj.jaxpr)]
+        samples = entry.scalar_args(case) if entry.scalar_args else None
+        _TRACE_CACHE[key] = [pallas_info(e, scalar_samples=samples)
+                             for e in find_pallas_eqns(cj.jaxpr)]
     return _TRACE_CACHE[key]
 
 

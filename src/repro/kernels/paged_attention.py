@@ -1,0 +1,193 @@
+"""Ragged paged-attention Pallas kernel (decode + chunked prefill).
+
+The serving fast path stores each attention layer's KV cache as a pool of
+fixed-size *pages* in the fused layout ``(n_pages, page_size, 2 * kv_heads,
+head_dim)`` — K and V interleaved on even/odd head indices so one page DMA
+streams both (see :mod:`repro.serve.kvpool`). A request owns a row of a
+page *table* (``(B, max_pages) int32``; entry 0 is the reserved null page)
+and a ``lengths`` entry saying how many positions are live.
+
+One kernel serves both serving phases:
+
+  * **decode** — ``q`` is ``(B, 1, H, hd)``: each grid row walks its page
+    list and reduces an online softmax across pages;
+  * **chunked prefill** — ``q`` is ``(1, C, H, hd)`` holding C prompt
+    tokens at absolute positions ``length - C .. length - 1``; the causal
+    in-kernel mask (``k_abs <= q_abs``) subsumes the ragged length mask, so
+    prefill costs ``ceil(S/C)`` steps instead of S decode steps.
+
+Grid is ``(B, max_pages)`` with the page dim innermost and *sequential*, so
+Pallas double-buffers the page stream: the next page's DMA (its block index
+comes from the scalar-prefetched table, ``tbl[b, p]``) overlaps the current
+page's compute. The accumulator outputs (acc, m, l) alias one block per
+batch row across the page dim — the same zero-on-first-instance + RMW
+pattern as the health accumulators in :mod:`repro.kernels.slim_update`,
+which the :mod:`repro.analysis.races` pass verifies (including that the
+pool block's index map really is the page-table lookup).
+
+Rows past their page count are skipped (``pl.when``), padded table entries
+point at the null page and are masked by construction, and the final
+``acc / l`` normalization happens outside the kernel, so no blind output
+write exists anywhere.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ops import default_interpret
+from .tiling import COMPUTE_ITEMSIZE, VMEM_BUDGET
+
+NEG_INF = -1e30
+
+# Full-size VMEM blocks the kernel keeps live per instance: the current KV
+# page, the next page's double-buffer in flight, and one compute copy
+# (cast / exp scratch) — q and the accumulator are O(C * H * hd) and charged
+# separately by paged_fits.
+PAGED_ATTN_BUFS = 3
+
+
+def paged_fits(chunk: int, n_heads: int, head_dim: int, page_size: int,
+               kv2: int, *, itemsize: int = COMPUTE_ITEMSIZE) -> bool:
+    """Whether one grid instance's working set fits :data:`VMEM_BUDGET`:
+    ``PAGED_ATTN_BUFS`` page lines (current + prefetched + compute copy)
+    plus the q block, the acc block and the two (C, H) softmax stats, all
+    charged at the f32 compute itemsize (same policy as
+    :func:`repro.kernels.tiling.strip_fits`)."""
+    page_line = page_size * kv2 * head_dim
+    qacc = chunk * n_heads * head_dim
+    stats = chunk * n_heads
+    working = PAGED_ATTN_BUFS * page_line + 2 * qacc + 2 * stats
+    return working * itemsize <= VMEM_BUDGET
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, pool_ref, acc_ref, m_ref, l_ref,
+                  *, page: int, kv: int, rep: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    c = q_ref.shape[1]
+    h = kv * rep
+    hd = q_ref.shape[3]
+    scale = 1.0 / math.sqrt(hd)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    n_pages = (length + page - 1) // page
+
+    @pl.when(p < n_pages)
+    def _page():
+        kv_blk = pool_ref[...].astype(jnp.float32)   # (1, page, 2KV, hd)
+        k = kv_blk[0, :, 0::2, :]                    # (page, KV, hd)
+        v = kv_blk[0, :, 1::2, :]
+        q = q_ref[...].astype(jnp.float32)           # (1, C, H, hd)
+        qg = q[0].reshape(c, kv, rep, hd) * scale
+        s = jnp.einsum("ckrd,pkd->ckrp", qg, k)      # (C, KV, rep, page)
+
+        # Causal/ragged mask in absolute positions: queries sit at the last
+        # C positions of the row, so k <= q also bounds k < length.
+        k_abs = p * page + jnp.arange(page)
+        q_abs = length - c + jnp.arange(c)
+        mask = k_abs[None, :] <= q_abs[:, None]      # (C, page)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+
+        s_flat = s.reshape(1, c, h, page)
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(s_flat, axis=-1))
+        pexp = jnp.exp(s_flat - m_new[..., None])
+        pexp = jnp.where(mask[None, :, None, :], pexp, 0.0)
+        corr = jnp.exp(m_old - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=-1)
+        pv = jnp.einsum("ckrp,pkd->ckrd",
+                        pexp[0].reshape(c, kv, rep, page), v)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv.reshape(1, c, h, hd)
+        m_ref[...] = m_new
+
+
+def paged_attention_ref(q: jnp.ndarray, pool: jnp.ndarray, table: jnp.ndarray,
+                        lengths: jnp.ndarray) -> jnp.ndarray:
+    """jnp oracle / fallback: gather every table page densely and run a full
+    masked softmax. O(max_pages * page) memory per row — correct everywhere,
+    used when :func:`paged_fits` rejects the geometry and as the parity
+    oracle in tests."""
+    b, c, h, hd = q.shape
+    _, page, kv2, _ = pool.shape
+    kv = kv2 // 2
+    rep = h // kv
+    gathered = pool[table].astype(jnp.float32)   # (B, max_pages, page, 2KV, hd)
+    s_max = table.shape[1] * page
+    k = gathered[:, :, :, 0::2, :].reshape(b, s_max, kv, hd)
+    v = gathered[:, :, :, 1::2, :].reshape(b, s_max, kv, hd)
+    qg = q.astype(jnp.float32).reshape(b, c, kv, rep, hd) / math.sqrt(hd)
+    s = jnp.einsum("bckrd,bpkd->bckrp", qg, k)
+    q_abs = lengths[:, None] - c + jnp.arange(c)[None, :]      # (B, C)
+    mask = jnp.arange(s_max)[None, None, :] <= q_abs[:, :, None]
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    pexp = jnp.where(mask[:, :, None, None, :], jnp.exp(s), 0.0)
+    num = jnp.einsum("bckrp,bpkd->bckrd", pexp, v)
+    den = jnp.maximum(jnp.sum(pexp, axis=-1), 1e-30)
+    return (num / den[..., None]).reshape(b, c, h, hd).astype(q.dtype)
+
+
+def paged_attention(q: jnp.ndarray, pool: jnp.ndarray, table: jnp.ndarray,
+                    lengths: jnp.ndarray, *,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Ragged paged attention over a fused-layout page pool.
+
+    q: (B, C, H, hd) — C == 1 for decode, C == chunk for chunked prefill
+    (queries at absolute positions ``lengths - C .. lengths - 1``).
+    pool: (n_pages, page, 2 * KV, hd), K/V on even/odd head indices.
+    table: (B, max_pages) int32 page ids (0 = null page for padding).
+    lengths: (B,) int32 live positions per row (0 = inactive row -> zeros).
+
+    Returns (B, C, H, hd) in q.dtype. Falls back to the dense jnp reference
+    when the geometry exceeds the VMEM fit gate.
+    """
+    b, c, h, hd = q.shape
+    _, page, kv2, hd2 = pool.shape
+    assert hd2 == hd and kv2 % 2 == 0, (pool.shape, q.shape)
+    kv = kv2 // 2
+    assert h % kv == 0, (h, kv)
+    rep = h // kv
+    max_pages = table.shape[1]
+    if not paged_fits(c, h, hd, page, kv2):
+        return paged_attention_ref(q, pool, table, lengths)
+
+    kernel = functools.partial(_paged_kernel, page=page, kv=kv, rep=rep)
+    f32 = jnp.float32
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, max_pages),
+            in_specs=[
+                pl.BlockSpec((1, c, h, hd), lambda bi, p, tbl, ln: (bi, 0, 0, 0)),
+                pl.BlockSpec((1, page, kv2, hd),
+                             lambda bi, p, tbl, ln: (tbl[bi, p], 0, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, c, h, hd), lambda bi, p, tbl, ln: (bi, 0, 0, 0)),
+                pl.BlockSpec((1, c, h), lambda bi, p, tbl, ln: (bi, 0, 0)),
+                pl.BlockSpec((1, c, h), lambda bi, p, tbl, ln: (bi, 0, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, h, hd), f32),
+            jax.ShapeDtypeStruct((b, c, h), f32),
+            jax.ShapeDtypeStruct((b, c, h), f32),
+        ],
+        interpret=default_interpret() if interpret is None else interpret,
+    )(table, lengths, q, pool)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

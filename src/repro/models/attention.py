@@ -393,6 +393,85 @@ def _quantize_kv(x: jnp.ndarray):
     return q.astype(jnp.int8), scale
 
 
+# ---------------------------------------------------------------------------
+# Paged serving path: KV lives in a page pool (repro.serve.kvpool layout:
+# (n_pages, page_size, 2*KV, hd), K/V interleaved on even/odd head indices),
+# addressed through a per-request page table. Decode and chunked prefill both
+# reduce through the same ragged Pallas kernel.
+# ---------------------------------------------------------------------------
+
+
+def _fused_kv_rows(k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """k, v: (N, KV, hd) -> (N, 2*KV, hd) with K on even / V on odd head
+    indices — one scatter writes both halves of a page row."""
+    n, kv, hd = k.shape
+    return jnp.stack([k, v], axis=2).reshape(n, 2 * kv, hd)
+
+
+def attention_paged_decode(p, x: jnp.ndarray, pool: jnp.ndarray,
+                           table: jnp.ndarray, lengths: jnp.ndarray,
+                           active: jnp.ndarray, cfg: AttnConfig,
+                           *, interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token paged decode. x: (B, 1, D); pool: (pages, P, 2KV, hd);
+    table: (B, max_pages); lengths: (B,) positions already stored. Writes the
+    new token's K/V at position ``lengths`` (inactive rows are routed to the
+    reserved null page 0, which no table entry of a live row ever points at),
+    then attends over ``lengths + 1`` positions. Returns (y (B, 1, D), pool).
+    """
+    from ..kernels.paged_attention import paged_attention
+
+    b = x.shape[0]
+    pos = lengths
+    rope_sincos = None
+    if cfg.rope:
+        rope_sincos = rotary_embedding(pos[:, None], cfg.head_dim, cfg.rope_base)
+    q, k_new, v_new = _project_qkv(p, x, rope_sincos, None)
+
+    page_size = pool.shape[1]
+    page = jnp.where(active, table[jnp.arange(b), pos // page_size], 0)
+    kv_rows = _fused_kv_rows(k_new[:, 0], v_new[:, 0])
+    pool = pool.at[page, pos % page_size].set(kv_rows.astype(pool.dtype))
+
+    kv_len = jnp.where(active, pos + 1, 0).astype(jnp.int32)
+    out = paged_attention(q, pool, table, kv_len, interpret=interpret)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "act_embed"), pool
+
+
+def attention_paged_prefill(p, x: jnp.ndarray, pool: jnp.ndarray,
+                            table_row: jnp.ndarray, pos0, n_valid,
+                            cfg: AttnConfig,
+                            *, interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One chunk of paged prefill for a single request. x: (1, C, D) holding
+    the prompt tokens at absolute positions ``pos0 .. pos0 + C - 1``;
+    positions at chunk index >= ``n_valid`` are padding — their K/V writes are
+    routed to the null page and their outputs are garbage nobody reads (the
+    caller samples at chunk index ``n_valid - 1``). The in-kernel causal mask
+    ``k_abs <= q_abs`` keeps every *valid* query's reduction inside the
+    row's live pages. Returns (y (1, C, D), pool)."""
+    from ..kernels.paged_attention import paged_attention
+
+    c = x.shape[1]
+    positions = pos0 + jnp.arange(c)
+    rope_sincos = None
+    if cfg.rope:
+        rope_sincos = rotary_embedding(positions, cfg.head_dim, cfg.rope_base)
+    q, k_new, v_new = _project_qkv(p, x, rope_sincos, None)
+
+    page_size = pool.shape[1]
+    max_pages = table_row.shape[1]
+    pidx = jnp.clip(positions // page_size, 0, max_pages - 1)
+    valid = jnp.arange(c) < n_valid
+    page = jnp.where(valid, table_row[0, pidx], 0)
+    kv_rows = _fused_kv_rows(k_new[0], v_new[0])
+    pool = pool.at[page, positions % page_size].set(kv_rows.astype(pool.dtype))
+
+    kv_len = jnp.asarray(pos0 + c, jnp.int32)[None]
+    out = paged_attention(q, pool, table_row, kv_len, interpret=interpret)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "act_embed"), pool
+
+
 def attention_decode(p, x: jnp.ndarray, cache: KVCache, cfg: AttnConfig) -> Tuple[jnp.ndarray, KVCache]:
     """One-token decode: x (B, 1, D), cache holds `index` previous positions."""
     b, s1, d = x.shape

@@ -378,3 +378,152 @@ def decode_step(cfg: ModelConfig, params, cache: DecodeCache, tokens: jnp.ndarra
     x = _norm(cfg, params["final_norm"], x)
     logits = _unembed(cfg, params, x)
     return logits, DecodeCache(slots=new_slot_caches, step=cache.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (serving fast path)
+#
+# KV lives in per-slot page *pools* shared by every in-flight request and
+# addressed through a per-slot-row page table (repro.serve.kvpool owns the
+# host-side allocation; repro.kernels.paged_attention does the ragged
+# reduction). Unlike DecodeCache there is no per-request (B, S_max) buffer —
+# admitting or retiring a request costs zero device reallocation, which is
+# what makes continuous batching (repro.serve.scheduler) a pure host-side
+# bookkeeping loop over fixed-shape jit calls.
+# ---------------------------------------------------------------------------
+
+
+class PagedState(NamedTuple):
+    """Device state for the paged decode path.
+
+    pools:   {'slot_i': (n_periods, n_pages, page, 2*KV, hd)} per attn slot
+    table:   (B, max_pages) int32 page ids; entry 0 = reserved null page
+    lengths: (B,) int32 positions already stored per batch row
+    active:  (B,) bool — inactive rows write to the null page and attend
+             over 0 positions (their logits are garbage nobody samples)
+    """
+
+    pools: Dict[str, jnp.ndarray]
+    table: jnp.ndarray
+    lengths: jnp.ndarray
+    active: jnp.ndarray
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """The paged fast path covers token-in/token-out attention-only stacks.
+    SSM/hybrid mixers carry recurrent (not positional) state and int8 KV
+    pages are future work, so those fall back to the legacy decode loop."""
+    return (cfg.embed_inputs and not cfg.kv_quant
+            and all(s.mixer in ("attn", None) for s in cfg.pattern)
+            and any(s.mixer == "attn" for s in cfg.pattern))
+
+
+def init_paged_pools(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """One fused-layout page pool per attention slot, stacked over periods.
+    Page 0 of every pool is the reserved null page (scatter target for
+    inactive/padded writes; never read because those rows report length 0)."""
+    pools: Dict[str, jnp.ndarray] = {}
+    for i, slot in enumerate(cfg.pattern):
+        if slot.mixer == "attn":
+            pools[f"slot_{i}"] = jnp.zeros(
+                (cfg.n_periods, n_pages, page_size, 2 * cfg.n_kv_heads, cfg.hd),
+                dtype)
+    return pools
+
+
+def paged_decode_step(cfg: ModelConfig, params, state: PagedState,
+                      tokens: jnp.ndarray):
+    """One new token for every active batch row. tokens: (B, 1) int32.
+
+    Returns (logits (B, 1, vocab), new PagedState) — lengths advance only on
+    active rows, so a freshly-retired slot can sit idle at no cost. Pools
+    ride in the scan carry exactly like DecodeCache buffers (aliasing across
+    periods keeps live memory at one pool set, not one per period).
+    """
+    from .attention import attention_paged_decode
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.pos == "learned":
+        posv = jnp.clip(state.lengths, 0, cfg.max_position - 1)
+        x = x + jnp.take(params["pos_embed"], posv, axis=0)[:, None].astype(cfg.dtype)
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    def period_body(carry, operand):
+        x, pools = carry
+        period_params, idx = operand
+        for i, slot in enumerate(cfg.pattern):
+            key = f"slot_{i}"
+            p = period_params[key]
+            if slot.mixer == "attn":
+                pool = jax.lax.dynamic_index_in_dim(pools[key], idx, 0, keepdims=False)
+                y, pool = attention_paged_decode(
+                    p["attn"], _norm(cfg, p["mixer_norm"], x), pool,
+                    state.table, state.lengths, state.active, cfg.attn_cfg())
+                x = x + y
+                pools = dict(pools)
+                pools[key] = jax.lax.dynamic_update_index_in_dim(pools[key], pool, idx, 0)
+            if slot.ffn == "dense":
+                x = x + mlp_forward(p["mlp"], _norm(cfg, p["ffn_norm"], x), gated=cfg.gated_mlp)
+            elif slot.ffn == "moe":
+                y, _ = moe_forward(p["moe"], _norm(cfg, p["ffn_norm"], x), cfg.moe_cfg())
+                x = x + y
+        return (x, pools), None
+
+    idxs = jnp.arange(cfg.n_periods)
+    (x, pools), _ = jax.lax.scan(period_body, (x, state.pools), (params["blocks"], idxs))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, PagedState(
+        pools=pools, table=state.table,
+        lengths=state.lengths + state.active.astype(jnp.int32),
+        active=state.active)
+
+
+def paged_prefill_chunk(cfg: ModelConfig, params, pools: Dict[str, jnp.ndarray],
+                        table_row: jnp.ndarray, pos0, n_valid,
+                        tokens: jnp.ndarray):
+    """Prefill one chunk of one request's prompt through the paged kernel.
+
+    tokens: (1, C) int32 at absolute positions ``pos0 .. pos0 + C - 1``;
+    chunk indices >= ``n_valid`` are padding (K/V routed to the null page).
+    ``pos0`` / ``n_valid`` are traced scalars, so every chunk of every
+    request reuses one jit executable. Returns (logits (1, C, vocab), pools);
+    the caller samples the first generated token at chunk index
+    ``n_valid - 1`` of the final chunk.
+    """
+    from .attention import attention_paged_prefill
+
+    c = tokens.shape[1]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.pos == "learned":
+        posv = jnp.clip(pos0 + jnp.arange(c), 0, cfg.max_position - 1)
+        x = x + jnp.take(params["pos_embed"], posv, axis=0)[None].astype(cfg.dtype)
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    def period_body(carry, operand):
+        x, pools = carry
+        period_params, idx = operand
+        for i, slot in enumerate(cfg.pattern):
+            key = f"slot_{i}"
+            p = period_params[key]
+            if slot.mixer == "attn":
+                pool = jax.lax.dynamic_index_in_dim(pools[key], idx, 0, keepdims=False)
+                y, pool = attention_paged_prefill(
+                    p["attn"], _norm(cfg, p["mixer_norm"], x), pool,
+                    table_row, pos0, n_valid, cfg.attn_cfg())
+                x = x + y
+                pools = dict(pools)
+                pools[key] = jax.lax.dynamic_update_index_in_dim(pools[key], pool, idx, 0)
+            if slot.ffn == "dense":
+                x = x + mlp_forward(p["mlp"], _norm(cfg, p["ffn_norm"], x), gated=cfg.gated_mlp)
+            elif slot.ffn == "moe":
+                y, _ = moe_forward(p["moe"], _norm(cfg, p["ffn_norm"], x), cfg.moe_cfg())
+                x = x + y
+        return (x, pools), None
+
+    idxs = jnp.arange(cfg.n_periods)
+    (x, pools), _ = jax.lax.scan(period_body, (x, pools), (params["blocks"], idxs))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, pools

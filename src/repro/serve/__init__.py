@@ -1,2 +1,53 @@
-from .engine import Engine, ServeConfig
-__all__ = ["Engine", "ServeConfig"]
+"""Serving: request-level engine, paged KV pool, continuous batching.
+
+Serving fast path
+-----------------
+
+The fast path replaces per-request dense ``(B, S_max)`` KV caches with a
+shared **page pool** per attention slot:
+
+    pool:  (n_pages, page_size, 2 * kv_heads, head_dim)   one per layer slot
+    table: (max_slots, max_pages) int32                   page ids per row
+    page 0 = reserved null page (padding / inactive-row scatter target)
+
+K and V for one position are fused in one page row (K even / V odd head
+indices), so the ragged Pallas decode kernel
+(:mod:`repro.kernels.paged_attention`) streams each page with a single
+double-buffered block DMA, walking the row's page table via scalar
+prefetch. Chunked prefill pushes ``prefill_chunk`` prompt tokens through
+the same kernel per step — ``ceil(S/chunk)`` launches instead of ``S``.
+
+The scheduler loop (:mod:`repro.serve.scheduler`) keeps the fixed-shape
+device state busy: admit queued requests into free slots when their pages
+fit, lazily grow one page per crossed boundary, preempt the youngest
+request on pool exhaustion (recompute on re-admit; sampled tokens ride
+along as prompt extension), retire on eos/length/wall-budget and return
+pages to the freelist *immediately* so waiting requests can join mid-batch.
+
+Migrating from ``generate()``
+-----------------------------
+
+Old surface (still works, now a thin deprecated wrapper)::
+
+    Engine(cfg, params, ServeConfig(temperature=0.7)).generate(prompts)
+
+New request-level surface — sampling is per-request, completions are
+ragged and carry finish reasons + latency::
+
+    eng = Engine(cfg, params, ServeConfig(max_seq=256, page_size=16))
+    rid = eng.submit(Request(prompt=toks, max_new_tokens=64,
+                             eos_id=2, temperature=0.7, seed=1))
+    for c in eng.run_until_drained().values():
+        print(c.finish_reason, c.ttft_s, c.tokens)
+
+Architectures the paged path does not cover (SSM/hybrid mixers, int8 KV)
+transparently fall back to the legacy token-by-token batch loop; forcing
+``ServeConfig(paged=False)`` turns that loop into a parity oracle for the
+fast path (tests/test_serve_paged.py).
+"""
+from .engine import Completion, Engine, Request, ServeConfig
+from .kvpool import KVPool, PoolExhausted
+from .scheduler import Scheduler
+
+__all__ = ["Engine", "ServeConfig", "Request", "Completion",
+           "KVPool", "PoolExhausted", "Scheduler"]

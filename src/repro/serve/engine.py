@@ -1,39 +1,399 @@
-"""Batched serving: prefill + decode loop over the unified model zoo.
+"""Request-level serving engine: paged fast path + legacy fallback loop.
 
-Greedy/temperature sampling, continuous batch of requests, sharded KV/SSM
-caches (the decode_32k / long_500k dry-run cells lower exactly this step).
+The public surface is request-oriented:
+
+    eng = Engine(cfg, params, ServeConfig(max_seq=256))
+    rid = eng.submit(Request(prompt=tokens, max_new_tokens=64, eos_id=2))
+    completions = eng.run_until_drained()       # {rid: Completion}
+
+``submit`` enqueues; ``step`` runs one scheduler iteration (admit queued
+requests into free slots, chunk-prefill them, one batched paged decode for
+every active slot, retire finished ones); ``run_until_drained`` loops step
+until nothing is queued or active. Per-request sampling (temperature,
+seed) lives on the :class:`Request`; :class:`ServeConfig` keeps the
+engine-wide geometry (max_seq, page/pool sizing, slot count, wall budget).
+
+Architectures outside the paged fast path's coverage (SSM/hybrid mixers,
+int8 KV) fall back to the legacy batch loop transparently;
+:meth:`Engine.generate` is kept as a thin compatibility wrapper over the
+request API (deprecated for new code — it hides per-request raggedness by
+padding).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 import warnings
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..models import transformer
+from .kvpool import KVPool
+from .scheduler import Scheduler
 
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Engine-wide serving geometry. ``temperature``/``seed`` remain only
+    as defaults for requests that don't set their own (the pre-request-API
+    surface); new code should put sampling on the :class:`Request`."""
     max_new_tokens: int = 32
     max_seq: int = 512
-    temperature: float = 0.0   # 0 = greedy
-    seed: int = 0
+    temperature: float = 0.0   # deprecated default; see Request.temperature
+    seed: int = 0              # deprecated default; see Request.seed
     # Per-request wall-clock budget (seconds). A pathological decode loop —
     # a recompile storm, an overloaded host — degrades to a *truncated*
     # response with a warning instead of hanging the caller. None = no cap.
     max_wall_s: Optional[float] = None
+    # Paged fast path geometry
+    page_size: int = 16        # token positions per KV page
+    pool_pages: Optional[int] = None   # None -> max_slots * pages(max_seq) + 1
+    max_slots: int = 8         # fixed decode batch width
+    prefill_chunk: int = 8     # prompt tokens per chunked-prefill step
+    # None -> auto (paged when the arch supports it); False forces the
+    # legacy token-by-token loop (the parity oracle in tests)
+    paged: Optional[bool] = None
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``temperature``/``seed`` default to the
+    engine's ServeConfig when None."""
+    prompt: object                       # (S,) int tokens (list/np/jnp)
+    max_new_tokens: Optional[int] = None
+    eos_id: Optional[int] = None
+    temperature: Optional[float] = None
+    seed: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    """Result of one request. ``tokens`` holds only the *generated* suffix
+    (including the eos token when one was emitted)."""
+    id: int
+    prompt: np.ndarray
+    tokens: np.ndarray
+    finish_reason: str                   # 'eos' | 'length' | 'budget'
+    ttft_s: Optional[float]              # submit -> first token
+    wall_s: float                        # submit -> retirement
+    preemptions: int = 0
+
+
+class _ReqState:
+    """Host-side decode state for one in-flight request."""
+
+    __slots__ = ("rid", "request", "prompt", "max_new", "generated",
+                 "ctx_len", "t_submit", "t_first", "preemptions")
+
+    def __init__(self, rid: int, request: Request, prompt: np.ndarray,
+                 max_new: int):
+        self.rid = rid
+        self.request = request
+        self.prompt = prompt
+        self.max_new = max_new
+        self.generated: List[int] = []
+        self.ctx_len = 0          # KV positions written on device
+        self.t_submit = time.monotonic()
+        self.t_first: Optional[float] = None
+        self.preemptions = 0
+
+    def ctx_tokens(self) -> np.ndarray:
+        """Tokens whose KV must exist before decoding can continue — the
+        prompt plus everything generated so far (preemption recompute
+        prefills this whole extended prompt, losing no sampled token)."""
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
 
 
 class Engine:
-    def __init__(self, model_cfg, params, sc: ServeConfig = ServeConfig()):
+    def __init__(self, model_cfg, params, sc: Optional[ServeConfig] = None):
         self.cfg = model_cfg
         self.params = params
-        self.sc = sc
-        self._decode = jax.jit(lambda p, c, t: transformer.decode_step(model_cfg, p, c, t))
+        self.sc = sc if sc is not None else ServeConfig()
+        self._paged = (self.sc.paged if self.sc.paged is not None
+                       else transformer.supports_paged(model_cfg))
+        self._next_rid = 0
+        self._reqs: Dict[int, _ReqState] = {}
+        self._done: Dict[int, Completion] = {}
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self.tokens_out = 0
+        if self._paged:
+            p = self.sc.page_size
+            max_pages = -(-self.sc.max_seq // p)
+            n_pages = (self.sc.pool_pages if self.sc.pool_pages is not None
+                       else self.sc.max_slots * max_pages + 1)
+            self.pool = KVPool(n_pages, p)
+            self.scheduler = Scheduler(self.sc.max_slots, max_pages, self.pool)
+            self._pools = None     # device pools, created on first use
+            self._decode = jax.jit(
+                lambda pr, st, t: transformer.paged_decode_step(model_cfg, pr, st, t))
+            self._prefill = jax.jit(
+                lambda pr, pools, row, pos0, nv, tok:
+                transformer.paged_prefill_chunk(model_cfg, pr, pools, row,
+                                                pos0, nv, tok))
+        else:
+            self._decode = jax.jit(
+                lambda pr, c, t: transformer.decode_step(model_cfg, pr, c, t))
+
+    # ------------------------------------------------------------------
+    # Request API
+    # ------------------------------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        """Validate and enqueue one request; returns its id. Raises
+        ValueError when the prompt cannot fit ``max_seq`` or the whole
+        request could never fit the page pool even alone."""
+        if not self._paged:
+            raise NotImplementedError(
+                f"the request API needs the paged fast path, which does not "
+                f"cover arch '{self.cfg.name}' — use generate()")
+        prompt = np.asarray(request.prompt, np.int32).reshape(-1)
+        n_prompt = prompt.shape[0]
+        budget = self.sc.max_seq - n_prompt
+        if budget <= 0:
+            raise ValueError(
+                f"prompt length {n_prompt} leaves no room to generate within "
+                f"max_seq={self.sc.max_seq}")
+        max_new = (request.max_new_tokens if request.max_new_tokens is not None
+                   else self.sc.max_new_tokens)
+        if max_new > budget:
+            warnings.warn(
+                f"truncating max_new_tokens {max_new} -> {budget}: "
+                f"prompt length {n_prompt} + requested tokens would overrun "
+                f"the max_seq={self.sc.max_seq} cache")
+            max_new = budget
+        need = self.pool.pages_for(n_prompt + max_new)
+        if need > self.pool.capacity:
+            raise ValueError(
+                f"request needs {need} KV pages but the pool holds only "
+                f"{self.pool.capacity} — raise pool_pages or shrink the "
+                f"request")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._reqs[rid] = _ReqState(rid, request, prompt, max_new)
+        self.scheduler.submit(rid)
+        return rid
+
+    def step(self) -> Dict[str, float]:
+        """One scheduler iteration: admit + prefill, grow/preempt, one
+        batched decode, retire. Returns per-step metrics."""
+        if not self._paged:
+            raise NotImplementedError(
+                f"the request API needs the paged fast path, which does not "
+                f"cover arch '{self.cfg.name}' — use generate()")
+        sched = self.scheduler
+        prefills = 0
+        # --- admit as many queue heads as slots/pages allow
+        while sched.queue:
+            rid = sched.queue[0]
+            st = self._reqs[rid]
+            slot = sched.try_admit(rid, len(st.ctx_tokens()))
+            if slot is None:
+                break
+            prefills += 1
+            self._prefill_into(slot, st)
+
+        # --- make room for every active row's next write position
+        ensured: List[int] = []
+        for slot, rid in list(sched.active_slots()):
+            if sched.slot_rid[slot] != rid:
+                continue               # evicted by an earlier row's preempt
+            st = self._reqs[rid]
+            while True:
+                if sched.ensure_capacity(slot, st.ctx_len):
+                    ensured.append(slot)
+                    break
+                victim = sched.youngest_other(slot, tuple(ensured))
+                vrid = sched.preempt(victim if victim is not None else slot)
+                self._reqs[vrid].preemptions += 1
+                if victim is None:
+                    break              # self-preempted; skip decode this step
+
+        # --- one fixed-shape decode over all active slots
+        step_tokens = 0
+        active = sched.active_slots()
+        if active:
+            n = self.sc.max_slots
+            tokens = np.zeros((n, 1), np.int32)
+            lengths = np.zeros((n,), np.int32)
+            mask = np.zeros((n,), bool)
+            for slot, rid in active:
+                st = self._reqs[rid]
+                tokens[slot, 0] = st.generated[-1]
+                lengths[slot] = st.ctx_len
+                mask[slot] = True
+            state = transformer.PagedState(
+                pools=self._device_pools(), table=jnp.asarray(sched.table),
+                lengths=jnp.asarray(lengths), active=jnp.asarray(mask))
+            logits, new_state = self._decode(self.params, state,
+                                             jnp.asarray(tokens))
+            self._pools = new_state.pools
+            self.decode_steps += 1
+            last = np.asarray(logits[:, -1].astype(jnp.float32))
+            now = time.monotonic()
+            for slot, rid in active:
+                st = self._reqs[rid]
+                st.ctx_len += 1        # this step wrote generated[-1]'s KV
+                tok = self._sample_one(st, last[slot])
+                st.generated.append(tok)
+                step_tokens += 1
+                eos = st.request.eos_id
+                if eos is not None and tok == eos:
+                    self._retire(slot, st, "eos")
+                elif len(st.generated) >= st.max_new:
+                    self._retire(slot, st, "length")
+                elif (self.sc.max_wall_s is not None
+                      and now - st.t_submit > self.sc.max_wall_s):
+                    warnings.warn(
+                        f"serve request exceeded wall-clock budget "
+                        f"max_wall_s={self.sc.max_wall_s} after "
+                        f"{len(st.generated)}/{st.max_new} tokens; returning "
+                        f"truncated response")
+                    self._retire(slot, st, "budget")
+        self.tokens_out += step_tokens
+        m = sched.metrics()
+        m.update(step_tokens=float(step_tokens), prefills=float(prefills))
+        return m
+
+    def run_until_drained(self) -> Dict[int, Completion]:
+        """Step until every submitted request has retired; returns and
+        clears the accumulated completions."""
+        sched = self.scheduler
+        while sched.queue or sched.active_slots():
+            before = (self.tokens_out, sched.admitted, sched.retired,
+                      sched.preempted)
+            self.step()
+            after = (self.tokens_out, sched.admitted, sched.retired,
+                     sched.preempted)
+            if before == after:
+                raise RuntimeError(
+                    "scheduler made no progress — slot/page accounting bug "
+                    f"(queue={len(sched.queue)}, "
+                    f"active={len(sched.active_slots())}, "
+                    f"free_pages={self.pool.free_pages})")
+        done, self._done = self._done, {}
+        return done
+
+    def completions(self) -> Dict[int, Completion]:
+        """Completions retired so far (without draining the batch)."""
+        done, self._done = self._done, {}
+        return done
+
+    # ------------------------------------------------------------------
+    # Paged internals
+    # ------------------------------------------------------------------
+
+    def _pool_dtype(self):
+        return jnp.float32 if self.cfg.dtype == jnp.float32 else jnp.bfloat16
+
+    def _device_pools(self):
+        if self._pools is None:
+            self._pools = transformer.init_paged_pools(
+                self.cfg, self.pool.n_pages, self.pool.page_size,
+                self._pool_dtype())
+        return self._pools
+
+    def _prefill_into(self, slot: int, st: _ReqState) -> None:
+        """Chunk-prefill a freshly admitted request's whole known context
+        (prompt + any pre-preemption tokens) and sample its next token."""
+        ctx = st.ctx_tokens()
+        n_ctx = ctx.shape[0]
+        chunk = self.sc.prefill_chunk
+        n_chunks = -(-n_ctx // chunk)
+        row = jnp.asarray(self.scheduler.table[slot:slot + 1])
+        logits = None
+        n_valid = chunk
+        for k in range(n_chunks):
+            lo = k * chunk
+            n_valid = min(chunk, n_ctx - lo)
+            buf = np.zeros((1, chunk), np.int32)
+            buf[0, :n_valid] = ctx[lo:lo + n_valid]
+            logits, pools = self._prefill(
+                self.params, self._device_pools(), row,
+                np.int32(lo), np.int32(n_valid), jnp.asarray(buf))
+            self._pools = pools
+            self.prefill_chunks += 1
+            if (self.sc.max_wall_s is not None
+                    and time.monotonic() - st.t_submit > self.sc.max_wall_s):
+                warnings.warn(
+                    f"serve request exceeded wall-clock budget "
+                    f"max_wall_s={self.sc.max_wall_s} during prefill "
+                    f"({k + 1}/{n_chunks} chunks); returning prompt only")
+                st.ctx_len = lo + n_valid
+                self._retire(slot, st, "budget")
+                return
+        st.ctx_len = n_ctx
+        row_logits = np.asarray(logits[0, n_valid - 1].astype(jnp.float32))
+        tok = self._sample_one(st, row_logits)
+        st.generated.append(tok)
+        self.tokens_out += 1
+        eos = st.request.eos_id
+        if eos is not None and tok == eos:
+            self._retire(slot, st, "eos")
+        elif len(st.generated) >= st.max_new:
+            self._retire(slot, st, "length")
+
+    def _sample_one(self, st: _ReqState, logits_row: np.ndarray) -> int:
+        if st.t_first is None:
+            st.t_first = time.monotonic()
+        temp = (st.request.temperature if st.request.temperature is not None
+                else self.sc.temperature)
+        if temp <= 0.0:
+            return int(np.argmax(logits_row))
+        seed = st.request.seed if st.request.seed is not None else self.sc.seed
+        # fold the token index into the request's key: resampling the same
+        # index after a preemption recompute reproduces the same token
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), len(st.generated))
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits_row, jnp.float32) / temp))
+
+    def _retire(self, slot: int, st: _ReqState, reason: str) -> None:
+        self.scheduler.retire(slot)
+        now = time.monotonic()
+        self._done[st.rid] = Completion(
+            id=st.rid, prompt=st.prompt,
+            tokens=np.asarray(st.generated, np.int32),
+            finish_reason=reason,
+            ttft_s=None if st.t_first is None else st.t_first - st.t_submit,
+            wall_s=now - st.t_submit, preemptions=st.preemptions)
+        del self._reqs[st.rid]
+
+    # ------------------------------------------------------------------
+    # Compatibility wrapper (pre-request-API surface)
+    # ------------------------------------------------------------------
+
+    def generate(self, prompts: jnp.ndarray, *, eos_id: Optional[int] = None) -> jnp.ndarray:
+        """prompts: (B, S_prompt) int32 -> (B, S_prompt + new) tokens.
+
+        Deprecated compatibility wrapper: submits one :class:`Request` per
+        row and pads the ragged completions back into a rectangle (eos_id —
+        or 0 — as filler), which is what the old batch loop produced. New
+        code should use submit/step/run_until_drained directly.
+        """
+        if not self._paged:
+            return self._generate_legacy(prompts, eos_id=eos_id)
+        prompts = jnp.asarray(prompts)
+        b, s_prompt = prompts.shape
+        host_prompts = np.asarray(prompts)
+        rids = [self.submit(Request(prompt=host_prompts[i], eos_id=eos_id))
+                for i in range(b)]
+        done = self.run_until_drained()
+        rows = [np.concatenate([host_prompts[i], done[rid].tokens])
+                for i, rid in enumerate(rids)]
+        width = max(len(r) for r in rows)
+        fill = eos_id if eos_id is not None else 0
+        out = np.full((b, width), fill, np.int32)
+        for i, r in enumerate(rows):
+            out[i, :len(r)] = r
+        return jnp.asarray(out)
+
+    # ------------------------------------------------------------------
+    # Legacy batch loop (SSM/hybrid archs; paged=False parity oracle)
+    # ------------------------------------------------------------------
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         if self.sc.temperature <= 0.0:
@@ -41,13 +401,9 @@ class Engine:
         probs = jax.nn.softmax(logits[:, -1].astype(jnp.float32) / self.sc.temperature, axis=-1)
         return jax.random.categorical(key, jnp.log(probs + 1e-9), axis=-1).astype(jnp.int32)[:, None]
 
-    def generate(self, prompts: jnp.ndarray, *, eos_id: Optional[int] = None) -> jnp.ndarray:
-        """prompts: (B, S_prompt) int32 -> (B, S_prompt + new) tokens.
-
-        Prefill is decode-stepped token by token (correct for every arch in
-        the zoo, incl. SSM state builds); a fused chunk-prefill is the serving
-        fast path on real hardware.
-        """
+    def _generate_legacy(self, prompts: jnp.ndarray, *, eos_id: Optional[int] = None) -> jnp.ndarray:
+        """Token-by-token batch loop over the dense per-request caches
+        (correct for every arch in the zoo, incl. SSM state builds)."""
         b, s_prompt = prompts.shape
         # The KV/SSM caches hold max_seq positions; dynamic_update_slice
         # *clamps* out-of-range writes, so an unchecked overrun would
