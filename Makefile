@@ -1,7 +1,7 @@
 # Every target delegates to scripts/ci.sh — the single source of truth the
 # GitHub workflow calls too, so `make ci` and hosted CI cannot drift.
 
-.PHONY: lint analyze test test-fast bench-quick bench bench-roofline bench-serve fault-drill ci
+.PHONY: lint analyze test test-fast bench-quick bench bench-roofline bench-serve serve-drill fault-drill ci
 
 lint:
 	bash scripts/ci.sh lint
@@ -42,6 +42,13 @@ bench-roofline:
 # the legacy generate() oracle).
 bench-serve:
 	bash scripts/ci.sh bench-serve
+
+# Serving fault-tolerance gate: the serving fault/SLO test suite + the chaos
+# drill (a run injected with kernel failures, poisoned logits, a pool squeeze
+# and a deadline-blowing stall must drain with greedy parity on unpoisoned
+# requests, zero page leaks, and every injection visible in ServeMetrics).
+serve-drill:
+	bash scripts/ci.sh serve-drill
 
 # Resilience gate: fault-injection test suite + the end-to-end drill (an
 # injected gpt_small run must complete within 2% of the clean run's eval

@@ -11,7 +11,8 @@ import traceback
 
 from . import (lr_sweep, snr_trajectories, vocab_tail, lr_compressibility,
                init_comparison, savings, rule_robustness, opt_memory,
-               opt_speed, stability, resnet_snr, fault_drill, serve_bench)
+               opt_speed, stability, resnet_snr, fault_drill, serve_bench,
+               serve_drill)
 
 ALL = {
     "lr_sweep": lr_sweep.main,                    # Fig 1 / Fig 10 bottom
@@ -29,6 +30,7 @@ ALL = {
     "resnet_snr": resnet_snr.main,                # Fig 5, §3.1.3
     "fault_drill": fault_drill.main,              # resilience substrate gate
     "serve_bench": serve_bench.main,              # paged serving fast-path gate
+    "serve_drill": serve_drill.main,              # serving fault-tolerance gate
 }
 
 

@@ -1,0 +1,240 @@
+"""Serving chaos drill: prove an injected serve run drains correctly.
+
+The serving fault layer's acceptance test (ISSUE 10), mirroring
+``fault_drill`` at request granularity. One continuous-batching run on a
+deliberately tight page pool is hit with every injection
+:class:`repro.serve.ServeFaultPlan` offers — kernel launch failures on
+chosen decode steps and prefill chunks, poisoned logits for one request,
+a freelist squeeze forcing preemption, and a clock stall blowing one
+request's deadline — and must:
+
+  (a) **drain** — no ``PoolExhausted``/``LivelockError`` escapes; every
+      accepted request completes with a meaningful ``finish_reason``;
+  (b) **stay correct** — greedy token parity with a clean (un-injected)
+      run for every unpoisoned, un-deadlined request, and prefix parity
+      for the poisoned one (tokens sampled before the poison are good);
+  (c) **not leak** — ``used_pages == 0`` and ``alloc_count == free_count``
+      after the drain, squeeze pages included;
+  (d) **account** — every injection visible in ``Engine.metrics()``
+      (degraded_steps, nan_retired, deadline_expired, injected_stalls,
+      preempted), within a bounded number of scheduler steps.
+
+A second, tiny engine checks the admission-control contract: flooding past
+``max_queue``/``admit_watermark`` yields :class:`repro.serve.Rejected`
+verdicts and counters, never an exception.
+
+    PYTHONPATH=src python -m benchmarks.serve_drill [--preset quick|full]
+
+Exit code 1 on any gate failure (CI: scripts/ci.sh serve-drill).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import warnings
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.serve import (
+    Engine,
+    Rejected,
+    Request,
+    ServeConfig,
+    ServeFaultPlan,
+)
+
+from .common import append_bench_history, emit
+
+MAX_SCHED_STEPS = 200     # bounded-drain gate: tight pool, 6 short requests
+
+
+def _make_engine(cfg, params, **overrides) -> Engine:
+    sc = ServeConfig(max_seq=48, max_new_tokens=8, max_slots=3,
+                     page_size=4, pool_pages=13, prefill_chunk=4,
+                     **overrides)
+    return Engine(cfg, params, sc)
+
+
+def _prompts(n: int, s: int, vocab: int) -> np.ndarray:
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (n, s), 0, vocab))
+
+
+def _run(eng: Engine, prompts: np.ndarray, *, deadline_rid_idx=None,
+         deadline_s=None):
+    rids = []
+    for i, p in enumerate(prompts):
+        dl = deadline_s if i == deadline_rid_idx else None
+        rid = eng.submit(Request(prompt=p, eos_id=None, deadline_s=dl))
+        assert not isinstance(rid, Rejected), "drill pool must admit all"
+        rids.append(rid)
+    return rids, eng.run_until_drained()
+
+
+def main(preset: str = "quick") -> None:
+    n_requests = 6 if preset == "quick" else 12
+    s_prompt = 8
+    cfg = get_reduced("gpt_small")
+    params, _ = cfg.init(jax.random.PRNGKey(0))
+    prompts = _prompts(n_requests, s_prompt, cfg.vocab_size)
+    failures = []
+
+    # -- clean reference run ----------------------------------------------
+    clean_eng = _make_engine(cfg, params)
+    clean_rids, clean_done = _run(clean_eng, prompts)
+    clean_tokens = {i: clean_done[r].tokens for i, r in enumerate(clean_rids)}
+
+    # -- injected run ------------------------------------------------------
+    # The poisoned request is submission index 2 (rids count up from 0 per
+    # engine, so its rid is 2 here); the deadline request is index 5, killed
+    # by a 10s virtual-clock stall at scheduler step 1 — before it can be
+    # admitted out of the queue on this 3-slot engine.
+    eng = _make_engine(cfg, params)
+    poison_idx, deadline_idx = 2, n_requests - 1
+    plan = ServeFaultPlan(
+        kernel_fail_steps=(2, 5),
+        prefill_fail_chunks=(1,),
+        poison_rids=(poison_idx,),
+        poison_after=2,
+        squeeze_window=(1, 5),
+        squeeze_pages=4,
+        stall_steps=(1,),
+        stall_s=10.0,
+    )
+    err = None
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with plan.install(eng):
+            try:
+                rids, done = _run(eng, prompts,
+                                  deadline_rid_idx=deadline_idx,
+                                  deadline_s=5.0)
+            except Exception as e:  # noqa: BLE001 — the gate is "drains"
+                err = e
+    if err is not None:
+        failures.append(f"injected run did not drain: "
+                        f"{type(err).__name__}: {err}")
+        m = eng.metrics()
+    else:
+        m = eng.metrics()
+
+        # (a) every accepted request completed
+        missing = set(rids) - set(done)
+        if missing:
+            failures.append(f"requests never completed: {sorted(missing)}")
+
+        # (b) parity with the clean run
+        for i, rid in enumerate(rids):
+            if rid not in done:
+                continue
+            got = done[rid].tokens
+            want = clean_tokens[i]
+            if i == deadline_idx:
+                if done[rid].finish_reason != "deadline":
+                    failures.append(
+                        f"deadline request finished with "
+                        f"'{done[rid].finish_reason}', expected 'deadline'")
+            elif i == poison_idx:
+                if done[rid].finish_reason != "nan":
+                    failures.append(
+                        f"poisoned request finished with "
+                        f"'{done[rid].finish_reason}', expected 'nan'")
+                if not np.array_equal(got, want[:len(got)]):
+                    failures.append(
+                        "poisoned request's pre-poison tokens deviate from "
+                        "the clean run")
+            else:
+                if not np.array_equal(got, want):
+                    failures.append(
+                        f"request {i} tokens deviate from the clean run "
+                        f"under injection (reason "
+                        f"'{done[rid].finish_reason}')")
+
+        # (c) zero leaks, squeeze pages included
+        if eng.pool.used_pages != 0:
+            failures.append(f"page leak: {eng.pool.used_pages} pages still "
+                            f"allocated after drain")
+        if eng.pool.alloc_count != eng.pool.free_count:
+            failures.append(f"alloc/free imbalance: "
+                            f"{eng.pool.alloc_count} allocated vs "
+                            f"{eng.pool.free_count} freed")
+
+        # (d) every injection visible in the metrics snapshot
+        if m.degraded_steps < 3:
+            failures.append(f"kernel injections not fully visible: "
+                            f"degraded_steps={m.degraded_steps} < 3")
+        if m.nan_retired != 1 or m.injected_poison < 1:
+            failures.append(f"poison injection not visible: "
+                            f"nan_retired={m.nan_retired}, "
+                            f"injected_poison={m.injected_poison}")
+        if m.deadline_expired != 1:
+            failures.append(f"stall-vs-deadline injection not visible: "
+                            f"deadline_expired={m.deadline_expired}")
+        if m.injected_stalls < 1:
+            failures.append("clock-stall injection never fired")
+        if m.preempted < 1:
+            failures.append("pool squeeze provoked no preemption — the "
+                            "drill pool is not tight enough to exercise "
+                            "recompute")
+        if m.sched_steps > MAX_SCHED_STEPS:
+            failures.append(f"drain took {m.sched_steps} scheduler steps "
+                            f"(> {MAX_SCHED_STEPS}) — backoff churn")
+
+    # -- admission control / backpressure contract -------------------------
+    bp = _make_engine(cfg, params, max_queue=2, admit_watermark=1.0)
+    verdicts = [bp.submit(Request(prompt=p))
+                for p in _prompts(8, s_prompt, cfg.vocab_size)]
+    rejected = [v for v in verdicts if isinstance(v, Rejected)]
+    accepted = [v for v in verdicts if not isinstance(v, Rejected)]
+    if not rejected:
+        failures.append("flooding past max_queue/admit_watermark rejected "
+                        "nothing")
+    if bp.metrics().rejected != len(rejected):
+        failures.append("Rejected verdicts and rejection counters disagree")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        bp_done = bp.run_until_drained()
+    if set(bp_done) != set(accepted) or bp.pool.used_pages != 0:
+        failures.append("backpressured engine failed to drain the accepted "
+                        "requests cleanly")
+
+    metrics = {
+        "preset": preset, "n_requests": n_requests,
+        "prompt_len": s_prompt,
+        "drained": err is None,
+        "sched_steps": m.sched_steps,
+        "decode_steps": m.decode_steps,
+        "tokens_out": m.tokens_out,
+        "degraded_steps": m.degraded_steps,
+        "nan_retired": m.nan_retired,
+        "injected_poison": m.injected_poison,
+        "deadline_expired": m.deadline_expired,
+        "injected_stalls": m.injected_stalls,
+        "preempted": m.preempted,
+        "livelock_backoffs": m.livelock_backoffs,
+        "page_high_water": m.page_high_water,
+        "used_pages_after_drain": eng.pool.used_pages,
+        "rejected_queue": bp.metrics().rejected_queue,
+        "rejected_pool": bp.metrics().rejected_pool,
+        "greedy_parity": not any("deviate" in f for f in failures),
+        "ok": not failures,
+    }
+    append_bench_history("serve_drill", metrics,
+                         name="BENCH_serve_stability.json")
+    emit("serve_drill_steps", float(m.sched_steps),
+         f"degraded={m.degraded_steps};nan={m.nan_retired};"
+         f"deadline={m.deadline_expired};preempted={m.preempted};"
+         f"backoffs={m.livelock_backoffs};"
+         f"rejected={bp.metrics().rejected}")
+    for f in failures:
+        print(f"SERVE DRILL FAILURE: {f}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=("quick", "full"), default="quick")
+    main(ap.parse_args().preset)

@@ -40,6 +40,16 @@
 #                                 than token-by-token, greedy paged output
 #                                 token-identical to the legacy generate()
 #                                 oracle; appends BENCH_serve.json)
+#   scripts/ci.sh serve-drill     serving fault-tolerance gate: the serving
+#                                 fault/SLO test suite (tests/
+#                                 test_serve_faults.py) then the chaos drill
+#                                 (benchmarks/serve_drill.py: a run injected
+#                                 with kernel failures, poisoned logits, a
+#                                 pool squeeze and a deadline-blowing stall
+#                                 must drain with greedy parity on unpoisoned
+#                                 requests, zero page leaks, every injection
+#                                 visible in ServeMetrics; appends
+#                                 BENCH_serve_stability.json)
 #   scripts/ci.sh fault-drill     resilience gate: the fault-injection test
 #                                 suite (tests/test_guard.py + the hardened
 #                                 checkpoint cases) then the end-to-end drill
@@ -149,6 +159,14 @@ run_bench_serve() {
   python -m benchmarks.run --preset quick --only serve_bench
 }
 
+run_serve_drill() {
+  require_jax
+  # Fault/SLO suite first (pinpoints the failing layer: registry, admission,
+  # deadlines, degradation, chaos invariants), then the end-to-end drill.
+  python -m pytest -x -q tests/test_serve_faults.py
+  python -m benchmarks.run --preset quick --only serve_drill
+}
+
 run_fault_drill() {
   require_jax
   # Injection suite first (fast, pinpoints the failing layer), then the
@@ -167,9 +185,10 @@ case "$stage" in
   bench-quick)    run_bench_quick ;;
   bench)          run_bench ;;
   bench-serve)    run_bench_serve ;;
+  serve-drill)    run_serve_drill ;;
   fault-drill)    run_fault_drill ;;
   all)            run_lint; run_analyze; run_test_full; run_bench_roofline; run_bench_quick ;;
   *)
-    echo "usage: scripts/ci.sh [lint|analyze|test-fast|test-full|bench-roofline|bench-quick|bench|bench-serve|fault-drill|all]" >&2
+    echo "usage: scripts/ci.sh [lint|analyze|test-fast|test-full|bench-roofline|bench-quick|bench|bench-serve|serve-drill|fault-drill|all]" >&2
     exit 2 ;;
 esac

@@ -46,11 +46,14 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
+from .. import injection
 from ..core.labels import flatten_with_names
 
-# Test/drill hook (see repro.train.faults.inject_checkpoint_io_failure):
-# called with the step number at the top of every save() attempt.
-_io_fault_hook = None
+# Test/drill injection point (see repro.train.faults.
+# inject_checkpoint_io_failure): fired with the step number at the top of
+# every save() attempt through the shared registry (repro.injection), so
+# train and serve drills install/uninstall IO faults the same way.
+IO_FAULT_POINT = "checkpoint.io"
 
 
 class ChecksumError(ValueError):
@@ -72,8 +75,7 @@ def save(ckpt_dir: str | Path, step: int, tree: Any, *, extra: Optional[Dict[str
     failure the tmp dir is removed and no ``step_*`` dir was touched."""
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
-    if _io_fault_hook is not None:
-        _io_fault_hook(step)
+    injection.fire(IO_FAULT_POINT, step)
     final = ckpt_dir / f"step_{step:08d}"
     tmp = ckpt_dir / f"step-{step:08d}.tmp"
     if tmp.exists():

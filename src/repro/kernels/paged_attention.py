@@ -142,7 +142,8 @@ def paged_attention_ref(q: jnp.ndarray, pool: jnp.ndarray, table: jnp.ndarray,
 
 def paged_attention(q: jnp.ndarray, pool: jnp.ndarray, table: jnp.ndarray,
                     lengths: jnp.ndarray, *,
-                    interpret: Optional[bool] = None) -> jnp.ndarray:
+                    interpret: Optional[bool] = None,
+                    use_ref: bool = False) -> jnp.ndarray:
     """Ragged paged attention over a fused-layout page pool.
 
     q: (B, C, H, hd) — C == 1 for decode, C == chunk for chunked prefill
@@ -152,7 +153,9 @@ def paged_attention(q: jnp.ndarray, pool: jnp.ndarray, table: jnp.ndarray,
     lengths: (B,) int32 live positions per row (0 = inactive row -> zeros).
 
     Returns (B, C, H, hd) in q.dtype. Falls back to the dense jnp reference
-    when the geometry exceeds the VMEM fit gate.
+    when the geometry exceeds the VMEM fit gate, or unconditionally with
+    ``use_ref=True`` — the serving engine's graceful-degradation path
+    retraces through the reference when a kernel launch fails mid-serve.
     """
     b, c, h, hd = q.shape
     _, page, kv2, hd2 = pool.shape
@@ -161,7 +164,7 @@ def paged_attention(q: jnp.ndarray, pool: jnp.ndarray, table: jnp.ndarray,
     assert h % kv == 0, (h, kv)
     rep = h // kv
     max_pages = table.shape[1]
-    if not paged_fits(c, h, hd, page, kv2):
+    if use_ref or not paged_fits(c, h, hd, page, kv2):
         return paged_attention_ref(q, pool, table, lengths)
 
     kernel = functools.partial(_paged_kernel, page=page, kv=kv, rep=rep)

@@ -411,7 +411,8 @@ def _fused_kv_rows(k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
 def attention_paged_decode(p, x: jnp.ndarray, pool: jnp.ndarray,
                            table: jnp.ndarray, lengths: jnp.ndarray,
                            active: jnp.ndarray, cfg: AttnConfig,
-                           *, interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                           *, interpret=None,
+                           use_ref=False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One-token paged decode. x: (B, 1, D); pool: (pages, P, 2KV, hd);
     table: (B, max_pages); lengths: (B,) positions already stored. Writes the
     new token's K/V at position ``lengths`` (inactive rows are routed to the
@@ -433,7 +434,8 @@ def attention_paged_decode(p, x: jnp.ndarray, pool: jnp.ndarray,
     pool = pool.at[page, pos % page_size].set(kv_rows.astype(pool.dtype))
 
     kv_len = jnp.where(active, pos + 1, 0).astype(jnp.int32)
-    out = paged_attention(q, pool, table, kv_len, interpret=interpret)
+    out = paged_attention(q, pool, table, kv_len, interpret=interpret,
+                          use_ref=use_ref)
     y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"].astype(x.dtype))
     return constrain(y, "batch", "seq", "act_embed"), pool
 
@@ -441,7 +443,8 @@ def attention_paged_decode(p, x: jnp.ndarray, pool: jnp.ndarray,
 def attention_paged_prefill(p, x: jnp.ndarray, pool: jnp.ndarray,
                             table_row: jnp.ndarray, pos0, n_valid,
                             cfg: AttnConfig,
-                            *, interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                            *, interpret=None,
+                            use_ref=False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One chunk of paged prefill for a single request. x: (1, C, D) holding
     the prompt tokens at absolute positions ``pos0 .. pos0 + C - 1``;
     positions at chunk index >= ``n_valid`` are padding — their K/V writes are
@@ -467,7 +470,8 @@ def attention_paged_prefill(p, x: jnp.ndarray, pool: jnp.ndarray,
     pool = pool.at[page, positions % page_size].set(kv_rows.astype(pool.dtype))
 
     kv_len = jnp.asarray(pos0 + c, jnp.int32)[None]
-    out = paged_attention(q, pool, table_row, kv_len, interpret=interpret)
+    out = paged_attention(q, pool, table_row, kv_len, interpret=interpret,
+                          use_ref=use_ref)
     y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"].astype(x.dtype))
     return constrain(y, "batch", "seq", "act_embed"), pool
 

@@ -433,13 +433,24 @@ def init_paged_pools(cfg: ModelConfig, n_pages: int, page_size: int,
 
 
 def paged_decode_step(cfg: ModelConfig, params, state: PagedState,
-                      tokens: jnp.ndarray):
+                      tokens: jnp.ndarray, *, attn_impl: str = "kernel"):
     """One new token for every active batch row. tokens: (B, 1) int32.
 
-    Returns (logits (B, 1, vocab), new PagedState) — lengths advance only on
-    active rows, so a freshly-retired slot can sit idle at no cost. Pools
-    ride in the scan carry exactly like DecodeCache buffers (aliasing across
-    periods keeps live memory at one pool set, not one per period).
+    Returns (logits (B, 1, vocab), ok (B,) bool, new PagedState) — lengths
+    advance only on active rows, so a freshly-retired slot can sit idle at
+    no cost. Pools ride in the scan carry exactly like DecodeCache buffers
+    (aliasing across periods keeps live memory at one pool set, not one per
+    period).
+
+    ``ok`` is the **logit health tap**: per-row all-finite flags computed
+    on-device, so the serving engine can detect a poisoned slot (NaN/Inf
+    logits) without ever scanning the vocab axis on the host — the same
+    in-pass health-stat discipline the guarded train step uses. A row that
+    taps False is retired with ``reason="nan"`` instead of sampling garbage.
+
+    ``attn_impl="ref"`` routes attention through the dense
+    :func:`repro.kernels.paged_attention.paged_attention_ref` path — the
+    engine's per-step graceful degradation when the Pallas launch fails.
     """
     from .attention import attention_paged_decode
 
@@ -459,7 +470,8 @@ def paged_decode_step(cfg: ModelConfig, params, state: PagedState,
                 pool = jax.lax.dynamic_index_in_dim(pools[key], idx, 0, keepdims=False)
                 y, pool = attention_paged_decode(
                     p["attn"], _norm(cfg, p["mixer_norm"], x), pool,
-                    state.table, state.lengths, state.active, cfg.attn_cfg())
+                    state.table, state.lengths, state.active, cfg.attn_cfg(),
+                    use_ref=attn_impl == "ref")
                 x = x + y
                 pools = dict(pools)
                 pools[key] = jax.lax.dynamic_update_index_in_dim(pools[key], pool, idx, 0)
@@ -474,7 +486,8 @@ def paged_decode_step(cfg: ModelConfig, params, state: PagedState,
     (x, pools), _ = jax.lax.scan(period_body, (x, state.pools), (params["blocks"], idxs))
     x = _norm(cfg, params["final_norm"], x)
     logits = _unembed(cfg, params, x)
-    return logits, PagedState(
+    ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=(1, 2))
+    return logits, ok, PagedState(
         pools=pools, table=state.table,
         lengths=state.lengths + state.active.astype(jnp.int32),
         active=state.active)
@@ -482,15 +495,19 @@ def paged_decode_step(cfg: ModelConfig, params, state: PagedState,
 
 def paged_prefill_chunk(cfg: ModelConfig, params, pools: Dict[str, jnp.ndarray],
                         table_row: jnp.ndarray, pos0, n_valid,
-                        tokens: jnp.ndarray):
+                        tokens: jnp.ndarray, *, attn_impl: str = "kernel"):
     """Prefill one chunk of one request's prompt through the paged kernel.
 
     tokens: (1, C) int32 at absolute positions ``pos0 .. pos0 + C - 1``;
     chunk indices >= ``n_valid`` are padding (K/V routed to the null page).
     ``pos0`` / ``n_valid`` are traced scalars, so every chunk of every
-    request reuses one jit executable. Returns (logits (1, C, vocab), pools);
-    the caller samples the first generated token at chunk index
-    ``n_valid - 1`` of the final chunk.
+    request reuses one jit executable. Returns
+    (logits (1, C, vocab), ok () bool, pools); the caller samples the first
+    generated token at chunk index ``n_valid - 1`` of the final chunk, and
+    ``ok`` is the logit health tap for exactly that row (padding rows carry
+    garbage nobody reads, so only the sampled row's finiteness matters).
+    ``attn_impl="ref"`` degrades to the dense reference attention, as in
+    :func:`paged_decode_step`.
     """
     from .attention import attention_paged_prefill
 
@@ -511,7 +528,8 @@ def paged_prefill_chunk(cfg: ModelConfig, params, pools: Dict[str, jnp.ndarray],
                 pool = jax.lax.dynamic_index_in_dim(pools[key], idx, 0, keepdims=False)
                 y, pool = attention_paged_prefill(
                     p["attn"], _norm(cfg, p["mixer_norm"], x), pool,
-                    table_row, pos0, n_valid, cfg.attn_cfg())
+                    table_row, pos0, n_valid, cfg.attn_cfg(),
+                    use_ref=attn_impl == "ref")
                 x = x + y
                 pools = dict(pools)
                 pools[key] = jax.lax.dynamic_update_index_in_dim(pools[key], pool, idx, 0)
@@ -526,4 +544,7 @@ def paged_prefill_chunk(cfg: ModelConfig, params, pools: Dict[str, jnp.ndarray],
     (x, pools), _ = jax.lax.scan(period_body, (x, pools), (params["blocks"], idxs))
     x = _norm(cfg, params["final_norm"], x)
     logits = _unembed(cfg, params, x)
-    return logits, pools
+    sampled = jax.lax.dynamic_index_in_dim(logits[0], n_valid - 1, 0,
+                                           keepdims=False)
+    ok = jnp.all(jnp.isfinite(sampled.astype(jnp.float32)))
+    return logits, ok, pools

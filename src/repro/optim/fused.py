@@ -48,6 +48,7 @@ from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tu
 import jax
 import jax.numpy as jnp
 
+from .. import injection
 from ..kernels import megaplan
 from ..kernels.fused_adam import LANES, bias_corrections
 from ..kernels.ops import (
@@ -140,15 +141,15 @@ def _health_from_rows(rows: Sequence[jnp.ndarray]) -> StepHealth:
 # queryable (and feeds regime_counts(..., degraded=...)).
 
 _DEGRADED = {"leaves": 0, "warned": False}
-_KERNEL_FAULT_HOOK: Optional[Callable[[str], None]] = None
+KERNEL_FAULT_POINT = "optim.kernel"
 
 
 def set_kernel_fault_hook(hook: Optional[Callable[[str], None]]) -> None:
     """Install a fault-injection hook called (with a leaf label) before every
     guarded kernel dispatch — raise from it to simulate a Pallas failure.
-    ``None`` uninstalls. Test/benchmark instrumentation only."""
-    global _KERNEL_FAULT_HOOK
-    _KERNEL_FAULT_HOOK = hook
+    ``None`` uninstalls. Registered at the shared ``"optim.kernel"`` point
+    (:mod:`repro.injection`). Test/benchmark instrumentation only."""
+    injection.install(KERNEL_FAULT_POINT, hook)
 
 
 def kernel_degraded_leaves() -> int:
@@ -164,8 +165,7 @@ def reset_kernel_degradation() -> None:
 def _guarded(label: str, kernel_fn: Callable[[], Any], jnp_fn: Callable[[], Any],
              *, leaves: int = 1):
     try:
-        if _KERNEL_FAULT_HOOK is not None:
-            _KERNEL_FAULT_HOOK(label)
+        injection.fire(KERNEL_FAULT_POINT, label)
         return kernel_fn()
     except Exception as e:  # noqa: BLE001 — any kernel failure degrades
         _DEGRADED["leaves"] += leaves

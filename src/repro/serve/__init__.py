@@ -44,10 +44,66 @@ Architectures the paged path does not cover (SSM/hybrid mixers, int8 KV)
 transparently fall back to the legacy token-by-token batch loop; forcing
 ``ServeConfig(paged=False)`` turns that loop into a parity oracle for the
 fast path (tests/test_serve_paged.py).
+
+Failure handling & SLOs
+-----------------------
+
+The serving mirror of the train-side fault substrate (PR 6), at request
+granularity. Three principles: *degrade before failing*, *poison one
+request, not the batch*, and *every decision is a counter*.
+
+**Deadlines.** ``Request.deadline_s`` is seconds-from-submission. The
+engine checks it at the top of every scheduler step: a queued request past
+deadline is dropped without ever touching the device; an active one gives
+up its slot and pages immediately and completes with
+``finish_reason='deadline'`` carrying whatever it generated. Higher
+``Request.priority`` admits first (FIFO within a level — a preempted
+request requeues by its original submission tick, so it cannot starve).
+
+**Admission control.** With ``ServeConfig.max_queue`` /
+``admit_watermark`` set, ``Engine.submit`` returns a :class:`Rejected`
+verdict — ``'queue_full'`` at the queue-depth watermark,
+``'pool_pressure'`` when the projected page demand of everything queued +
+active + the new request exceeds the watermark fraction of pool capacity.
+Backpressure is the contract, not an exception; callers shed load or
+retry. ``ValueError`` remains reserved for requests that could never run.
+
+**Degradation ladder** (most local first):
+
+1. a failing paged-attention launch (decode step or prefill chunk) serves
+   exactly that step through the dense ``paged_attention_ref`` path —
+   ``degraded_steps`` counts, one warning total;
+2. a non-finite logit row (on-device per-slot health tap, no host vocab
+   scan) skips sampling for the poisoned slot only and retires it with
+   ``finish_reason='nan'`` — the rest of the batch never notices;
+3. wall-budget / deadline overruns truncate that one request
+   (``'budget'`` / ``'deadline'``);
+4. a no-progress scheduler step triggers deterministic backoff — freeze
+   admissions for ``backoff_freeze_steps``, force-retire over-deadline
+   slots — and only ``livelock_patience`` consecutive stuck steps raise
+   :class:`LivelockError`, which carries the full scheduler/pool counter
+   snapshot (queue, per-slot rids, freelist) in its message.
+
+**Metrics.** ``Engine.metrics()`` snapshots a frozen
+:class:`ServeMetrics`: gauges (queue depth, active slots, free/used pages,
+high-water), scheduler counters (admitted/retired/preempted, step/chunk/
+token counts), every fault counter above, and TTFT/TPOT aggregates.
+Hot-loop conditions warn only on first occurrence (see
+``ServeCounters.warn_once``); recurrence is what the counters are for.
+
+Chaos drill: :class:`ServeFaultPlan` (``serve/faults.py``) injects kernel
+failures, poisoned logits, pool squeezes and clock stalls deterministically
+through the shared :mod:`repro.injection` registry;
+``benchmarks/serve_drill.py`` gates CI on an injected run draining with
+greedy parity on unpoisoned requests and zero page leaks.
 """
 from .engine import Completion, Engine, Request, ServeConfig
+from .faults import ServeFaultPlan, inject_paged_kernel_failure
 from .kvpool import KVPool, PoolExhausted
+from .metrics import LivelockError, Rejected, ServeCounters, ServeMetrics
 from .scheduler import Scheduler
 
 __all__ = ["Engine", "ServeConfig", "Request", "Completion",
-           "KVPool", "PoolExhausted", "Scheduler"]
+           "KVPool", "PoolExhausted", "Scheduler",
+           "ServeMetrics", "ServeCounters", "Rejected", "LivelockError",
+           "ServeFaultPlan", "inject_paged_kernel_failure"]

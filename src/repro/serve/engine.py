@@ -6,12 +6,24 @@ The public surface is request-oriented:
     rid = eng.submit(Request(prompt=tokens, max_new_tokens=64, eos_id=2))
     completions = eng.run_until_drained()       # {rid: Completion}
 
-``submit`` enqueues; ``step`` runs one scheduler iteration (admit queued
-requests into free slots, chunk-prefill them, one batched paged decode for
-every active slot, retire finished ones); ``run_until_drained`` loops step
-until nothing is queued or active. Per-request sampling (temperature,
-seed) lives on the :class:`Request`; :class:`ServeConfig` keeps the
-engine-wide geometry (max_seq, page/pool sizing, slot count, wall budget).
+``submit`` enqueues (or returns :class:`~repro.serve.metrics.Rejected`
+under admission control); ``step`` runs one scheduler iteration (expire
+deadlines, admit queued requests into free slots, chunk-prefill them, one
+batched paged decode for every active slot, retire finished ones);
+``run_until_drained`` loops step until nothing is queued or active,
+backing off deterministically on no-progress before raising a diagnosable
+:class:`~repro.serve.metrics.LivelockError`. Per-request sampling
+(temperature, seed) and SLOs (deadline_s, priority) live on the
+:class:`Request`; :class:`ServeConfig` keeps the engine-wide geometry
+(max_seq, page/pool sizing, slot count, wall budget, admission
+watermarks).
+
+Fault handling (see ``repro.serve`` package docs for the full ladder): a
+failing paged-attention launch degrades that one step to the dense
+reference path; a non-finite logit tap retires the poisoned slot with
+``reason="nan"`` instead of sampling garbage; every such decision lands in
+:class:`~repro.serve.metrics.ServeCounters` (snapshot via
+:meth:`Engine.metrics`) rather than a hot-loop warning.
 
 Architectures outside the paged fast path's coverage (SSM/hybrid mixers,
 int8 KV) fall back to the legacy batch loop transparently;
@@ -23,15 +35,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import injection
 from ..models import transformer
+from .faults import CLOCK_POINT, KERNEL_POINT, LOGITS_POINT, STEP_POINT
 from .kvpool import KVPool
+from .metrics import LivelockError, Rejected, ServeCounters, ServeMetrics
 from .scheduler import Scheduler
 
 
@@ -46,7 +60,8 @@ class ServeConfig:
     seed: int = 0              # deprecated default; see Request.seed
     # Per-request wall-clock budget (seconds). A pathological decode loop —
     # a recompile storm, an overloaded host — degrades to a *truncated*
-    # response with a warning instead of hanging the caller. None = no cap.
+    # response (finish_reason='budget', counted) instead of hanging the
+    # caller. None = no cap.
     max_wall_s: Optional[float] = None
     # Paged fast path geometry
     page_size: int = 16        # token positions per KV page
@@ -56,49 +71,78 @@ class ServeConfig:
     # None -> auto (paged when the arch supports it); False forces the
     # legacy token-by-token loop (the parity oracle in tests)
     paged: Optional[bool] = None
+    # --- admission control / backpressure (None = accept everything) ---
+    # submit() returns Rejected('queue_full') once this many requests are
+    # queued (admitted-and-running requests don't count).
+    max_queue: Optional[int] = None
+    # submit() returns Rejected('pool_pressure') when the projected page
+    # demand of everything queued + active + the new request exceeds this
+    # fraction of pool capacity. 1.0 = reject only guaranteed-thrash loads;
+    # lower values keep preemption-churn headroom.
+    admit_watermark: Optional[float] = None
+    # --- livelock handling -------------------------------------------
+    # Consecutive no-progress scheduler steps tolerated (with backoff)
+    # before run_until_drained raises LivelockError. Must exceed any
+    # transient external pressure window (e.g. a chaos-drill squeeze).
+    livelock_patience: int = 16
+    # Admissions frozen for this many steps at the start of a no-progress
+    # burst — stops admit->preempt churn from masking a wedged pool.
+    backoff_freeze_steps: int = 2
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request. ``temperature``/``seed`` default to the
-    engine's ServeConfig when None."""
+    engine's ServeConfig when None. ``deadline_s`` is an SLO relative to
+    submission: once exceeded the request retires with
+    ``finish_reason='deadline'`` (whatever was generated so far) instead of
+    occupying a slot; queued requests past deadline are dropped without
+    ever touching the device. Higher ``priority`` admits first (FIFO
+    within a level)."""
     prompt: object                       # (S,) int tokens (list/np/jnp)
     max_new_tokens: Optional[int] = None
     eos_id: Optional[int] = None
     temperature: Optional[float] = None
     seed: Optional[int] = None
+    deadline_s: Optional[float] = None
+    priority: int = 0
 
 
 @dataclasses.dataclass
 class Completion:
     """Result of one request. ``tokens`` holds only the *generated* suffix
-    (including the eos token when one was emitted)."""
+    (including the eos token when one was emitted). ``finish_reason``:
+    'eos' | 'length' | 'budget' | 'deadline' | 'nan'."""
     id: int
     prompt: np.ndarray
     tokens: np.ndarray
-    finish_reason: str                   # 'eos' | 'length' | 'budget'
+    finish_reason: str
     ttft_s: Optional[float]              # submit -> first token
     wall_s: float                        # submit -> retirement
     preemptions: int = 0
+    tpot_s: Optional[float] = None       # mean time per token after the first
 
 
 class _ReqState:
     """Host-side decode state for one in-flight request."""
 
     __slots__ = ("rid", "request", "prompt", "max_new", "generated",
-                 "ctx_len", "t_submit", "t_first", "preemptions")
+                 "ctx_len", "t_submit", "t_first", "preemptions",
+                 "deadline_s", "priority")
 
     def __init__(self, rid: int, request: Request, prompt: np.ndarray,
-                 max_new: int):
+                 max_new: int, t_submit: float):
         self.rid = rid
         self.request = request
         self.prompt = prompt
         self.max_new = max_new
         self.generated: List[int] = []
         self.ctx_len = 0          # KV positions written on device
-        self.t_submit = time.monotonic()
+        self.t_submit = t_submit
         self.t_first: Optional[float] = None
         self.preemptions = 0
+        self.deadline_s = request.deadline_s
+        self.priority = request.priority
 
     def ctx_tokens(self) -> np.ndarray:
         """Tokens whose KV must exist before decoding can continue — the
@@ -118,9 +162,18 @@ class Engine:
         self._next_rid = 0
         self._reqs: Dict[int, _ReqState] = {}
         self._done: Dict[int, Completion] = {}
+        self.counters = ServeCounters()
         self.decode_steps = 0
         self.prefill_chunks = 0
         self.tokens_out = 0
+        self.sched_steps = 0        # scheduler iterations, incl. no-progress
+        self._completed_total = 0
+        self._no_progress = 0       # consecutive no-progress steps
+        self._admit_freeze = 0      # steps with admissions suspended
+        # Virtual-clock skew (seconds) added to every monotonic read — the
+        # deterministic stall injection advances it so deadline logic can be
+        # driven without sleeping in CI.
+        self._clock_skew = 0.0
         if self._paged:
             p = self.sc.page_size
             max_pages = -(-self.sc.max_seq // p)
@@ -131,22 +184,35 @@ class Engine:
             self._pools = None     # device pools, created on first use
             self._decode = jax.jit(
                 lambda pr, st, t: transformer.paged_decode_step(model_cfg, pr, st, t))
+            self._decode_fallback = jax.jit(
+                lambda pr, st, t: transformer.paged_decode_step(
+                    model_cfg, pr, st, t, attn_impl="ref"))
             self._prefill = jax.jit(
                 lambda pr, pools, row, pos0, nv, tok:
                 transformer.paged_prefill_chunk(model_cfg, pr, pools, row,
                                                 pos0, nv, tok))
+            self._prefill_fallback = jax.jit(
+                lambda pr, pools, row, pos0, nv, tok:
+                transformer.paged_prefill_chunk(model_cfg, pr, pools, row,
+                                                pos0, nv, tok,
+                                                attn_impl="ref"))
         else:
             self._decode = jax.jit(
                 lambda pr, c, t: transformer.decode_step(model_cfg, pr, c, t))
+
+    def _now(self) -> float:
+        return time.monotonic() + self._clock_skew
 
     # ------------------------------------------------------------------
     # Request API
     # ------------------------------------------------------------------
 
-    def submit(self, request: Request) -> int:
-        """Validate and enqueue one request; returns its id. Raises
-        ValueError when the prompt cannot fit ``max_seq`` or the whole
-        request could never fit the page pool even alone."""
+    def submit(self, request: Request) -> Union[int, Rejected]:
+        """Validate, admission-check and enqueue one request; returns its id
+        or a :class:`Rejected` verdict (backpressure — never an exception).
+        Raises ValueError only for requests that could never run: a prompt
+        that cannot fit ``max_seq``, or a footprint exceeding the whole
+        page pool even alone."""
         if not self._paged:
             raise NotImplementedError(
                 f"the request API needs the paged fast path, which does not "
@@ -161,10 +227,13 @@ class Engine:
         max_new = (request.max_new_tokens if request.max_new_tokens is not None
                    else self.sc.max_new_tokens)
         if max_new > budget:
-            warnings.warn(
-                f"truncating max_new_tokens {max_new} -> {budget}: "
-                f"prompt length {n_prompt} + requested tokens would overrun "
-                f"the max_seq={self.sc.max_seq} cache")
+            self.counters.truncated_max_new += 1
+            self.counters.warn_once(
+                "truncate_max_new",
+                f"truncating max_new_tokens {max_new} -> {budget}: prompt "
+                f"length {n_prompt} + requested tokens would overrun the "
+                f"max_seq={self.sc.max_seq} cache (counted in "
+                f"ServeMetrics.truncated_max_new; warning not repeated)")
             max_new = budget
         need = self.pool.pages_for(n_prompt + max_new)
         if need > self.pool.capacity:
@@ -172,30 +241,69 @@ class Engine:
                 f"request needs {need} KV pages but the pool holds only "
                 f"{self.pool.capacity} — raise pool_pages or shrink the "
                 f"request")
+        sched = self.scheduler
+        if (self.sc.max_queue is not None
+                and len(sched.queue) >= self.sc.max_queue):
+            self.counters.rejected_queue += 1
+            return Rejected(reason="queue_full",
+                            queue_depth=len(sched.queue),
+                            projected_pages=need,
+                            pool_capacity=self.pool.capacity)
+        if self.sc.admit_watermark is not None:
+            projected = self.pool.used_pages + self._queued_pages() + need
+            if projected > self.sc.admit_watermark * self.pool.capacity:
+                self.counters.rejected_pool += 1
+                return Rejected(reason="pool_pressure",
+                                queue_depth=len(sched.queue),
+                                projected_pages=projected,
+                                pool_capacity=self.pool.capacity)
         rid = self._next_rid
         self._next_rid += 1
-        self._reqs[rid] = _ReqState(rid, request, prompt, max_new)
-        self.scheduler.submit(rid)
+        self._reqs[rid] = _ReqState(rid, request, prompt, max_new,
+                                    t_submit=self._now())
+        sched.submit(rid, priority=request.priority)
         return rid
 
+    def _queued_pages(self) -> int:
+        """Projected lifetime page demand of everything still queued (each
+        request's full prompt + generation footprint — recompute extensions
+        never exceed it)."""
+        return sum(
+            self.pool.pages_for(self._reqs[rid].prompt.shape[0]
+                                + self._reqs[rid].max_new)
+            for rid in self.scheduler.queue)
+
     def step(self) -> Dict[str, float]:
-        """One scheduler iteration: admit + prefill, grow/preempt, one
-        batched decode, retire. Returns per-step metrics."""
+        """One scheduler iteration: expire deadlines, admit + prefill,
+        grow/preempt, one batched decode, retire. Returns per-step
+        metrics."""
         if not self._paged:
             raise NotImplementedError(
                 f"the request API needs the paged fast path, which does not "
                 f"cover arch '{self.cfg.name}' — use generate()")
         sched = self.scheduler
+        step_idx = self.sched_steps
+        self.sched_steps += 1
+        injection.fire(STEP_POINT, self, step_idx)
+        skew = injection.fire(CLOCK_POINT, step_idx)
+        if skew:
+            self._clock_skew += float(skew)
+            self.counters.injected_stalls += 1
+        self._expire_deadlines()
+
         prefills = 0
-        # --- admit as many queue heads as slots/pages allow
-        while sched.queue:
-            rid = sched.queue[0]
-            st = self._reqs[rid]
-            slot = sched.try_admit(rid, len(st.ctx_tokens()))
-            if slot is None:
-                break
-            prefills += 1
-            self._prefill_into(slot, st)
+        if self._admit_freeze > 0:
+            self._admit_freeze -= 1      # backoff: no admissions this step
+        else:
+            # --- admit as many queue heads as slots/pages allow
+            while sched.queue:
+                rid = sched.queue[0]
+                st = self._reqs[rid]
+                slot = sched.try_admit(rid, len(st.ctx_tokens()))
+                if slot is None:
+                    break
+                prefills += 1
+                self._prefill_into(slot, st)
 
         # --- make room for every active row's next write position
         ensured: List[int] = []
@@ -229,15 +337,23 @@ class Engine:
             state = transformer.PagedState(
                 pools=self._device_pools(), table=jnp.asarray(sched.table),
                 lengths=jnp.asarray(lengths), active=jnp.asarray(mask))
-            logits, new_state = self._decode(self.params, state,
-                                             jnp.asarray(tokens))
+            logits, ok_dev, new_state = self._decode_call(
+                state, jnp.asarray(tokens))
             self._pools = new_state.pools
             self.decode_steps += 1
             last = np.asarray(logits[:, -1].astype(jnp.float32))
-            now = time.monotonic()
+            ok = np.asarray(ok_dev)
+            now = self._now()
             for slot, rid in active:
                 st = self._reqs[rid]
                 st.ctx_len += 1        # this step wrote generated[-1]'s KV
+                poisoned = bool(injection.fire(
+                    LOGITS_POINT, rid, len(st.generated)))
+                if poisoned:
+                    self.counters.injected_poison += 1
+                if poisoned or not ok[slot]:
+                    self._retire_nan(slot, st)
+                    continue
                 tok = self._sample_one(st, last[slot])
                 st.generated.append(tok)
                 step_tokens += 1
@@ -248,11 +364,15 @@ class Engine:
                     self._retire(slot, st, "length")
                 elif (self.sc.max_wall_s is not None
                       and now - st.t_submit > self.sc.max_wall_s):
-                    warnings.warn(
-                        f"serve request exceeded wall-clock budget "
+                    self.counters.budget_truncated += 1
+                    self.counters.warn_once(
+                        "wall_budget",
+                        f"serve request {rid} exceeded wall-clock budget "
                         f"max_wall_s={self.sc.max_wall_s} after "
                         f"{len(st.generated)}/{st.max_new} tokens; returning "
-                        f"truncated response")
+                        f"truncated response (counted in "
+                        f"ServeMetrics.budget_truncated; warning not "
+                        f"repeated)")
                     self._retire(slot, st, "budget")
         self.tokens_out += step_tokens
         m = sched.metrics()
@@ -260,21 +380,25 @@ class Engine:
         return m
 
     def run_until_drained(self) -> Dict[int, Completion]:
-        """Step until every submitted request has retired; returns and
-        clears the accumulated completions."""
+        """Step until every admitted request has retired; returns and
+        clears the accumulated completions. On a no-progress step the
+        engine backs off deterministically (freeze admissions, force-retire
+        over-deadline slots); only after ``livelock_patience`` consecutive
+        stuck steps does it raise :class:`LivelockError` carrying the full
+        scheduler/pool counter snapshot."""
         sched = self.scheduler
+        self._no_progress = 0
         while sched.queue or sched.active_slots():
-            before = (self.tokens_out, sched.admitted, sched.retired,
-                      sched.preempted)
+            before = self._progress_sig()
             self.step()
-            after = (self.tokens_out, sched.admitted, sched.retired,
-                     sched.preempted)
-            if before == after:
-                raise RuntimeError(
-                    "scheduler made no progress — slot/page accounting bug "
-                    f"(queue={len(sched.queue)}, "
-                    f"active={len(sched.active_slots())}, "
-                    f"free_pages={self.pool.free_pages})")
+            if self._progress_sig() == before:
+                self._no_progress += 1
+                self._backoff()
+                if self._no_progress >= self.sc.livelock_patience:
+                    raise LivelockError(self.metrics(), sched.slot_rid,
+                                        tuple(sched.queue))
+            else:
+                self._no_progress = 0
         done, self._done = self._done, {}
         return done
 
@@ -282,6 +406,89 @@ class Engine:
         """Completions retired so far (without draining the batch)."""
         done, self._done = self._done, {}
         return done
+
+    def metrics(self) -> ServeMetrics:
+        """One consistent snapshot of serving health: scheduler/pool gauges
+        plus every fault/SLO counter. Cheap — no device sync."""
+        c = self.counters
+        if self._paged:
+            sched, pool = self.scheduler, self.pool
+            gauges = dict(queue_depth=len(sched.queue),
+                          active_slots=len(sched.active_slots()),
+                          free_pages=pool.free_pages,
+                          used_pages=pool.used_pages,
+                          page_high_water=pool.high_water,
+                          pool_capacity=pool.capacity,
+                          admitted=sched.admitted, retired=sched.retired,
+                          preempted=sched.preempted)
+        else:
+            gauges = dict(queue_depth=0, active_slots=0, free_pages=0,
+                          used_pages=0, page_high_water=0, pool_capacity=0,
+                          admitted=0, retired=0, preempted=0)
+        return ServeMetrics(
+            sched_steps=self.sched_steps, decode_steps=self.decode_steps,
+            prefill_chunks=self.prefill_chunks, tokens_out=self.tokens_out,
+            degraded_steps=c.degraded_steps, nan_retired=c.nan_retired,
+            deadline_expired=c.deadline_expired,
+            budget_truncated=c.budget_truncated,
+            truncated_max_new=c.truncated_max_new,
+            rejected_queue=c.rejected_queue, rejected_pool=c.rejected_pool,
+            livelock_backoffs=c.livelock_backoffs,
+            injected_stalls=c.injected_stalls,
+            injected_poison=c.injected_poison,
+            ttft_mean_s=c.ttft_sum_s / c.ttft_n if c.ttft_n else None,
+            tpot_mean_s=c.tpot_sum_s / c.tpot_n if c.tpot_n else None,
+            **gauges)
+
+    # ------------------------------------------------------------------
+    # Progress / livelock handling
+    # ------------------------------------------------------------------
+
+    def _progress_sig(self) -> Tuple[int, ...]:
+        sched = self.scheduler
+        return (self.tokens_out, sched.admitted, sched.retired,
+                sched.preempted, self._completed_total)
+
+    def _backoff(self) -> None:
+        """Deterministic no-progress backoff: count the round, force-retire
+        anything past its deadline right now, and freeze admissions at the
+        start of a burst (stops admit->preempt churn from hiding a wedged
+        pool while transient pressure — e.g. a chaos squeeze — drains)."""
+        self.counters.livelock_backoffs += 1
+        self._expire_deadlines()
+        if self._no_progress == 1:
+            self._admit_freeze = self.sc.backoff_freeze_steps
+
+    def _expire_deadlines(self) -> None:
+        """Retire every request past its deadline: queued ones are dropped
+        without touching the device; active ones give up their slot and
+        pages immediately, returning whatever they generated."""
+        now = self._now()
+        sched = self.scheduler
+
+        def expired(st: _ReqState) -> bool:
+            return (st.deadline_s is not None
+                    and now - st.t_submit > st.deadline_s)
+
+        for rid in [r for r in sched.queue if expired(self._reqs[r])]:
+            st = self._reqs[rid]
+            sched.drop_queued(rid)
+            self._count_deadline(st)
+            self._finish(st, "deadline")
+        for slot, rid in list(sched.active_slots()):
+            st = self._reqs[rid]
+            if expired(st):
+                self._count_deadline(st)
+                self._retire(slot, st, "deadline")
+
+    def _count_deadline(self, st: _ReqState) -> None:
+        self.counters.deadline_expired += 1
+        self.counters.warn_once(
+            "deadline",
+            f"serve request {st.rid} exceeded its deadline_s="
+            f"{st.deadline_s} after {len(st.generated)}/{st.max_new} "
+            f"tokens; retiring with reason='deadline' (counted in "
+            f"ServeMetrics.deadline_expired; warning not repeated)")
 
     # ------------------------------------------------------------------
     # Paged internals
@@ -297,6 +504,42 @@ class Engine:
                 self._pool_dtype())
         return self._pools
 
+    def _decode_call(self, state, tokens):
+        """Dispatch one batched decode, degrading to the dense reference
+        attention for exactly this step when the kernel launch fails (an
+        injected fault or a real trace/compile regression). Mirrors the
+        fused optimizer's per-leaf ``_guarded`` ladder at step granularity."""
+        try:
+            injection.fire(KERNEL_POINT, "decode", self.decode_steps)
+            return self._decode(self.params, state, tokens)
+        except Exception as e:  # noqa: BLE001 — any kernel failure degrades
+            self.counters.degraded_steps += 1
+            self.counters.warn_once(
+                "kernel_degraded",
+                f"paged decode launch failed ({type(e).__name__}: {e}); "
+                f"serving this step through the dense reference path "
+                f"(counted in ServeMetrics.degraded_steps; warning not "
+                f"repeated)")
+            return self._decode_fallback(self.params, state, tokens)
+
+    def _prefill_call(self, row, pos0, n_valid, buf):
+        """Prefill-chunk dispatch with the same degradation ladder as
+        :meth:`_decode_call` (chunks indexed globally across requests)."""
+        try:
+            injection.fire(KERNEL_POINT, "prefill", self.prefill_chunks)
+            return self._prefill(self.params, self._device_pools(), row,
+                                 pos0, n_valid, buf)
+        except Exception as e:  # noqa: BLE001 — any kernel failure degrades
+            self.counters.degraded_steps += 1
+            self.counters.warn_once(
+                "kernel_degraded",
+                f"paged prefill launch failed ({type(e).__name__}: {e}); "
+                f"serving this chunk through the dense reference path "
+                f"(counted in ServeMetrics.degraded_steps; warning not "
+                f"repeated)")
+            return self._prefill_fallback(self.params, self._device_pools(),
+                                          row, pos0, n_valid, buf)
+
     def _prefill_into(self, slot: int, st: _ReqState) -> None:
         """Chunk-prefill a freshly admitted request's whole known context
         (prompt + any pre-preemption tokens) and sample its next token."""
@@ -306,27 +549,38 @@ class Engine:
         n_chunks = -(-n_ctx // chunk)
         row = jnp.asarray(self.scheduler.table[slot:slot + 1])
         logits = None
+        ok_dev = None
         n_valid = chunk
         for k in range(n_chunks):
             lo = k * chunk
             n_valid = min(chunk, n_ctx - lo)
             buf = np.zeros((1, chunk), np.int32)
             buf[0, :n_valid] = ctx[lo:lo + n_valid]
-            logits, pools = self._prefill(
-                self.params, self._device_pools(), row,
-                np.int32(lo), np.int32(n_valid), jnp.asarray(buf))
+            logits, ok_dev, pools = self._prefill_call(
+                row, np.int32(lo), np.int32(n_valid), jnp.asarray(buf))
             self._pools = pools
             self.prefill_chunks += 1
             if (self.sc.max_wall_s is not None
-                    and time.monotonic() - st.t_submit > self.sc.max_wall_s):
-                warnings.warn(
-                    f"serve request exceeded wall-clock budget "
+                    and self._now() - st.t_submit > self.sc.max_wall_s):
+                self.counters.budget_truncated += 1
+                self.counters.warn_once(
+                    "wall_budget",
+                    f"serve request {st.rid} exceeded wall-clock budget "
                     f"max_wall_s={self.sc.max_wall_s} during prefill "
-                    f"({k + 1}/{n_chunks} chunks); returning prompt only")
+                    f"({k + 1}/{n_chunks} chunks); returning prompt only "
+                    f"(counted in ServeMetrics.budget_truncated; warning "
+                    f"not repeated)")
                 st.ctx_len = lo + n_valid
                 self._retire(slot, st, "budget")
                 return
         st.ctx_len = n_ctx
+        poisoned = bool(injection.fire(LOGITS_POINT, st.rid,
+                                       len(st.generated)))
+        if poisoned:
+            self.counters.injected_poison += 1
+        if poisoned or not bool(np.asarray(ok_dev)):
+            self._retire_nan(slot, st)
+            return
         row_logits = np.asarray(logits[0, n_valid - 1].astype(jnp.float32))
         tok = self._sample_one(st, row_logits)
         st.generated.append(tok)
@@ -339,7 +593,7 @@ class Engine:
 
     def _sample_one(self, st: _ReqState, logits_row: np.ndarray) -> int:
         if st.t_first is None:
-            st.t_first = time.monotonic()
+            st.t_first = self._now()
         temp = (st.request.temperature if st.request.temperature is not None
                 else self.sc.temperature)
         if temp <= 0.0:
@@ -351,16 +605,44 @@ class Engine:
         return int(jax.random.categorical(
             key, jnp.asarray(logits_row, jnp.float32) / temp))
 
+    def _retire_nan(self, slot: int, st: _ReqState) -> None:
+        """Poisoned slot: skip sampling entirely (no garbage token escapes)
+        and retire with whatever was generated before the poison."""
+        self.counters.nan_retired += 1
+        self.counters.warn_once(
+            "nan_logits",
+            f"non-finite logits for serve request {st.rid} after "
+            f"{len(st.generated)} tokens; skipping sampling and retiring "
+            f"with reason='nan' (counted in ServeMetrics.nan_retired; "
+            f"warning not repeated)")
+        self._retire(slot, st, "nan")
+
     def _retire(self, slot: int, st: _ReqState, reason: str) -> None:
         self.scheduler.retire(slot)
-        now = time.monotonic()
+        self._finish(st, reason)
+
+    def _finish(self, st: _ReqState, reason: str) -> None:
+        """Build the Completion and fold its latency stats into the
+        engine-level TTFT/TPOT aggregates."""
+        now = self._now()
+        ttft = None if st.t_first is None else st.t_first - st.t_submit
+        wall = now - st.t_submit
+        tpot = None
+        if ttft is not None and len(st.generated) > 1:
+            tpot = (wall - ttft) / (len(st.generated) - 1)
+        if ttft is not None:
+            self.counters.ttft_sum_s += ttft
+            self.counters.ttft_n += 1
+        if tpot is not None:
+            self.counters.tpot_sum_s += tpot
+            self.counters.tpot_n += 1
         self._done[st.rid] = Completion(
             id=st.rid, prompt=st.prompt,
             tokens=np.asarray(st.generated, np.int32),
-            finish_reason=reason,
-            ttft_s=None if st.t_first is None else st.t_first - st.t_submit,
-            wall_s=now - st.t_submit, preemptions=st.preemptions)
+            finish_reason=reason, ttft_s=ttft, wall_s=wall,
+            preemptions=st.preemptions, tpot_s=tpot)
         del self._reqs[st.rid]
+        self._completed_total += 1
 
     # ------------------------------------------------------------------
     # Compatibility wrapper (pre-request-API surface)
@@ -379,8 +661,15 @@ class Engine:
         prompts = jnp.asarray(prompts)
         b, s_prompt = prompts.shape
         host_prompts = np.asarray(prompts)
-        rids = [self.submit(Request(prompt=host_prompts[i], eos_id=eos_id))
-                for i in range(b)]
+        rids = []
+        for i in range(b):
+            rid = self.submit(Request(prompt=host_prompts[i], eos_id=eos_id))
+            if isinstance(rid, Rejected):
+                raise RuntimeError(
+                    f"generate() row {i} rejected by admission control "
+                    f"({rid.reason}) — the batch wrapper cannot shed load; "
+                    f"use submit() directly under backpressure")
+            rids.append(rid)
         done = self.run_until_drained()
         rows = [np.concatenate([host_prompts[i], done[rid].tokens])
                 for i, rid in enumerate(rids)]
@@ -415,21 +704,24 @@ class Engine:
                 f"max_seq={self.sc.max_seq}")
         max_new = self.sc.max_new_tokens
         if max_new > budget:
-            warnings.warn(
-                f"truncating max_new_tokens {max_new} -> {budget}: "
-                f"prompt length {s_prompt} + requested tokens would overrun "
-                f"the max_seq={self.sc.max_seq} cache")
+            self.counters.truncated_max_new += 1
+            self.counters.warn_once(
+                "truncate_max_new",
+                f"truncating max_new_tokens {max_new} -> {budget}: prompt "
+                f"length {s_prompt} + requested tokens would overrun the "
+                f"max_seq={self.sc.max_seq} cache (counted in "
+                f"ServeMetrics.truncated_max_new; warning not repeated)")
             max_new = budget
         cache = transformer.init_decode_cache(
             self.cfg, b, self.sc.max_seq,
             dtype=jnp.float32 if self.cfg.dtype == jnp.float32 else jnp.bfloat16)
         key = jax.random.PRNGKey(self.sc.seed)
 
-        t0 = time.monotonic()
+        t0 = self._now()
 
         def over_budget() -> bool:
             return (self.sc.max_wall_s is not None
-                    and time.monotonic() - t0 > self.sc.max_wall_s)
+                    and self._now() - t0 > self.sc.max_wall_s)
 
         tokens = prompts
         logits = None
@@ -438,10 +730,14 @@ class Engine:
             if over_budget():
                 # Can't emit anything sensible without a full prefill — the
                 # degraded response is the prompt unchanged.
-                warnings.warn(
-                    f"serve request exceeded wall-clock budget "
+                self.counters.budget_truncated += 1
+                self.counters.warn_once(
+                    "wall_budget",
+                    f"serve batch exceeded wall-clock budget "
                     f"max_wall_s={self.sc.max_wall_s} during prefill "
-                    f"({i + 1}/{s_prompt} tokens); returning prompt only")
+                    f"({i + 1}/{s_prompt} tokens); returning prompt only "
+                    f"(counted in ServeMetrics.budget_truncated; warning "
+                    f"not repeated)")
                 return prompts
         out: List[jnp.ndarray] = [tokens]
         done = jnp.zeros((b, 1), bool)
@@ -455,10 +751,14 @@ class Engine:
             if eos_id is not None and bool(done.all()):
                 break                                  # every row finished
             if over_budget():
-                warnings.warn(
-                    f"serve request exceeded wall-clock budget "
-                    f"max_wall_s={self.sc.max_wall_s} after {n + 1}/{max_new} "
-                    f"tokens; returning truncated response")
+                self.counters.budget_truncated += 1
+                self.counters.warn_once(
+                    "wall_budget",
+                    f"serve batch exceeded wall-clock budget "
+                    f"max_wall_s={self.sc.max_wall_s} after {n + 1}/"
+                    f"{max_new} tokens; returning truncated response "
+                    f"(counted in ServeMetrics.budget_truncated; warning "
+                    f"not repeated)")
                 break
             logits, cache = self._decode(self.params, cache, nxt)
         return jnp.concatenate(out, axis=1)

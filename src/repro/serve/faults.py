@@ -1,0 +1,130 @@
+"""Deterministic fault injection for the serving engine.
+
+The serving mirror of :mod:`repro.train.faults`: everything is seedless and
+counter-indexed, so an injected run is exactly reproducible — which is what
+lets ``benchmarks/serve_drill.py`` demand greedy parity between an injected
+drain and a clean one. All hooks ride the shared registry
+(:mod:`repro.injection`); the engine only *fires* named points, it never
+imports this module:
+
+* ``"serve.kernel"``     fired (kind, index) inside the try-block guarding
+                         every paged decode/prefill dispatch — raising here
+                         forces the engine's per-step degradation to the
+                         dense ``paged_attention_ref`` path;
+* ``"serve.logits"``     fired (rid, n_generated) before sampling — a
+                         truthy return marks the slot's logits poisoned, so
+                         the engine skips sampling and retires the request
+                         with ``reason="nan"`` exactly as a genuine
+                         non-finite health tap would;
+* ``"serve.clock"``      fired (sched_step) once per scheduler step — a
+                         float return advances the engine's virtual clock,
+                         simulating a slow-step stall against deadlines
+                         without sleeping in CI;
+* ``"serve.step"``       fired (engine, sched_step) at the top of every
+                         scheduler step — the pool-squeeze closure uses it
+                         to reserve/return freelist pages on schedule.
+
+:meth:`ServeFaultPlan.install` installs one coherent set of closures for
+all four points and guarantees squeeze pages return to the freelist on
+exit, so a drill can never leak pages into the post-run invariant checks.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import List, Optional, Tuple
+
+from .. import injection
+
+KERNEL_POINT = "serve.kernel"
+LOGITS_POINT = "serve.logits"
+CLOCK_POINT = "serve.clock"
+STEP_POINT = "serve.step"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeFaultPlan:
+    """Step/rid-indexed serving fault schedule (all indices 0-based).
+
+    kernel_fail_steps:   decode-step indices whose paged-attention launch
+                         raises (the engine must degrade to the ref path
+                         for exactly that step);
+    prefill_fail_chunks: global prefill-chunk indices that raise likewise;
+    poison_rids:         requests whose logits turn non-finite once they
+                         have generated ``poison_after`` tokens (the engine
+                         must retire them with ``reason='nan'`` instead of
+                         emitting garbage);
+    squeeze_window:      ``[lo, hi)`` scheduler-step window during which
+                         ``squeeze_pages`` pages are held out of the KV
+                         freelist — external pool pressure forcing
+                         preemption/backoff without any misbehaving request;
+    stall_steps:         scheduler steps at which the engine's virtual
+                         clock jumps ``stall_s`` seconds — a slow step that
+                         blows deadlines deterministically.
+    """
+
+    kernel_fail_steps: Tuple[int, ...] = ()
+    prefill_fail_chunks: Tuple[int, ...] = ()
+    poison_rids: Tuple[int, ...] = ()
+    poison_after: int = 1
+    squeeze_window: Optional[Tuple[int, int]] = None
+    squeeze_pages: int = 0
+    stall_steps: Tuple[int, ...] = ()
+    stall_s: float = 0.0
+
+    @contextlib.contextmanager
+    def install(self, engine):
+        """Arm every configured injection against ``engine`` for the scope.
+        Injections are visible afterwards in ``engine.metrics()`` —
+        ``degraded_steps``, ``nan_retired``/``injected_poison``,
+        ``injected_stalls``, and the preemption/backoff counters the
+        squeeze provokes."""
+        held: List[int] = []
+
+        def kernel_hook(kind: str, index: int) -> None:
+            steps = (self.kernel_fail_steps if kind == "decode"
+                     else self.prefill_fail_chunks)
+            if index in steps:
+                raise RuntimeError(
+                    f"injected paged-attention failure ({kind} #{index})")
+
+        def logits_hook(rid: int, n_generated: int) -> bool:
+            return rid in self.poison_rids and n_generated >= self.poison_after
+
+        def clock_hook(sched_step: int) -> float:
+            return self.stall_s if sched_step in self.stall_steps else 0.0
+
+        def step_hook(eng, sched_step: int) -> None:
+            if self.squeeze_window is None or self.squeeze_pages <= 0:
+                return
+            lo, hi = self.squeeze_window
+            if sched_step == lo and not held:
+                held.extend(eng.pool.reserve(self.squeeze_pages))
+            elif sched_step >= hi and held:
+                eng.pool.unreserve(held)
+                held.clear()
+
+        with contextlib.ExitStack() as stack:
+            stack.enter_context(injection.installed(KERNEL_POINT, kernel_hook))
+            stack.enter_context(injection.installed(LOGITS_POINT, logits_hook))
+            stack.enter_context(injection.installed(CLOCK_POINT, clock_hook))
+            stack.enter_context(injection.installed(STEP_POINT, step_hook))
+            try:
+                yield self
+            finally:
+                if held:        # run ended inside the squeeze window
+                    engine.pool.unreserve(held)
+                    held.clear()
+
+
+@contextlib.contextmanager
+def inject_paged_kernel_failure(fail_on: Tuple[int, ...] = (1,)):
+    """Make the nth guarded paged-attention dispatch(es) raise (1-based,
+    decode and prefill counted together) — the serving analogue of
+    :func:`repro.train.faults.inject_kernel_failure`. Yields the shared
+    ``calls``/``failed`` counter dict."""
+    hook, state = injection.call_counter(
+        fail_on, lambda n: RuntimeError(
+            f"injected paged-attention failure (dispatch #{n})"))
+    with injection.installed(KERNEL_POINT, lambda _kind, _idx: hook()):
+        yield state

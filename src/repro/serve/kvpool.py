@@ -23,6 +23,9 @@ from __future__ import annotations
 from typing import Dict, List, Sequence
 
 NULL_PAGE = 0
+# Sentinel owner for pages held out of circulation by reserve() — never a
+# real request id (engine rids count up from 0).
+RESERVED_RID = -1
 
 
 class PoolExhausted(RuntimeError):
@@ -109,6 +112,24 @@ class KVPool:
 
     def owner(self, page: int):
         return self._owner.get(page)
+
+    # ------------------------------------------------------------------
+    # external pressure (chaos drills, future maintenance windows)
+    # ------------------------------------------------------------------
+
+    def reserve(self, n: int) -> List[int]:
+        """Take up to ``n`` pages out of circulation under the sentinel
+        owner ``RESERVED_RID`` — external pool pressure (a chaos-drill
+        squeeze, a future defrag/maintenance window) that the scheduler
+        experiences exactly like real demand. Never raises: reserves what
+        is free and returns the page list for :meth:`unreserve`."""
+        n = min(n, len(self._free))
+        return self.alloc(n, RESERVED_RID) if n > 0 else []
+
+    def unreserve(self, pages: Sequence[int]) -> None:
+        """Return pages taken by :meth:`reserve` to the freelist."""
+        if pages:
+            self.release(pages, RESERVED_RID)
 
 
 def pool_shape(n_pages: int, page_size: int, n_kv_heads: int,

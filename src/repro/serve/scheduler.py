@@ -7,7 +7,8 @@ loop that keeps those fixed shapes busy:
 
   * **admit** — a queued request joins the batch the moment a slot AND
     enough pages for its (recompute-extended) prompt are free; admission is
-    FIFO and never skips the queue head (no starvation).
+    priority-ordered (higher ``priority`` first, FIFO within a level) and
+    never skips the queue head (no starvation within a priority level).
   * **grow** — each decode step lazily allocates one page per slot whose
     next write position crosses a page boundary.
   * **preempt** — when the pool is exhausted mid-decode, the *youngest*
@@ -48,14 +49,44 @@ class Scheduler:
         self._admit_seq: Dict[int, int] = {}        # rid -> admission tick
         self._tick = 0
         self.queue: Deque[int] = deque()
+        self._priority: Dict[int, int] = {}         # rid -> request priority
+        self._submit_seq: Dict[int, int] = {}       # rid -> submission tick
+        self._submit_tick = 0
         self.admitted = 0
         self.retired = 0
         self.preempted = 0
 
     # ------------------------------------------------------------------
 
-    def submit(self, rid: int) -> None:
-        self.queue.append(rid)
+    def submit(self, rid: int, priority: int = 0) -> None:
+        """Enqueue ``rid``. Higher ``priority`` sorts ahead; within a level
+        the queue is FIFO by submission order (and a preempted request keeps
+        its original submission tick, so requeueing puts it back ahead of
+        every same-priority request that arrived after it)."""
+        self._priority[rid] = priority
+        self._submit_seq[rid] = self._submit_tick
+        self._submit_tick += 1
+        self._enqueue(rid)
+
+    def _qkey(self, rid: int) -> Tuple[int, int]:
+        return (-self._priority[rid], self._submit_seq[rid])
+
+    def _enqueue(self, rid: int) -> None:
+        key = self._qkey(rid)
+        idx = len(self.queue)
+        for i, other in enumerate(self.queue):
+            if self._qkey(other) > key:
+                idx = i
+                break
+        self.queue.insert(idx, rid)
+
+    def drop_queued(self, rid: int) -> None:
+        """Remove a queued (never-admitted or preempted) request outright —
+        the deadline-expiry path for requests that never reached a slot.
+        Holds no pages by construction, so nothing to release."""
+        self.queue.remove(rid)
+        self._priority.pop(rid, None)
+        self._submit_seq.pop(rid, None)
 
     def active_slots(self) -> List[Tuple[int, int]]:
         """[(slot, rid)] currently in the batch."""
@@ -72,7 +103,8 @@ class Scheduler:
         prompt plus one decode page of headroom (the headroom avoids the
         admit-then-immediately-preempt churn of a perfectly full pool).
         Returns the slot index, or None if it cannot join yet."""
-        assert self.queue and self.queue[0] == rid, "admission is FIFO"
+        assert self.queue and self.queue[0] == rid, \
+            "admission never skips the queue head"
         slot = self._free_slot()
         if slot is None:
             return None
@@ -129,12 +161,13 @@ class Scheduler:
 
     def preempt(self, slot: int) -> int:
         """Evict the request in ``slot``: release every page, zero the table
-        row, requeue at the *head* (it was admitted before anything still
-        queued). Returns the rid so the engine can reset its decode state."""
+        row, requeue by its *original* submission tick (admitted before
+        anything still queued at its priority, so it lands ahead of those).
+        Returns the rid so the engine can reset its decode state."""
         rid = self.slot_rid[slot]
         assert rid is not None
         self._release(slot, rid)
-        self.queue.appendleft(rid)
+        self._enqueue(rid)
         self.preempted += 1
         return rid
 
@@ -144,6 +177,8 @@ class Scheduler:
         rid = self.slot_rid[slot]
         assert rid is not None
         self._release(slot, rid)
+        self._priority.pop(rid, None)
+        self._submit_seq.pop(rid, None)
         self.retired += 1
         return rid
 

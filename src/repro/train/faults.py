@@ -65,24 +65,17 @@ class FaultPlan:
 def inject_checkpoint_io_failure(fail_on: Tuple[int, ...] = (1,)):
     """Make ``checkpoint.store.save`` raise OSError on its nth call(s)
     within this context (1-based). Yields the counter dict so callers can
-    assert how many writes were attempted."""
+    assert how many writes were attempted. Installed at the shared
+    ``"checkpoint.io"`` registry point (:mod:`repro.injection`), the same
+    mechanism the serve-side drills use."""
+    from .. import injection
     from ..checkpoint import store
 
-    state = {"calls": 0, "failed": 0}
-
-    def hook(step):
-        state["calls"] += 1
-        if state["calls"] in fail_on:
-            state["failed"] += 1
-            raise OSError(f"injected checkpoint IO failure "
-                          f"(write #{state['calls']}, step {step})")
-
-    prev = store._io_fault_hook
-    store._io_fault_hook = hook
-    try:
+    hook, state = injection.call_counter(
+        fail_on, lambda n: OSError(f"injected checkpoint IO failure "
+                                   f"(write #{n})"))
+    with injection.installed(store.IO_FAULT_POINT, hook):
         yield state
-    finally:
-        store._io_fault_hook = prev
 
 
 @contextlib.contextmanager
@@ -91,6 +84,7 @@ def inject_kernel_failure(match: Optional[str] = None):
     contains ``match``) raise inside this context, forcing the per-leaf
     degradation to the jnp reference path. Degradation counters are reset
     on entry; read ``optim.fused.kernel_degraded_leaves()`` before exit."""
+    from .. import injection
     from ..optim import fused
 
     def hook(label):
@@ -98,11 +92,8 @@ def inject_kernel_failure(match: Optional[str] = None):
             raise RuntimeError(f"injected kernel failure at {label}")
 
     fused.reset_kernel_degradation()
-    fused.set_kernel_fault_hook(hook)
-    try:
+    with injection.installed(fused.KERNEL_FAULT_POINT, hook):
         yield
-    finally:
-        fused.set_kernel_fault_hook(None)
 
 
 def tear_checkpoint(ckpt_dir, step: Optional[int] = None) -> int:
